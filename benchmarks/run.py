@@ -1,0 +1,56 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+# 8 host devices for the real-engine measurements (process-local; the
+# dry-run sets its own 512 and tests their own 8 — nothing shared).
+
+"""Benchmark runner — one section per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--full]
+
+Prints ``name,us_per_call,derived`` CSV.  Default mode prints the summary
+rows (per-figure means + the real-JAX engine measurements); ``--full``
+additionally dumps every (collective × nodes × size) emulator point.
+"""
+
+import sys
+
+
+def main() -> None:
+    full = "--full" in sys.argv
+    from benchmarks import figures
+
+    rows: list[tuple] = []
+
+    # Fig 3 — OSU collectives
+    s3 = figures.fig3_summary()
+    for name, sp in s3.items():
+        rows.append((f"fig3_{name}_mean", 0.0, f"mean_speedup={sp:.2f}"))
+    if full:
+        rows += figures.fig3_osu()
+
+    # Fig 5 — fused Allgather_op_Allgather (paper: avg 1.98x)
+    rows.append(("fig5_mean", 0.0,
+                 f"mean_speedup={figures.fig5_mean_speedup():.2f}"
+                 f",paper=1.98"))
+    rows += figures.fig5_emulated() if full else []
+
+    # Fig 4 — GCN (paper: avg 3.4x at 24 nodes)
+    rows.append(("fig4_mean", 0.0,
+                 f"mean_speedup={figures.fig4_mean_speedup():.2f}"
+                 f",paper=3.4"))
+    rows += figures.fig4_gcn()
+
+    # Fig 6 — NPB + miniFE proxies
+    rows += figures.fig6_npb(128)
+    rows += figures.fig6_npb(64)
+
+    # real engine measurements (8 host devices)
+    rows += figures.jax_measurements()
+
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.2f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

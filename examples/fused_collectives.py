@@ -1,0 +1,98 @@
+"""Tour of the ACiS taxonomy on a live mesh (Types 0-4).
+
+    PYTHONPATH=src python examples/fused_collectives.py
+
+Runs every taxonomy level through the engine on 8 host devices and prints
+the wire-bytes accounting next to each (what a switch/link would carry).
+"""
+
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.core import collectives, fused
+from repro.core.lookaside import (distributed_prefix_sum,
+                                  error_feedback_all_reduce,
+                                  powersgd_all_reduce)
+from repro.core.types import ADD, MAX
+from repro.core.wire import BF16
+
+
+def smap(fn, mesh, in_specs, out_specs):
+    return jax.jit(jax.shard_map(fn, mesh=mesh, in_specs=in_specs,
+                                 out_specs=out_specs, check_vma=False))
+
+
+def main():
+    mesh = jax.make_mesh((8,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    rng = np.random.default_rng(0)
+    n, dim = 8, 1 << 16
+    x = jnp.asarray(rng.standard_normal((n, dim)).astype(np.float32))
+    f32_wire = 2 * (n - 1) / n * dim * 4
+
+    # Type 0/1: ring allreduce with a bf16 wire codec
+    f = smap(lambda v: collectives.all_reduce(v[0], "data", ADD,
+                                              codec=BF16)[None],
+             mesh, P("data", None), P("data", None))
+    out = f(x)
+    print(f"Type 0+1  bf16-wire ring allreduce      "
+          f"wire/elt {f32_wire * 0.5 / dim:.2f}B (f32: {f32_wire / dim:.2f}B)"
+          f"  err={float(jnp.max(jnp.abs(out[0] - x.sum(0)))):.3f}")
+
+    # Type 2: max-reduce (works on acis; xla psum can't take custom monoids)
+    f = smap(lambda v: collectives.all_reduce(v[0], "data", MAX)[None],
+             mesh, P("data", None), P("data", None))
+    print(f"Type 2    user monoid (max) allreduce    ✓ "
+          f"match={bool(jnp.allclose(f(x)[0], x.max(0)))}")
+
+    # Type 3: stateful compressed sync with error feedback
+    def ef(v):
+        red, res = error_feedback_all_reduce(
+            v[0], jnp.zeros((dim,), jnp.float32), "data")
+        return red[None], res[None]
+    f = smap(ef, mesh, P("data", None), (P("data", None), P("data", None)))
+    red, res = f(x)
+    print(f"Type 3    int8+EF allreduce              wire/elt ~2.0B  "
+          f"residual|max|={float(jnp.max(jnp.abs(res))):.4f} "
+          f"(look-aside memory)")
+
+    # Type 3: the loop-inside-collective (PowerSGD rank-4)
+    m = jnp.asarray(rng.standard_normal((n, 128, 64)).astype(np.float32))
+    q0 = jnp.asarray(rng.standard_normal((64, 4)).astype(np.float32))
+    def psgd(v, q):
+        red, q2, res = powersgd_all_reduce(
+            v[0], q, jnp.zeros((128, 64), jnp.float32), "data")
+        return red[None]
+    f = smap(psgd, mesh, (P("data", None, None), P(None, None)),
+             P("data", None, None))
+    _ = f(m, q0)
+    print(f"Type 3    PowerSGD rank-4 allreduce      wire "
+          f"{4 * 4 * (128 + 64)}B vs dense {128 * 64 * 4}B "
+          f"({128 * 64 * 4 / (4 * 4 * (128 + 64)):.1f}x less)")
+
+    # Type 4: fused allgather_op_allgather vs two rounds
+    f_fused = smap(lambda v: fused.allgather_op_allgather(v, "data"),
+                   mesh, P("data"), P(None))
+    flat = x.reshape(-1)[:n * 1024]
+    got = f_fused(flat)
+    print(f"Type 4    allgather_op_allgather fused   one gather round "
+          f"(baseline: two)  match="
+          f"{bool(jnp.allclose(got, jnp.cumsum(flat), atol=1e-2))}")
+
+    # Type 4: collective matmul (compute rides the ring)
+    xm = jnp.asarray(rng.standard_normal((64, 32)).astype(np.float32))
+    wm = jnp.asarray(rng.standard_normal((32, 64)).astype(np.float32))
+    f = smap(lambda a, b: fused.allgather_matmul(a, b, "data"),
+             mesh, (P("data", None), P(None, "data")), P(None, "data"))
+    got = f(xm, wm)
+    print(f"Type 4    collective matmul              per-hop MAC hides "
+          f"rotation  match={bool(jnp.allclose(got, xm @ wm, atol=1e-3))}")
+
+
+if __name__ == "__main__":
+    main()

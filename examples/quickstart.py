@@ -1,0 +1,73 @@
+"""Quickstart: the ACiS engine in five minutes.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+1.  Build a SwitchProgram (the paper's fused-collective IR), compile it,
+    and run it on an 8-device mesh — the Fig. 5 fused
+    Allgather_op_Allgather in three lines.
+2.  Run a Type 2 user-defined collective (Welford mean/variance) that a
+    fixed-function switch cannot express.
+3.  Forward a small assigned-architecture model through one step.
+"""
+
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.core import AllGather, Scan, SwitchProgram, compile_program
+from repro.core import collectives
+from repro.core.types import WELFORD
+from repro import configs
+from repro.models import Model
+
+
+def main():
+    mesh = jax.make_mesh((8,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+
+    # -- 1. Type 4 fused collective via the compiler -------------------------
+    prog = SwitchProgram([AllGather(), Scan(), AllGather()], name="fig5")
+    fn = compile_program(prog, mesh, "data", P("data"), P(None))
+    x = jnp.arange(32.0)
+    out = fn(x)
+    print("fused stages:", fn.stages)
+    np.testing.assert_allclose(np.asarray(out), np.cumsum(np.asarray(x)),
+                               rtol=1e-5)
+    print("fig5 fused allgather_op_allgather ✓  (prefix sum in-network)")
+
+    # -- 2. Type 2 user-defined collective ----------------------------------
+    def welford_stats(xl):
+        n0 = jnp.ones_like(xl)
+        n, m, s = collectives.all_reduce((n0, xl, jnp.zeros_like(xl)),
+                                         "data", WELFORD,
+                                         latency_optimal=True)
+        return m, s / n
+
+    f = jax.jit(jax.shard_map(welford_stats, mesh=mesh,
+                              in_specs=P("data"),
+                              out_specs=(P("data"), P("data")),
+                              check_vma=False))
+    data = jnp.asarray(np.random.default_rng(0).standard_normal(64),
+                       jnp.float32)
+    mean, var = f(data)
+    # positionwise stats across the 8 ranks (each holds 8 of 64 elements)
+    ref = np.asarray(data).reshape(8, 8)
+    print(f"welford in-network: mean={float(mean[0]):+.4f} "
+          f"var={float(var[0]):.4f} "
+          f"(numpy: {ref.mean(0)[0]:+.4f} {ref.var(0)[0]:.4f})")
+
+    # -- 3. one of the assigned architectures, reduced config ----------------
+    cfg = configs.get_smoke("qwen3-8b")
+    model = Model(cfg)
+    params = model.init(jax.random.key(0))
+    toks = jnp.ones((2, 16), jnp.int32)
+    hidden, _ = jax.jit(lambda p, t: model.forward(p, t))(params, toks)
+    print(f"qwen3-8b (smoke) forward: hidden {hidden.shape} ✓")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+"""repro.checkpoint — atomic sharded checkpoints with elastic restore."""

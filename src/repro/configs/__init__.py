@@ -1,0 +1,59 @@
+"""Architecture registry: the 10 assigned configs (+ smoke reductions).
+
+``get(name)`` returns the full published config; ``get_smoke(name)`` a
+reduced same-family config for CPU tests (small widths/depths, few experts,
+tiny vocab).  The full configs are only ever lowered via ShapeDtypeStruct
+(launch/dryrun.py) — never materialized on host.
+"""
+
+from __future__ import annotations
+
+import importlib
+
+from repro.models.config import ModelConfig
+
+ARCHS = [
+    "nemotron_4_15b",
+    "granite_8b",
+    "qwen3_8b",
+    "granite_3_8b",
+    "qwen2_moe_a2_7b",
+    "deepseek_v2_236b",
+    "recurrentgemma_9b",
+    "rwkv6_1_6b",
+    "whisper_small",
+    "llama_3_2_vision_11b",
+]
+
+# canonical dashed ids from the assignment -> module names
+ALIASES = {
+    "nemotron-4-15b": "nemotron_4_15b",
+    "granite-8b": "granite_8b",
+    "qwen3-8b": "qwen3_8b",
+    "granite-3-8b": "granite_3_8b",
+    "qwen2-moe-a2.7b": "qwen2_moe_a2_7b",
+    "deepseek-v2-236b": "deepseek_v2_236b",
+    "recurrentgemma-9b": "recurrentgemma_9b",
+    "rwkv6-1.6b": "rwkv6_1_6b",
+    "whisper-small": "whisper_small",
+    "llama-3.2-vision-11b": "llama_3_2_vision_11b",
+    # paper-native example model (quickstart / e2e driver)
+    "acis-100m": "acis_100m",
+}
+
+
+def _module(name: str):
+    mod = ALIASES.get(name, name).replace("-", "_").replace(".", "_")
+    return importlib.import_module(f"repro.configs.{mod}")
+
+
+def get(name: str) -> ModelConfig:
+    return _module(name).CONFIG
+
+
+def get_smoke(name: str) -> ModelConfig:
+    return _module(name).SMOKE
+
+
+def names() -> list[str]:
+    return [k for k in ALIASES if k != "acis-100m"]

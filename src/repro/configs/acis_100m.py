@@ -1,0 +1,20 @@
+"""acis-100m — the ~100M-param dense model used by the end-to-end training
+example (examples/train_e2e.py) and the quickstart.  Not an assigned arch;
+it is the vehicle for demonstrating the paper's gradient-sync collectives
+at laptop scale."""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="acis-100m", family="dense",
+    n_layers=12, d_model=768, n_heads=12, n_kv_heads=4,
+    d_ff=2048, vocab=32000, activation="swiglu", max_seq=2048,
+    remat="none",
+)
+
+SMOKE = ModelConfig(
+    name="acis-100m-smoke", family="dense",
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+    d_ff=128, vocab=256, activation="swiglu", max_seq=128,
+    remat="none",
+)

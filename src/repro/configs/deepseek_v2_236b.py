@@ -1,0 +1,31 @@
+"""deepseek-v2-236b — MLA (kv_lora 512) + MoE 160 routed top-6, 2 shared.
+[arXiv:2405.04434; hf]  Optimizer: adafactor (memory: 236B params on
+16 GB/chip v5e forces a factored second moment; see DESIGN.md §6)."""
+
+from repro.models.config import MLAConfig, ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="deepseek-v2-236b", family="moe",
+    n_layers=60, d_model=5120, n_heads=128, n_kv_heads=128,
+    d_ff=1536, vocab=102400, activation="swiglu",
+    max_seq=32768, optimizer="adafactor",
+    moe=MoEConfig(n_experts=160, top_k=6, n_shared=2,
+                  d_ff_expert=1536, d_ff_shared=3072,
+                  first_dense_layers=1, d_ff_dense=12288),
+    mla=MLAConfig(kv_lora=512, q_lora=1536, rope_head_dim=64,
+                  nope_head_dim=128, v_head_dim=128),
+)
+
+SMOKE = ModelConfig(
+    name="deepseek-v2-236b-smoke", family="moe",
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=4,
+    d_ff=96, vocab=512, activation="swiglu", max_seq=256,
+    optimizer="adafactor",
+    moe=MoEConfig(n_experts=4, top_k=2, n_shared=1,
+                  d_ff_expert=64, d_ff_shared=64,
+                  first_dense_layers=1, d_ff_dense=128,
+                  capacity_factor=4.0),
+    mla=MLAConfig(kv_lora=32, q_lora=48, rope_head_dim=8,
+                  nope_head_dim=16, v_head_dim=16),
+    remat="none",
+)

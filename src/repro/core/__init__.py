@@ -1,0 +1,33 @@
+"""repro.core — the ACiS in-network computing engine (paper's contribution).
+
+Layering:
+  types       taxonomy + monoids (Type 1/2 algebra)
+  ring        ppermute schedules with per-hop compute (the "switch fabric")
+  wire        on-wire codecs (Type 0 streams, Type 2 wire dtypes)
+  collectives Type 1/2 public collectives, backend = xla | acis
+  compression top-k / int8 / low-rank wire datatypes
+  lookaside   Type 3 stateful ops (error feedback, PowerSGD, scan, GCN)
+  fused       Type 4 fused collectives (+ collective matmul)
+  program     SwitchProgram IR (the S2S translator front-end analogue)
+  compiler    fusion compiler emitting one shard_map program (CGRA binary)
+  topology    hierarchical multi-pod schedules + straggler masking
+  switchops   SPU instruction registry (jnp refs + Pallas kernels)
+  api         CollectiveEngine — the MPI-transparency layer
+"""
+
+from repro.core.types import (ADD, MAX, MIN, PROD, AcisType, Monoid,
+                              TYPE1_MONOIDS, tree_monoid)
+from repro.core.api import (BACKENDS, CollectiveConfig, CollectiveEngine,
+                            make_engine)
+from repro.core.program import (AllGather, AllToAll, Bcast, Map, Node,
+                                Reduce, ReduceScatter, Scan, SwitchProgram,
+                                Wire)
+from repro.core.compiler import compile_program, compile_rank_local
+
+__all__ = [
+    "ADD", "MAX", "MIN", "PROD", "AcisType", "Monoid", "TYPE1_MONOIDS",
+    "tree_monoid", "BACKENDS", "CollectiveConfig", "CollectiveEngine",
+    "make_engine", "AllGather", "AllToAll", "Bcast", "Map", "Node", "Reduce",
+    "ReduceScatter", "Scan", "SwitchProgram", "Wire", "compile_program",
+    "compile_rank_local",
+]

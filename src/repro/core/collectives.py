@@ -1,0 +1,182 @@
+"""ACiS Type 1 & 2 collectives — public rank-local API with backend selection.
+
+Two backends:
+  * ``"xla"``  — XLA's built-in collectives (`lax.psum` etc.).  This is the
+    *non-ACiS baseline*: the network is a passive conduit, compute stays at
+    the endpoints, and the op/dtype set is whatever XLA reduction supports.
+  * ``"acis"`` — explicit ring/log-step schedules from :mod:`repro.core.ring`
+    with per-hop compute: arbitrary monoids (Type 2 user-defined ops),
+    arbitrary wire codecs (Type 0/2 wire dtypes), and hop-fused maps
+    (substrate for Type 4).
+
+Everything here is rank-local (call inside `jax.shard_map`).  The
+whole-array wrappers used by training live in :mod:`repro.core.api`.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import ring
+from repro.core.types import ADD, MAX, MIN, Monoid
+from repro.core.wire import IDENTITY, WireCodec
+
+PyTree = Any
+
+_XLA_REDUCERS = {"add": lax.psum, "max": lax.pmax, "min": lax.pmin}
+
+
+def all_reduce(
+    x: jax.Array,
+    axis_name: str,
+    monoid: Monoid = ADD,
+    *,
+    backend: str = "acis",
+    codec: WireCodec = IDENTITY,
+    latency_optimal: bool = False,
+) -> jax.Array:
+    """All-reduce ``x`` over ``axis_name`` with an arbitrary monoid & codec.
+
+    Type 1 when ``monoid`` ∈ {add, max, min} and ``codec`` is identity;
+    Type 2 otherwise.  The ``xla`` backend only supports the Type 1 subset —
+    requesting more on it raises, which is precisely the limitation of
+    fixed-function switch collectives the paper targets.
+    """
+    if backend == "xla":
+        if monoid.name not in _XLA_REDUCERS:
+            raise ValueError(
+                f"xla backend supports only {sorted(_XLA_REDUCERS)} "
+                f"(the Type 1 fixed-op limitation); got {monoid.name!r}. "
+                "Use backend='acis' for user-defined (Type 2) ops.")
+        if codec is not IDENTITY:
+            raise ValueError("xla backend cannot apply wire codecs in-flight")
+        return _XLA_REDUCERS[monoid.name](x, axis_name)
+
+    if codec is IDENTITY:
+        return ring.ring_all_reduce(x, axis_name, monoid,
+                                    latency_optimal=latency_optimal)
+
+    # Wire-coded path: encode once, combine in the encoded domain per hop
+    # (the switch never sees the decoded stream), decode once at the end.
+    if codec.combine_encoded is not None:
+        enc = codec.encode(x)
+        out = _tree_all_reduce_encoded(enc, axis_name, codec.combine_encoded)
+        return codec.decode(out)
+    # Fallback: cast-style codec (bf16/fp8) — encode before hops, decode after.
+    enc = codec.encode(x)
+    red = ring.ring_all_reduce(enc, axis_name, monoid,
+                               latency_optimal=latency_optimal)
+    return codec.decode(red).astype(x.dtype)
+
+
+def _tree_all_reduce_encoded(enc: PyTree, axis_name: str,
+                             combine: Callable[[PyTree, PyTree], PyTree]) -> PyTree:
+    """RS∘AG ring all-reduce over an encoded pytree payload.
+
+    The reduce-scatter form matters for *lossy* encoded-domain combines
+    (quantized): each chunk is folded along a chunk-determined rank walk, so
+    every rank decodes the *identical* result after the all-gather —
+    a rank-relative fold order would let replicas diverge.  It is also
+    bandwidth-optimal: 2(n-1)/n · encoded-size on the wire.
+
+    Requires all leaves to share their leading ("block") dimension.
+    """
+    n = lax.axis_size(axis_name)
+    if n == 1:
+        return enc
+    i = lax.axis_index(axis_name)
+    leading = {leaf.shape[0] for leaf in jax.tree.leaves(enc)}
+    if len(leading) != 1:
+        raise ValueError(f"encoded leaves must share leading dim, got {leading}")
+    (nblocks,) = leading
+    pad = (-nblocks) % n
+
+    def pad_leaf(leaf):
+        if not pad:
+            return leaf
+        fill = jnp.zeros((pad,) + leaf.shape[1:], leaf.dtype)
+        return jnp.concatenate([leaf, fill])
+
+    padded = jax.tree.map(pad_leaf, enc)
+    chunked = jax.tree.map(
+        lambda l: l.reshape((n, l.shape[0] // n) + l.shape[1:]), padded)
+    perm = [(j, (j + 1) % n) for j in range(n)]
+
+    def chunk_at(idx):
+        return jax.tree.map(
+            lambda l: lax.dynamic_index_in_dim(l, idx, 0, keepdims=False),
+            chunked)
+
+    buf = chunk_at((i - 1) % n)
+
+    def body(buf, s):
+        incoming = ring.ppermute_tree(buf, axis_name, perm)
+        local = chunk_at((i - 2 - s) % n)
+        return combine(incoming, local), ()
+
+    buf, _ = lax.scan(body, buf, jnp.arange(n - 1))
+    gathered = jax.tree.map(lambda l: ring.ring_all_gather(l, axis_name), buf)
+    return jax.tree.map(lambda l: l[:nblocks], gathered)
+
+
+def reduce_scatter(
+    x: jax.Array,
+    axis_name: str,
+    monoid: Monoid = ADD,
+    *,
+    backend: str = "acis",
+    hop_combine: Optional[Callable] = None,
+) -> jax.Array:
+    if backend == "xla":
+        if monoid.name != "add":
+            raise ValueError("xla psum_scatter is add-only (Type 1 limitation)")
+        return lax.psum_scatter(x, axis_name, tiled=True)
+    return ring.ring_reduce_scatter(x, axis_name, monoid, hop_combine=hop_combine)
+
+
+def all_gather(
+    x: jax.Array,
+    axis_name: str,
+    *,
+    backend: str = "acis",
+    hop_map: Optional[Callable] = None,
+) -> jax.Array:
+    if backend == "xla":
+        if hop_map is not None:
+            raise ValueError("xla backend cannot fuse maps into the gather")
+        return lax.all_gather(x, axis_name, tiled=True)
+    return ring.ring_all_gather(x, axis_name, hop_map=hop_map)
+
+
+def broadcast(x: jax.Array, axis_name: str, root: int = 0, *,
+              backend: str = "acis", tree: bool = True) -> jax.Array:
+    if backend == "xla":
+        # XLA has no direct bcast primitive at this level; emulate by
+        # masking + psum (what a fixed-function endpoint stack would do).
+        i = lax.axis_index(axis_name)
+        return lax.psum(jnp.where(i == root, x, jnp.zeros_like(x)), axis_name)
+    if tree:
+        return ring.tree_broadcast(x, axis_name, root)
+    return ring.ring_broadcast(x, axis_name, root)
+
+
+def all_to_all(x: jax.Array, axis_name: str, *, backend: str = "acis") -> jax.Array:
+    """[n*chunk, ...] -> [n*chunk, ...] with chunk j delivered to rank j."""
+    if backend == "xla":
+        n = lax.axis_size(axis_name)
+        xs = x.reshape((n, x.shape[0] // n) + x.shape[1:])
+        out = lax.all_to_all(xs, axis_name, split_axis=0, concat_axis=0,
+                             tiled=False)
+        return out.reshape(x.shape)
+    return ring.ring_all_to_all(x, axis_name)
+
+
+def prefix_scan(x: PyTree, axis_name: str, monoid: Monoid = ADD, *,
+                exclusive: bool = False) -> PyTree:
+    """Cross-rank prefix scan (Type 3 look-aside carry). acis-only: XLA has
+    no scan collective — this op *only exists* because the network computes."""
+    return ring.rank_prefix_scan(x, axis_name, monoid, exclusive=exclusive)

@@ -1,0 +1,214 @@
+"""ACiS Type 4 — fused collectives and collective∘map fusion.
+
+The paper's Type 4 builds new operations by fusing chains of collectives
+("recirculate interface") or sandwiching map computation between them (the
+CGRA program).  The value: intermediate communications are bypassed and the
+sandwiched compute happens *in the network*, not at the endpoints.
+
+Implemented fusions (each with its unfused endpoint-compute baseline so
+benchmarks/tests can compare like-for-like):
+
+  * allgather_op_allgather   — paper Fig. 5 (op = prefix sum, FEM pattern)
+  * fused_allreduce_alltoall — NAS IS pattern (paper §II Type 4 example)
+  * map_reduce_scatter / allgather_map — MapReduce pattern
+  * allgather_matmul / matmul_reduce_scatter — "collective matmul":
+    the map is a matmul shard and each hop's compute hides the next hop's
+    communication (the production-relevant Type 4 for tensor parallelism).
+
+All functions are rank-local (inside shard_map).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import ring
+from repro.core.types import ADD, Monoid
+from repro.core import collectives
+from repro.core.lookaside import distributed_prefix_sum
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# Fig. 5: Allgather_op_Allgather  (op = prefix sum)
+# ---------------------------------------------------------------------------
+
+def allgather_op_allgather_baseline(x: jax.Array, axis_name: str) -> jax.Array:
+    """Endpoint-compute baseline (the MPI4py pattern of paper Fig. 5):
+    allgather the blocks, compute the op at every endpoint, allgather the
+    (locally relevant slice of the) result again.  Two full collective
+    rounds + redundant endpoint compute."""
+    n = lax.axis_size(axis_name)
+    i = lax.axis_index(axis_name)
+    gathered = collectives.all_gather(x, axis_name, backend="xla")
+    scanned = jnp.cumsum(gathered, axis=0)
+    # second round: each rank re-shares "its" slice of the result —
+    # the redundant communication the fusion deletes.
+    mine = lax.dynamic_slice_in_dim(scanned, i * x.shape[0], x.shape[0], 0)
+    return collectives.all_gather(mine, axis_name, backend="xla")
+
+
+def allgather_op_allgather(x: jax.Array, axis_name: str) -> jax.Array:
+    """Fused version: the prefix-sum carry is computed *in the network*
+    (log-step rank scan) and only the finished blocks are gathered — one
+    gather round instead of two, no redundant endpoint compute."""
+    scanned_local = distributed_prefix_sum(x, axis_name)
+    return ring.ring_all_gather(scanned_local, axis_name)
+
+
+# ---------------------------------------------------------------------------
+# NAS IS: AllReduce (histogram) + AlltoAll (keys), fused on one schedule
+# ---------------------------------------------------------------------------
+
+def allreduce_alltoall_baseline(hist: jax.Array, keys: jax.Array,
+                                axis_name: str) -> tuple[jax.Array, jax.Array]:
+    """Sequential baseline: finish the allreduce, then start the alltoall."""
+    h = collectives.all_reduce(hist, axis_name, ADD, backend="xla")
+    k = collectives.all_to_all(keys, axis_name, backend="xla")
+    return h, k
+
+
+def fused_allreduce_alltoall(hist: jax.Array, keys: jax.Array,
+                             axis_name: str) -> tuple[jax.Array, jax.Array]:
+    """Fused schedule: the histogram reduction hops ride the same loop as
+    the key-chunk exchange, so the (small) histogram combine hides behind
+    the (large) key transfer at every hop — one traversal of the ring does
+    both jobs (the paper's IS observation: "ACiS can take advantage of
+    communication-computation overlap and in-network data reduction")."""
+    n = lax.axis_size(axis_name)
+    if n == 1:
+        return hist, keys
+    i = lax.axis_index(axis_name)
+    chunk = keys.shape[0] // n
+    ks = keys.reshape((n, chunk) + keys.shape[1:])
+    out = jnp.zeros_like(ks)
+    out = lax.dynamic_update_index_in_dim(
+        out, lax.dynamic_index_in_dim(ks, i, 0, keepdims=False), i, axis=0)
+
+    hacc, hmsg = hist, hist
+    perm1 = [(j, (j + 1) % n) for j in range(n)]
+    for s in range(1, n):
+        perm_s = [(j, (j + s) % n) for j in range(n)]
+        send = lax.dynamic_index_in_dim(ks, (i + s) % n, 0, keepdims=False)
+        recv = lax.ppermute(send, axis_name, perm_s)          # key chunk hop
+        out = lax.dynamic_update_index_in_dim(out, recv, (i - s) % n, axis=0)
+        # histogram combine hop rides the same loop iteration (n-1 hops
+        # total): rotate original contributions, fold into accumulator.
+        hmsg = lax.ppermute(hmsg, axis_name, perm1)
+        hacc = hacc + hmsg
+    # after n-1 latency-ring hops every rank has the full histogram sum
+    return hacc, out.reshape(keys.shape)
+
+
+# ---------------------------------------------------------------------------
+# MapReduce fusions
+# ---------------------------------------------------------------------------
+
+def map_reduce_scatter(x: jax.Array, axis_name: str,
+                       map_fn: Callable[[jax.Array], jax.Array],
+                       monoid: Monoid = ADD) -> jax.Array:
+    """map ∘ reduce-scatter in one schedule: the map is applied to each
+    chunk right before it enters the ring (no full-size intermediate)."""
+    n = lax.axis_size(axis_name)
+    mapped = map_fn(x)  # chunk-wise map fused by XLA into the hop loop
+    return ring.ring_reduce_scatter(mapped, axis_name, monoid)
+
+
+def allgather_map(x: jax.Array, axis_name: str,
+                  map_fn: Callable[[jax.Array], jax.Array]) -> jax.Array:
+    """all-gather ∘ map with the map applied in-flight (once per chunk, at
+    the forwarding hop) instead of n times at every endpoint."""
+    return ring.ring_all_gather(x, axis_name, hop_map=map_fn)
+
+
+# ---------------------------------------------------------------------------
+# Collective matmul (overlapped TP matmuls — the production Type 4)
+# ---------------------------------------------------------------------------
+
+def allgather_matmul(x_local: jax.Array, w_local: jax.Array,
+                     axis_name: str) -> jax.Array:
+    """y = allgather(x) @ w_local, overlapped.
+
+    x_local: [m_loc, k] (row shard), w_local: [k, n_loc] (col shard of W).
+    Result: [m_loc * n_ranks, n_loc].  Each hop's matmul hides the next
+    block's rotation — the matmul happens "in the network".
+    """
+    n = lax.axis_size(axis_name)
+    i = lax.axis_index(axis_name)
+    m_loc = x_local.shape[0]
+    out = jnp.zeros((n * m_loc, w_local.shape[1]), x_local.dtype)
+    perm = [(j, (j + 1) % n) for j in range(n)]
+
+    def body(carry, s):
+        out, blk = carry
+        owner = (i - s) % n
+        y = blk @ w_local                     # compute current block...
+        blk = lax.ppermute(blk, axis_name, perm)   # ...while rotating
+        out = lax.dynamic_update_slice_in_dim(out, y, owner * m_loc, axis=0)
+        return (out, blk), ()
+
+    (out, last), _ = lax.scan(body, (out, x_local), jnp.arange(n - 1))
+    owner = (i - (n - 1)) % n
+    out = lax.dynamic_update_slice_in_dim(
+        out, last @ w_local, owner * m_loc, axis=0)
+    return out
+
+
+def matmul_reduce_scatter(x_local: jax.Array, w_local: jax.Array,
+                          axis_name: str) -> jax.Array:
+    """y = reduce_scatter(x_local @ w_local), overlapped.
+
+    x_local: [m, k_loc], w_local: [k_loc, N] with N divisible by n_ranks.
+    Result: [m, N / n_ranks] — rank i owns column block i, fully reduced.
+    The partial matmul for each column block is computed just-in-time as
+    the accumulating buffer arrives (compute hides communication).
+    """
+    n = lax.axis_size(axis_name)
+    i = lax.axis_index(axis_name)
+    if n == 1:
+        return x_local @ w_local
+    nc = w_local.shape[1] // n
+    perm = [(j, (j + 1) % n) for j in range(n)]
+
+    def partial(c):
+        wcols = lax.dynamic_slice_in_dim(w_local, c * nc, nc, axis=1)
+        return x_local @ wcols
+
+    buf = partial((i - 1) % n)
+
+    def body(buf, s):
+        incoming = lax.ppermute(buf, axis_name, perm)
+        c = (i - 2 - s) % n
+        return incoming + partial(c), ()
+
+    buf, _ = lax.scan(body, buf, jnp.arange(n - 1))
+    return buf
+
+
+def allgather_matmul_baseline(x_local: jax.Array, w_local: jax.Array,
+                              axis_name: str) -> jax.Array:
+    x = collectives.all_gather(x_local, axis_name, backend="xla")
+    return x @ w_local
+
+
+def matmul_reduce_scatter_baseline(x_local: jax.Array, w_local: jax.Array,
+                                   axis_name: str) -> jax.Array:
+    """Unfused baseline: full partial matmul, then a separate reduce-scatter."""
+    y = x_local @ w_local
+    return _rs_cols(y, axis_name)
+
+
+def _rs_cols(y: jax.Array, axis_name: str) -> jax.Array:
+    """reduce-scatter over column blocks via psum_scatter."""
+    n = lax.axis_size(axis_name)
+    m, N = y.shape
+    nc = N // n
+    # [m, n, nc] -> scatter over axis 'n'
+    yb = y.reshape(m, n, nc).swapaxes(0, 1)          # [n, m, nc]
+    out = lax.psum_scatter(yb, axis_name, tiled=False)
+    return out.reshape(m, nc)

@@ -1,0 +1,255 @@
+"""ACiS Type 3 — look-aside operators: state + loops + off-chip memory.
+
+The paper's Type 3 gives the data plane direct access to off-chip memory so
+operations can be *stateful* and contain *loops*.  On TPU the analogue is
+HBM-resident state threaded through the collective:
+
+  * :func:`error_feedback_all_reduce` — compressed gradient sync whose
+    residual memory persists across steps (state lives "beside" the op).
+  * :func:`powersgd_all_reduce` — an iterative low-rank loop *inside* the
+    collective (power iteration), with the Q factor as persistent state.
+  * :func:`distributed_prefix_sum` — the scan carry walks the network.
+  * :func:`gcn_aggregate` — the paper's own Type 3 case study (FLASH, ICS'23):
+    neighbor aggregation where remote feature blocks stream past a
+    HBM-resident accumulator, hop by hop (never materializing the full
+    feature matrix — the in-network memory win).
+
+All functions are rank-local (inside shard_map).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import ring
+from repro.core.compression import TopK, sparse_all_reduce_payloads
+from repro.core.types import ADD, MAX as MAX_MONOID, Monoid
+from repro.core.wire import WireCodec, int8_codec
+from repro.core import collectives
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# Shared-scale integer quantized all-reduce (SwitchML/SHArP-style).
+#
+# Per-hop *re*-quantization (wire.int8_codec) loses precision that no rank's
+# error-feedback memory can account for.  The in-switch aggregators that ship
+# (SwitchML, SHArP streaming-aggregation) instead agree on a scale up front
+# and accumulate integers exactly.  We do the same: a tiny max-allreduce
+# fixes a shared per-block scale, contributions are int8-granular, and the
+# ring carries int16 partials (exact for axis sizes <= 256).  The only loss
+# is each rank's own initial rounding — exactly what EF captures.
+# ---------------------------------------------------------------------------
+
+QBLOCK = 256
+
+
+def shared_scale_quant_all_reduce(
+    x: jax.Array, axis_name: str, *, block: int = QBLOCK,
+) -> tuple[jax.Array, jax.Array]:
+    """Returns (sum_over_ranks(round(x)), delivered_self) — both decoded."""
+    flat = x.reshape(-1).astype(jnp.float32)
+    size = flat.shape[0]
+    pad = (-size) % block
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros((pad,), jnp.float32)])
+    blocks = flat.reshape(-1, block)
+    absmax = jnp.max(jnp.abs(blocks), axis=1)
+    # shared scale: small latency-optimal max-allreduce (1/block of payload)
+    absmax = collectives.all_reduce(absmax, axis_name, MAX_MONOID,
+                                    latency_optimal=True)
+    scale = jnp.where(absmax > 0, absmax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(blocks / scale[:, None]), -127, 127).astype(jnp.int16)
+    delivered_self = (q.astype(jnp.float32) * scale[:, None]).reshape(-1)[:size]
+
+    # exact integer ring RS∘AG: combine = int16 add (no loss at any hop)
+    qsum = collectives._tree_all_reduce_encoded(
+        (q,), axis_name, lambda a, b: (a[0] + b[0],))[0]
+    total = (qsum.astype(jnp.float32) * scale[:, None]).reshape(-1)[:size]
+    return total.reshape(x.shape), delivered_self.reshape(x.shape)
+
+
+def error_feedback_all_reduce(
+    x: jax.Array,
+    residual: jax.Array,
+    axis_name: str,
+    *,
+    compressor: str = "int8",
+    topk_ratio: float = 0.01,
+    mean: bool = True,
+) -> tuple[jax.Array, jax.Array]:
+    """All-reduce ``x`` through a lossy wire format with error feedback.
+
+    Returns ``(reduced, new_residual)``.  The residual is the Type 3
+    look-aside memory: it must be carried by the caller across invocations
+    (the training loop stores it next to the optimizer state).
+
+    Compressors:
+      * ``int8``          — shared-scale exact-integer accumulation (default;
+                            EF identity exact; wire ≈ 0.5x of f32)
+      * ``int8_hopquant`` — per-hop dequant-add-requant (wire ≈ 0.25x; adds
+                            bounded, EF-invisible hop noise)
+      * ``topk``          — sparse (idx, val) payloads, in-network
+                            scatter-accumulate
+    """
+    n = lax.axis_size(axis_name)
+    target = x + residual.astype(x.dtype)
+
+    if compressor == "int8":
+        total, delivered = shared_scale_quant_all_reduce(
+            target.astype(jnp.float32), axis_name)
+        reduced = total.astype(x.dtype)
+        new_residual = (target.astype(jnp.float32) - delivered).astype(
+            residual.dtype)
+    elif compressor == "int8_hopquant":
+        codec = int8_codec()
+        reduced = collectives.all_reduce(
+            target.astype(jnp.float32), axis_name, ADD, codec=codec)
+        reduced = reduced.astype(x.dtype)
+        # what the wire actually delivered for *our* contribution:
+        delivered = codec.decode(codec.encode(target.astype(jnp.float32)))
+        new_residual = (target.astype(jnp.float32) - delivered).astype(residual.dtype)
+    elif compressor == "topk":
+        flat = target.reshape(-1)
+        k = max(1, int(flat.shape[0] * topk_ratio))
+        tk = TopK(k)
+        idx, vals = tk.compress(flat)
+        reduced = sparse_all_reduce_payloads(
+            idx, vals, axis_name, flat.shape[0], dtype=jnp.float32)
+        reduced = reduced.reshape(x.shape).astype(x.dtype)
+        delivered = tk.decompress((idx, vals), flat.shape, jnp.float32)
+        new_residual = (flat.astype(jnp.float32) - delivered).reshape(
+            x.shape).astype(residual.dtype)
+    else:
+        raise ValueError(f"unknown compressor {compressor!r}")
+
+    if mean:
+        reduced = reduced / n
+    return reduced, new_residual
+
+
+def init_residual(params: PyTree, dtype=jnp.float32) -> PyTree:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, dtype), params)
+
+
+# ---------------------------------------------------------------------------
+# PowerSGD — the loop lives inside the collective (Type 3 "can have loops")
+# ---------------------------------------------------------------------------
+
+def powersgd_all_reduce(
+    m: jax.Array,
+    q: jax.Array,
+    residual: jax.Array,
+    axis_name: str,
+    *,
+    mean: bool = True,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Rank-r all-reduce of a matrix ``m`` [rows, cols] via power iteration.
+
+    ``q`` [cols, r] is the persistent warm-start factor (look-aside state),
+    ``residual`` the error-feedback memory.  Two small all-reduces of the
+    factors replace one big all-reduce of the matrix:
+    wire bytes r·(rows+cols) vs rows·cols.
+
+    Returns (reduced_mean, new_q, new_residual).
+    """
+    from repro.core.compression import orthonormalize
+
+    n = lax.axis_size(axis_name)
+    target = (m + residual.astype(m.dtype)).astype(jnp.float32)
+
+    # -- the in-collective loop (power iteration) --
+    p = target @ q                                     # [rows, r]
+    p = collectives.all_reduce(p, axis_name, ADD)      # small wire
+    p = orthonormalize(p)
+    new_q = target.T @ p                               # [cols, r]
+    new_q = collectives.all_reduce(new_q, axis_name, ADD)
+    approx = p @ new_q.T                               # decoded mean*n
+    reduced = approx / n if mean else approx
+
+    delivered_local = p @ (target.T @ p).T             # our contribution as seen
+    new_residual = (target - delivered_local).astype(residual.dtype)
+    return reduced.astype(m.dtype), new_q, new_residual
+
+
+def powersgd_init(shape, rank: int, key: jax.Array) -> jax.Array:
+    cols = shape[1]
+    return jax.random.normal(key, (cols, rank), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Distributed prefix sum (the FEM op of paper Fig. 5)
+# ---------------------------------------------------------------------------
+
+def distributed_prefix_sum(x: jax.Array, axis_name: str, *,
+                           exclusive: bool = False) -> jax.Array:
+    """Global prefix sum over the rank-major concatenation of local blocks.
+
+    Local inclusive scan + cross-rank exclusive scan of block totals (the
+    carry walks the network log-step).  Sub-block of the fused
+    allgather_op_allgather (core/fused.py).
+    """
+    local = jnp.cumsum(x, axis=0)
+    total = local[-1] if x.shape[0] else jnp.zeros(x.shape[1:], x.dtype)
+    carry = ring.rank_prefix_scan(total, axis_name, ADD, exclusive=True)
+    inc = local + carry
+    if not exclusive:
+        return inc
+    shifted = jnp.concatenate([carry[None], inc[:-1]], axis=0) if x.ndim == 1 \
+        else jnp.concatenate([carry[None], inc[:-1]], axis=0)
+    return shifted
+
+
+# ---------------------------------------------------------------------------
+# GCN neighbor aggregation (paper Fig. 4 case study)
+# ---------------------------------------------------------------------------
+
+def gcn_aggregate(
+    adj_blocks: jax.Array,
+    x_local: jax.Array,
+    axis_name: str,
+    *,
+    in_network: bool = True,
+    backend: str = "acis",
+) -> jax.Array:
+    """Aggregate neighbor features  out = Â @ X  with X row-sharded.
+
+    ``adj_blocks`` [n_ranks, rows_local, cols_block] — the local rows of the
+    (normalized) adjacency, blocked by owner of the corresponding X rows.
+    ``x_local`` [cols_block, d] — this rank's feature rows.
+
+    in_network=True: ring-rotate the feature block; each hop performs a
+    block-MAC against the HBM-resident accumulator (look-aside memory) —
+    full X is never materialized, and compute overlaps the rotation.
+    in_network=False (baseline): all-gather X, then one big SpMM — the
+    endpoint-compute pattern of a passive network.
+    """
+    n = lax.axis_size(axis_name)
+    i = lax.axis_index(axis_name)
+
+    if not in_network:
+        full_x = collectives.all_gather(x_local, axis_name, backend=backend)
+        full_x = full_x.reshape(n, x_local.shape[0], x_local.shape[1])
+        # out = sum_b adj_blocks[b] @ full_x[b]
+        return jnp.einsum("brc,bcd->rd", adj_blocks, full_x)
+
+    perm = [(j, (j + 1) % n) for j in range(n)]
+    acc = jnp.zeros((adj_blocks.shape[1], x_local.shape[1]), x_local.dtype)
+
+    def body(carry, s):
+        acc, blk = carry
+        owner = (i - s) % n          # whose X block we currently hold
+        a = lax.dynamic_index_in_dim(adj_blocks, owner, axis=0, keepdims=False)
+        acc = acc + a @ blk          # per-hop MAC against look-aside memory
+        blk = lax.ppermute(blk, axis_name, perm)
+        return (acc, blk), ()
+
+    (acc, last), _ = lax.scan(body, (acc, x_local), jnp.arange(n - 1))
+    owner = (i - (n - 1)) % n
+    a = lax.dynamic_index_in_dim(adj_blocks, owner, axis=0, keepdims=False)
+    return acc + a @ last

@@ -1,0 +1,122 @@
+"""SwitchProgram IR — the ACiS software-support analogue.
+
+The paper's toolchain (§VI.B): parse MPI source → LLVM IR → dataflow graph →
+schedule/register-allocate onto the CGRA → binary carried as an argument of
+the fused-collective routine.
+
+Here the user builds a small dataflow graph of collective and map nodes; the
+compiler (core/compiler.py) legalizes it, applies fusion rules, and emits a
+single JAX callable executing under one `shard_map` — the "CGRA binary" is
+the jitted HLO.  This is the mechanism by which arbitrary *chains* of
+collectives and maps become one in-network program (Type 4) rather than a
+sequence of endpoint round-trips.
+
+Node vocabulary (the "SPU instruction set" at graph granularity):
+  MAP(fn)              — elementwise/user map, fusable into adjacent hops
+  REDUCE(monoid)       — all-reduce
+  REDUCE_SCATTER(m)    — reduce-scatter
+  ALLGATHER            — all-gather
+  ALLTOALL             — all-to-all
+  SCAN(monoid)         — cross-rank prefix scan (Type 3)
+  BCAST(root)          — broadcast
+  WIRE(codec)          — wire-format change for downstream links (Type 0/2)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Any, Callable, Optional, Sequence
+
+from repro.core.types import ADD, Monoid
+from repro.core.wire import IDENTITY, WireCodec
+
+
+class OpKind(enum.Enum):
+    MAP = "map"
+    REDUCE = "reduce"
+    REDUCE_SCATTER = "reduce_scatter"
+    ALLGATHER = "allgather"
+    ALLTOALL = "alltoall"
+    SCAN = "scan"
+    BCAST = "bcast"
+    WIRE = "wire"
+
+
+COLLECTIVE_KINDS = {
+    OpKind.REDUCE, OpKind.REDUCE_SCATTER, OpKind.ALLGATHER,
+    OpKind.ALLTOALL, OpKind.SCAN, OpKind.BCAST,
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class Node:
+    kind: OpKind
+    fn: Optional[Callable] = None          # MAP payload
+    monoid: Monoid = ADD                   # REDUCE/RS/SCAN payload
+    codec: WireCodec = IDENTITY            # WIRE payload
+    root: int = 0                          # BCAST payload
+    exclusive: bool = False                # SCAN payload
+    name: str = ""
+
+    def label(self) -> str:
+        base = self.kind.value
+        if self.kind == OpKind.MAP and self.name:
+            return f"map:{self.name}"
+        if self.kind in (OpKind.REDUCE, OpKind.REDUCE_SCATTER, OpKind.SCAN):
+            return f"{base}:{self.monoid.name}"
+        if self.kind == OpKind.WIRE:
+            return f"wire:{self.codec.name}"
+        return base
+
+
+# -- user-facing constructors ------------------------------------------------
+
+def Map(fn: Callable, name: str = "") -> Node:
+    return Node(OpKind.MAP, fn=fn, name=name)
+
+
+def Reduce(monoid: Monoid = ADD) -> Node:
+    return Node(OpKind.REDUCE, monoid=monoid)
+
+
+def ReduceScatter(monoid: Monoid = ADD) -> Node:
+    return Node(OpKind.REDUCE_SCATTER, monoid=monoid)
+
+
+def AllGather() -> Node:
+    return Node(OpKind.ALLGATHER)
+
+
+def AllToAll() -> Node:
+    return Node(OpKind.ALLTOALL)
+
+
+def Scan(monoid: Monoid = ADD, exclusive: bool = False) -> Node:
+    return Node(OpKind.SCAN, monoid=monoid, exclusive=exclusive)
+
+
+def Bcast(root: int = 0) -> Node:
+    return Node(OpKind.BCAST, root=root)
+
+
+def Wire(codec: WireCodec) -> Node:
+    return Node(OpKind.WIRE, codec=codec)
+
+
+@dataclasses.dataclass
+class SwitchProgram:
+    """A linear dataflow chain (the common fused-collective shape).
+
+    The paper's examples (Allgather_op_Allgather, AllReduce+AlltoAll,
+    MapReduce) are all chains; richer DAGs reduce to chains per-tensor.
+    """
+
+    nodes: Sequence[Node]
+    name: str = "program"
+
+    def __post_init__(self):
+        self.nodes = tuple(self.nodes)
+
+    def labels(self) -> list[str]:
+        return [n.label() for n in self.nodes]

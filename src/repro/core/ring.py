@@ -1,0 +1,320 @@
+"""Ring / log-step collective schedules with per-hop compute.
+
+These are the TPU-native embodiment of ACiS "in-switch" processing: a
+collective is a sequence of `lax.ppermute` hops executed under
+`jax.shard_map`, and arbitrary compute (the paper's aggregation unit / CGRA
+program) is attached to every hop.  All functions in this module are *rank
+local*: they must be called inside a `shard_map`-manual region and take the
+mesh ``axis_name`` they communicate over.
+
+Schedules provided:
+  * ``ring_reduce_scatter``    — bandwidth-optimal ring RS, per-hop combine
+  * ``ring_all_gather``        — bandwidth-optimal ring AG, optional per-hop map
+  * ``ring_all_reduce``        — RS∘AG (bandwidth) or unchunked (latency)
+  * ``ring_broadcast``         — ring multicast (the paper's replication engine)
+  * ``tree_broadcast``         — log-step multicast (beyond-paper option)
+  * ``rank_prefix_scan``       — log-step (Hillis-Steele) scan across ranks;
+                                 the carry is Type-3 "look-aside" state
+  * ``ring_all_to_all``        — shifted-ppermute A2A
+Axis size 1 degenerates to identity for every schedule.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.types import ADD, Monoid
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# Helpers
+# ---------------------------------------------------------------------------
+
+def _shift_perm(n: int, shift: int) -> list[tuple[int, int]]:
+    """Cyclic shift: rank j sends to rank (j + shift) % n."""
+    return [(j, (j + shift) % n) for j in range(n)]
+
+
+def _partial_shift_perm(n: int, shift: int) -> list[tuple[int, int]]:
+    """Non-cyclic shift used by log-step scans (ranks >= n - shift send nothing).
+
+    Receivers with no sender get zeros from ``ppermute``; callers mask.
+    """
+    return [(j, j + shift) for j in range(n - shift)]
+
+
+def ppermute_tree(x: PyTree, axis_name: str, perm: Sequence[tuple[int, int]]) -> PyTree:
+    return jax.tree.map(lambda leaf: lax.ppermute(leaf, axis_name, perm), x)
+
+
+def _split_chunks(x: jax.Array, n: int) -> jax.Array:
+    """Reshape leading axis into [n, chunk, ...]; requires divisibility."""
+    if x.shape[0] % n:
+        raise ValueError(f"leading dim {x.shape[0]} not divisible by axis size {n}")
+    return x.reshape((n, x.shape[0] // n) + x.shape[1:])
+
+
+def _dyn_chunk(xs: jax.Array, idx: jax.Array) -> jax.Array:
+    return lax.dynamic_index_in_dim(xs, idx, axis=0, keepdims=False)
+
+
+def pad_to_multiple(x: jax.Array, n: int, fill=0) -> tuple[jax.Array, int]:
+    """Pad flat array to a multiple of ``n``; returns (padded, original_len)."""
+    size = x.shape[0]
+    rem = (-size) % n
+    if rem:
+        x = jnp.concatenate([x, jnp.full((rem,) + x.shape[1:], fill, x.dtype)])
+    return x, size
+
+
+# ---------------------------------------------------------------------------
+# Reduce-scatter  (rank i ends owning the fully-reduced chunk i)
+# ---------------------------------------------------------------------------
+
+def ring_reduce_scatter(
+    x: jax.Array,
+    axis_name: str,
+    monoid: Monoid = ADD,
+    *,
+    hop_combine: Optional[Callable[[jax.Array, jax.Array], jax.Array]] = None,
+) -> jax.Array:
+    """Bandwidth-optimal ring reduce-scatter with a per-hop combine.
+
+    ``hop_combine(incoming, local)`` is the in-switch aggregation program; it
+    defaults to ``monoid.combine`` and may be any user function (ACiS Type 2)
+    including a Pallas kernel.  ``x`` has shape [n * chunk, ...]; the return
+    value is the fully reduced chunk ``i`` of shape [chunk, ...].
+    """
+    n = lax.axis_size(axis_name)
+    combine = hop_combine or monoid.combine
+    if n == 1:
+        return x
+    i = lax.axis_index(axis_name)
+    xs = _split_chunks(x, n)
+    perm = _shift_perm(n, 1)
+
+    buf = _dyn_chunk(xs, (i - 1) % n)
+
+    def body(buf, s):
+        incoming = lax.ppermute(buf, axis_name, perm)
+        local = _dyn_chunk(xs, (i - 2 - s) % n)
+        return combine(incoming, local), ()
+
+    buf, _ = lax.scan(body, buf, jnp.arange(n - 1))
+    return buf
+
+
+# ---------------------------------------------------------------------------
+# All-gather  (rank i contributes chunk i; result is [n * chunk, ...])
+# ---------------------------------------------------------------------------
+
+def ring_all_gather(
+    x: jax.Array,
+    axis_name: str,
+    *,
+    hop_map: Optional[Callable[[jax.Array], jax.Array]] = None,
+) -> jax.Array:
+    """Bandwidth-optimal ring all-gather.
+
+    ``hop_map`` (ACiS Type 4 "map" fused into the collective) is applied to
+    every chunk exactly once as it is *forwarded* — i.e. the transformation
+    happens in the network, not at the endpoints.  With ``hop_map`` the
+    result at every rank is ``concat([map(chunk_0), ..., map(chunk_{n-1})])``.
+    """
+    n = lax.axis_size(axis_name)
+    if hop_map is None:
+        hop_map = lambda c: c
+    if n == 1:
+        out = hop_map(x)
+        return out
+    i = lax.axis_index(axis_name)
+    perm = _shift_perm(n, 1)
+
+    first = hop_map(x)
+    out = jnp.zeros((n,) + first.shape, first.dtype)
+    out = lax.dynamic_update_index_in_dim(out, first, i, axis=0)
+
+    def body(carry, s):
+        out, buf = carry
+        buf = lax.ppermute(buf, axis_name, perm)
+        out = lax.dynamic_update_index_in_dim(out, buf, (i - 1 - s) % n, axis=0)
+        return (out, buf), ()
+
+    (out, _), _ = lax.scan(body, (out, first), jnp.arange(n - 1))
+    return out.reshape((n * first.shape[0],) + first.shape[1:])
+
+
+# ---------------------------------------------------------------------------
+# All-reduce
+# ---------------------------------------------------------------------------
+
+def ring_all_reduce(
+    x: jax.Array,
+    axis_name: str,
+    monoid: Monoid = ADD,
+    *,
+    hop_combine: Optional[Callable[[jax.Array, jax.Array], jax.Array]] = None,
+    latency_optimal: bool = False,
+) -> jax.Array:
+    """All-reduce with per-hop combine.
+
+    ``latency_optimal=False`` (default): reduce-scatter ∘ all-gather — 2(n-1)
+    hops of ``size/n`` bytes each (bandwidth-optimal; right for large
+    messages).  ``latency_optimal=True``: n-1 hops of full-size messages with
+    a combine at every hop — fewer sequential hops for tiny messages (the
+    paper's Fig. 3 small-message regime; see benchmarks/netmodel.py for the
+    crossover).
+    """
+    n = lax.axis_size(axis_name)
+    if n == 1:
+        return x
+    combine = hop_combine or monoid.combine
+    if latency_optimal:
+        perm = _shift_perm(n, 1)
+
+        # Rotate each rank's *original* contribution around the ring and
+        # fold it into a local accumulator — n-1 hops, full-size messages,
+        # one combine per hop.  (Folding running partials instead would
+        # double-count.)  Requires a commutative monoid.
+        def body(carry, _):
+            acc, msg = carry
+            msg = lax.ppermute(msg, axis_name, perm)
+            return (combine(acc, msg), msg), ()
+
+        (out, _), _ = lax.scan(body, (x, x), jnp.arange(n - 1))
+        return out
+
+    shape = x.shape
+    flat = x.reshape(-1)
+    padded, size = pad_to_multiple(flat, n)
+    red = ring_reduce_scatter(padded, axis_name, monoid, hop_combine=hop_combine)
+    full = ring_all_gather(red, axis_name)
+    return full[:size].reshape(shape)
+
+
+# ---------------------------------------------------------------------------
+# Broadcast (multicast engine)
+# ---------------------------------------------------------------------------
+
+def ring_broadcast(x: jax.Array, axis_name: str, root: int = 0) -> jax.Array:
+    """Ring multicast: the value is replicated hop-by-hop along the ring,
+    mirroring the paper's packet-replication engine in the switch pipeline."""
+    n = lax.axis_size(axis_name)
+    if n == 1:
+        return x
+    i = lax.axis_index(axis_name)
+    d = (i - root) % n  # ring distance from root
+    perm = _shift_perm(n, 1)
+    buf = jnp.where(d == 0, x, jnp.zeros_like(x))
+
+    def body(buf, s):
+        incoming = lax.ppermute(buf, axis_name, perm)
+        keep = (d == s + 1)
+        return jnp.where(keep, incoming, buf), ()
+
+    buf, _ = lax.scan(body, buf, jnp.arange(n - 1))
+    return buf
+
+
+def tree_broadcast(x: jax.Array, axis_name: str, root: int = 0) -> jax.Array:
+    """Log-step (binomial-tree) multicast — beyond-paper latency option."""
+    n = lax.axis_size(axis_name)
+    if n == 1:
+        return x
+    i = lax.axis_index(axis_name)
+    d = (i - root) % n
+    buf = jnp.where(d == 0, x, jnp.zeros_like(x))
+    k = 1
+    while k < n:
+        # ranks with d < k hold the value; they send to d + k
+        perm = [(j, (j + k) % n) for j in range(n)]
+        incoming = lax.ppermute(buf, axis_name, perm)
+        take = (d >= k) & (d < 2 * k)
+        buf = jnp.where(take, incoming, buf)
+        k *= 2
+    return buf
+
+
+# ---------------------------------------------------------------------------
+# Rank prefix scan — the Type 3 look-aside carry walking the network.
+# ---------------------------------------------------------------------------
+
+def rank_prefix_scan(
+    x: PyTree,
+    axis_name: str,
+    monoid: Monoid = ADD,
+    *,
+    exclusive: bool = False,
+) -> PyTree:
+    """Prefix scan *across ranks* (per-rank pytrees combined in rank order).
+
+    Log-step Hillis-Steele: ceil(log2 n) ppermute rounds.  The partial
+    prefixes are exactly the "state within the operation" of ACiS Type 3 —
+    carried through the network rather than stored at an endpoint.  Works
+    for any (possibly non-commutative) associative monoid and any axis size.
+    """
+    n = lax.axis_size(axis_name)
+    i = lax.axis_index(axis_name)
+    acc = x
+    k = 1
+    while k < n:
+        perm = _partial_shift_perm(n, k)
+        shifted = ppermute_tree(acc, axis_name, perm)
+        valid = i >= k
+        combined = monoid.combine(shifted, acc)
+        acc = jax.tree.map(
+            lambda c, a: jnp.where(valid, c, a), combined, acc)
+        k *= 2
+    if not exclusive:
+        return acc
+    # exclusive_i = inclusive_{i-1};  rank 0 takes the identity.
+    prev = ppermute_tree(acc, axis_name, _partial_shift_perm(n, 1))
+    ident = monoid.identity(jax.tree.map(
+        lambda l: jax.ShapeDtypeStruct(l.shape, l.dtype), x))
+    return jax.tree.map(
+        lambda p, e: jnp.where(i == 0, e, p), prev, ident)
+
+
+# ---------------------------------------------------------------------------
+# All-to-all (shifted ppermutes) — substrate for fused AR+A2A (NAS IS).
+# ---------------------------------------------------------------------------
+
+def ring_all_to_all(x: jax.Array, axis_name: str) -> jax.Array:
+    """All-to-all: ``x`` is [n * chunk, ...]; chunk j goes to rank j.
+
+    Implemented as n-1 shifted ppermutes of one chunk each, so that per-hop
+    compute can be interleaved by callers (see core/fused.py).
+    """
+    n = lax.axis_size(axis_name)
+    if n == 1:
+        return x
+    i = lax.axis_index(axis_name)
+    xs = _split_chunks(x, n)
+    out = jnp.zeros_like(xs)
+    # local chunk stays
+    out = lax.dynamic_update_index_in_dim(
+        out, _dyn_chunk(xs, i), i, axis=0)
+    for s in range(1, n):
+        perm = _shift_perm(n, s)
+        # chunk destined for rank (i + s): send it now, receive the one
+        # destined for us from rank (i - s).
+        send = _dyn_chunk(xs, (i + s) % n)
+        recv = lax.ppermute(send, axis_name, perm)
+        out = lax.dynamic_update_index_in_dim(out, recv, (i - s) % n, axis=0)
+    return out.reshape(x.shape)
+
+
+# ---------------------------------------------------------------------------
+# Gather (SPMD note: every rank computes the gathered value; "root" semantics
+# are realized by callers discarding non-root outputs).
+# ---------------------------------------------------------------------------
+
+def ring_gather(x: jax.Array, axis_name: str) -> jax.Array:
+    return ring_all_gather(x, axis_name)

@@ -1,0 +1,84 @@
+"""SPU instruction registry — the per-hop vector op set of the "CGRA".
+
+The paper's CGRA is a deep pipeline of SIMD Processing Units with wide
+vector instructions (Fig. 2).  The registry below is that instruction set at
+the JAX level: every op has a pure-jnp reference implementation, and the
+compute-hot ones carry a Pallas TPU kernel (see src/repro/kernels) selected
+by ``use_kernels=True``.  Collectives look combines up here, so adding a
+user op (Type 2) is one `register()` call — the analogue of loading a new
+CGRA binary into the switch.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class SwitchOp:
+    name: str
+    ref: Callable          # pure-jnp reference (always available)
+    kernel: Optional[Callable] = None  # Pallas-backed implementation
+
+    def __call__(self, *args, use_kernel: bool = False, **kw):
+        impl = self.kernel if (use_kernel and self.kernel is not None) else self.ref
+        return impl(*args, **kw)
+
+
+_REGISTRY: Dict[str, SwitchOp] = {}
+
+
+def register(name: str, ref: Callable,
+             kernel: Optional[Callable] = None) -> SwitchOp:
+    op = SwitchOp(name, ref, kernel)
+    _REGISTRY[name] = op
+    return op
+
+
+def get(name: str) -> SwitchOp:
+    return _REGISTRY[name]
+
+
+def names() -> list[str]:
+    return sorted(_REGISTRY)
+
+
+def attach_kernel(name: str, kernel: Callable) -> None:
+    """Late-bind a Pallas kernel to an existing op (kernels import lazily
+    so the registry never forces a Pallas dependency at import time)."""
+    old = _REGISTRY[name]
+    _REGISTRY[name] = SwitchOp(old.name, old.ref, kernel)
+
+
+# -- the base instruction set -------------------------------------------------
+
+register("add", lambda a, b: a + b)
+register("max", jnp.maximum)
+register("min", jnp.minimum)
+register("mac", lambda acc, x, alpha=1.0: acc + alpha * x)
+register("dot_accumulate", lambda acc, a, b: acc + a @ b)
+register("prefix_sum", lambda x: jnp.cumsum(x, axis=0))
+register("relu2", lambda x: jnp.square(jnp.maximum(x, 0)))
+
+
+def _ref_scatter_accum(dense, idx, vals):
+    return dense.at[idx].add(vals.astype(dense.dtype))
+
+
+register("topk_accumulate", _ref_scatter_accum)
+
+
+def load_kernels() -> None:
+    """Bind the Pallas kernels onto the registry (idempotent)."""
+    from repro.kernels import ops as kops  # local import: keep core light
+
+    attach_kernel("add", kops.combine_add)
+    attach_kernel("max", kops.combine_max)
+    attach_kernel("min", kops.combine_min)
+    attach_kernel("mac", kops.combine_mac)
+    attach_kernel("prefix_sum", kops.prefix_sum)
+    attach_kernel("topk_accumulate", kops.topk_accumulate)

@@ -1,0 +1,135 @@
+"""Core taxonomy types for ACiS (Advanced Computing in the Switch).
+
+The paper classifies in-switch computing into progressively complex types
+(Table I of the paper). On the TPU substrate every chip is a hop of the
+ring/torus collective, so "in-switch" compute becomes per-hop compute
+attached to a `lax.ppermute` schedule executed under `jax.shard_map`.
+
+This module defines:
+  * :class:`AcisType` — the taxonomy levels (0-4).
+  * :class:`Monoid`   — a combine operation with identity, the algebraic
+    object a reduction/scan collective is parameterized by.  Type 1 uses the
+    fixed builtin monoids; Type 2 permits arbitrary user monoids over
+    arbitrary pytree "wire dtypes".
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+PyTree = Any
+
+
+class AcisType(enum.IntEnum):
+    """The ACiS taxonomy (paper Table I)."""
+
+    STREAM = 0        # stream transforms (dtype change, checksum)
+    COLLECTIVE = 1    # collectives on primitive types, fixed ops
+    USER_DEFINED = 2  # user-defined ops / dtypes / communicators
+    LOOK_ASIDE = 3    # state + loops + off-chip (HBM) memory
+    FUSED = 4         # fused collectives and map functions
+
+
+@dataclasses.dataclass(frozen=True)
+class Monoid:
+    """An associative combine with identity.
+
+    ``combine`` must be associative (commutative too for reduction
+    collectives whose hop order is rank-dependent).  ``identity`` takes a
+    ShapeDtypeStruct-like and returns the identity element of that shape.
+    """
+
+    name: str
+    combine: Callable[[PyTree, PyTree], PyTree]
+    identity: Callable[[Any], PyTree]
+    commutative: bool = True
+
+    def __repr__(self) -> str:  # pragma: no cover - cosmetic
+        return f"Monoid({self.name})"
+
+
+def _full_like_struct(x: Any, val) -> Array:
+    return jnp.full(x.shape, val, dtype=x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Type 1 fixed monoids (the BlueGene/SHArP-class op set).
+# ---------------------------------------------------------------------------
+
+ADD = Monoid("add", lambda a, b: a + b, lambda x: jnp.zeros(x.shape, x.dtype))
+MAX = Monoid(
+    "max", jnp.maximum, lambda x: _full_like_struct(x, jnp.finfo(x.dtype).min
+                                                    if jnp.issubdtype(x.dtype, jnp.floating)
+                                                    else jnp.iinfo(x.dtype).min)
+)
+MIN = Monoid(
+    "min", jnp.minimum, lambda x: _full_like_struct(x, jnp.finfo(x.dtype).max
+                                                    if jnp.issubdtype(x.dtype, jnp.floating)
+                                                    else jnp.iinfo(x.dtype).max)
+)
+PROD = Monoid("prod", lambda a, b: a * b, lambda x: jnp.ones(x.shape, x.dtype))
+
+TYPE1_MONOIDS = {m.name: m for m in (ADD, MAX, MIN, PROD)}
+
+
+def tree_monoid(leaf_monoid: Monoid) -> Monoid:
+    """Lift a leaf monoid to pytrees (Type 2 'user-defined datatypes')."""
+
+    def combine(a: PyTree, b: PyTree) -> PyTree:
+        return jax.tree.map(leaf_monoid.combine, a, b)
+
+    def identity(struct: PyTree) -> PyTree:
+        return jax.tree.map(leaf_monoid.identity, struct)
+
+    return Monoid(f"tree_{leaf_monoid.name}", combine, identity,
+                  leaf_monoid.commutative)
+
+
+# ---------------------------------------------------------------------------
+# Example Type 2 user-defined monoids (paper §II: "e.g. dot product",
+# sparse/matrix datatypes).  These are *data points* showing the engine is
+# genuinely op/dtype-polymorphic; users supply their own.
+# ---------------------------------------------------------------------------
+
+
+def _argmax_combine(a, b):
+    """(value, payload) argmax-with-payload: keeps payload of the max."""
+    av, ap = a
+    bv, bp = b
+    take_a = av >= bv
+    return jnp.where(take_a, av, bv), jnp.where(take_a, ap, bp)
+
+
+ARGMAX_WITH_PAYLOAD = Monoid(
+    "argmax_payload",
+    _argmax_combine,
+    lambda s: (jnp.full(s[0].shape, -jnp.inf, s[0].dtype),
+               jnp.zeros(s[1].shape, s[1].dtype)),
+)
+
+
+def _welford_combine(a, b):
+    """Parallel Welford mean/variance merge — a stateful 'matrix-like' dtype."""
+    na, ma, sa = a
+    nb, mb, sb = b
+    n = na + nb
+    safe_n = jnp.where(n > 0, n, 1)
+    delta = mb - ma
+    m = ma + delta * (nb / safe_n)
+    s = sa + sb + delta * delta * (na * nb / safe_n)
+    return n, m, s
+
+
+WELFORD = Monoid(
+    "welford",
+    _welford_combine,
+    lambda s: (jnp.zeros(s[0].shape, s[0].dtype),
+               jnp.zeros(s[1].shape, s[1].dtype),
+               jnp.zeros(s[2].shape, s[2].dtype)),
+)

@@ -1,0 +1,162 @@
+"""On-wire codecs — ACiS Type 0 stream transforms + Type 2 wire datatypes.
+
+A :class:`WireCodec` describes what actually travels over a link.  The
+paper's switch parses payloads, transforms streams (dtype changes, CRC) and
+supports user-defined wire datatypes (sparse, quantized).  Here a codec is a
+pair ``encode/decode`` plus, optionally, an *encoded-domain combine* — the
+in-switch aggregation that merges two encoded payloads without a round-trip
+through the decoded domain (e.g. dequant-add-requant in one fused kernel).
+
+Codecs compose with every schedule in :mod:`repro.core.ring` via
+:mod:`repro.core.collectives`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class WireCodec:
+    name: str
+    encode: Callable[[jax.Array], PyTree]
+    decode: Callable[[PyTree], jax.Array]
+    # Optional encoded-domain combine (incoming, local) -> encoded.
+    combine_encoded: Optional[Callable[[PyTree, PyTree], PyTree]] = None
+    # Bytes-on-wire multiplier vs f32 (for the roofline/emulator accounting).
+    wire_ratio: float = 1.0
+
+    def __repr__(self) -> str:  # pragma: no cover
+        return f"WireCodec({self.name})"
+
+
+# ---------------------------------------------------------------------------
+# Type 0: pure stream transforms.
+# ---------------------------------------------------------------------------
+
+IDENTITY = WireCodec("identity", lambda x: x, lambda x: x, wire_ratio=1.0)
+
+
+def _cast_codec(name: str, wire_dtype, ratio: float) -> WireCodec:
+    def encode(x):
+        return (x.astype(wire_dtype), jnp.asarray(x.dtype.name == "float32"))
+
+    def decode(p):
+        y, was_f32 = p
+        del was_f32
+        return y.astype(jnp.float32)
+
+    return WireCodec(name, lambda x: x.astype(wire_dtype),
+                     lambda y: y.astype(jnp.float32), wire_ratio=ratio)
+
+
+BF16 = _cast_codec("bf16", jnp.bfloat16, 0.5)
+FP8 = _cast_codec("fp8_e4m3", jnp.float8_e4m3fn, 0.25)
+
+
+def checksum_tag(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Type 0 'append a CRC' analogue: fletcher-style checksum sidecar.
+
+    The checksum travels with the payload; ``checksum_verify`` recomputes and
+    compares (used by the fault-tolerance tests to detect corrupt shards).
+    """
+    flat = x.reshape(-1).astype(jnp.float32)
+    bits = lax_bitcast(flat)
+    s = jnp.cumsum(bits.astype(jnp.uint32) & jnp.uint32(0xFFFF))
+    return x, (jnp.sum(bits, dtype=jnp.uint32), s[-1] if s.size else jnp.uint32(0))
+
+
+def lax_bitcast(x: jax.Array) -> jax.Array:
+    return jax.lax.bitcast_convert_type(x, jnp.uint32)
+
+
+def checksum_verify(x: jax.Array, tag) -> jax.Array:
+    _, fresh = checksum_tag(x)
+    return (fresh[0] == tag[0]) & (fresh[1] == tag[1])
+
+
+# ---------------------------------------------------------------------------
+# Type 2 wire datatype: blockwise-int8 quantized tensors (payload + scales).
+# ---------------------------------------------------------------------------
+
+QBLOCK = 256  # elements per quantization block (VPU-lane friendly)
+
+
+def quantize_int8(x: jax.Array, block: int = QBLOCK) -> tuple[jax.Array, jax.Array, Any]:
+    """Blockwise symmetric int8 quantization of a flat f32/bf16 array.
+
+    Returns (q[int8, padded], scales[f32, nblocks], orig_size).
+    """
+    flat = x.reshape(-1).astype(jnp.float32)
+    size = flat.shape[0]
+    pad = (-size) % block
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros((pad,), jnp.float32)])
+    blocks = flat.reshape(-1, block)
+    absmax = jnp.max(jnp.abs(blocks), axis=1, keepdims=True)
+    scale = jnp.where(absmax > 0, absmax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return q, scale[:, 0], size
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array, size: int,
+                    shape=None, dtype=jnp.float32) -> jax.Array:
+    out = (q.astype(jnp.float32) * scale[:, None]).reshape(-1)[:size]
+    if shape is not None:
+        out = out.reshape(shape).astype(dtype)
+    return out
+
+
+def _int8_combine(incoming, local):
+    """Encoded-domain combine: dequant both, add, requant — the in-switch
+    aggregation-unit program for the quantized wire format (Pallas-kernel
+    backed when kernels are enabled; see kernels/quant_combine)."""
+    qi, si = incoming
+    ql, sl = local
+    s = jnp.maximum(si, sl)  # conservative joint scale
+    acc = qi.astype(jnp.float32) * si[:, None] + ql.astype(jnp.float32) * sl[:, None]
+    absmax = jnp.max(jnp.abs(acc), axis=1)
+    scale = jnp.where(absmax > 0, absmax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(acc / scale[:, None]), -127, 127).astype(jnp.int8)
+    del s
+    return q, scale
+
+
+def int8_codec(block: int = QBLOCK) -> WireCodec:
+    """int8-blockwise codec with encoded-domain combine.
+
+    NOTE: quantized combine is lossy and (mildly) order-dependent; use with
+    error-feedback (core/lookaside.py) for training-grade gradient sync.
+    Encode assumes a fixed flat f32 payload shape per call site.
+    """
+    shape_box = {}
+
+    def encode(x):
+        shape_box["shape"] = x.shape
+        shape_box["dtype"] = x.dtype
+        q, s, size = quantize_int8(x, block)
+        shape_box["size"] = size
+        return q, s
+
+    def decode(p):
+        q, s = p
+        return dequantize_int8(q, s, shape_box["size"],
+                               shape_box["shape"], shape_box["dtype"])
+
+    # wire_ratio: 1 byte payload + 4/block scales vs 4 bytes f32
+    ratio = (1.0 + 4.0 / block) / 4.0
+    return WireCodec(f"int8_b{block}", encode, decode,
+                     combine_encoded=_int8_combine, wire_ratio=ratio)
+
+
+CODECS = {
+    "identity": IDENTITY,
+    "bf16": BF16,
+    "fp8": FP8,
+}

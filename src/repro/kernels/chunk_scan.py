@@ -1,0 +1,128 @@
+"""Pallas TPU kernels: chunked scans (prefix sum + RG-LRU linear recurrence).
+
+Two recurrences power the Type 3 "look-aside loop" collectives and the
+SSM/hybrid architectures:
+
+  * ``prefix_sum``  — h_t = h_{t-1} + x_t         (Fig. 5 op)
+  * ``rglru_scan``  — h_t = a_t ⊙ h_{t-1} + b_t   (RecurrentGemma RG-LRU)
+
+Tiling: time is chunked (grid dimension, sequential on TPU); the carry lives
+in a VMEM scratch buffer that persists across grid steps — exactly the
+paper's "state within the operation".  Within a chunk the scan is computed
+with a log-step Hillis-Steele over the time axis (vector ops on the lane
+dim), so the sequential dependency is only chunk-to-chunk.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+CHUNK_T = 256
+
+
+def _log_steps(n: int) -> list[int]:
+    steps, k = [], 1
+    while k < n:
+        steps.append(k)
+        k *= 2
+    return steps
+
+
+# ---------------------------------------------------------------------------
+# prefix sum
+# ---------------------------------------------------------------------------
+
+def _prefix_kernel(x_ref, o_ref, carry_ref, *, chunk_t: int):
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        carry_ref[...] = jnp.zeros_like(carry_ref)
+
+    x = x_ref[...]                     # [chunk_t, D]
+    # intra-chunk inclusive scan (log-step over time)
+    for k in _log_steps(chunk_t):
+        x = x + jnp.pad(x, ((k, 0), (0, 0)))[:chunk_t]
+    out = x + carry_ref[...]
+    o_ref[...] = out
+    carry_ref[...] = out[-1:, :]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def prefix_sum(x: jax.Array, *, interpret: bool = True) -> jax.Array:
+    """Inclusive prefix sum over axis 0 of [T] or [T, D] arrays."""
+    squeeze = x.ndim == 1
+    x2 = x[:, None] if squeeze else x
+    t, d = x2.shape
+    chunk = min(CHUNK_T, t)
+    pad = (-t) % chunk
+    if pad:
+        x2 = jnp.concatenate([x2, jnp.zeros((pad, d), x2.dtype)])
+
+    out = pl.pallas_call(
+        functools.partial(_prefix_kernel, chunk_t=chunk),
+        out_shape=jax.ShapeDtypeStruct(x2.shape, x2.dtype),
+        grid=(x2.shape[0] // chunk,),
+        in_specs=[pl.BlockSpec((chunk, d), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((chunk, d), lambda i: (i, 0)),
+        scratch_shapes=[pltpu_vmem((1, d), x2.dtype)],
+        interpret=interpret,
+    )(x2)
+    out = out[:t]
+    return out[:, 0] if squeeze else out
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU gated recurrence  h_t = a_t * h_{t-1} + b_t
+# ---------------------------------------------------------------------------
+
+def _rglru_kernel(a_ref, b_ref, o_ref, carry_ref, *, chunk_t: int):
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        carry_ref[...] = jnp.zeros_like(carry_ref)
+
+    a = a_ref[...].astype(jnp.float32)   # [chunk_t, D]
+    h = b_ref[...].astype(jnp.float32)
+    # Blelloch-free log-step scan of the affine recurrence:
+    # pair (a, h) composes as (a2*a1, a2*h1 + h2)
+    for k in _log_steps(chunk_t):
+        a_prev = jnp.pad(a, ((k, 0), (0, 0)), constant_values=1.0)[:chunk_t]
+        h_prev = jnp.pad(h, ((k, 0), (0, 0)))[:chunk_t]
+        h = a * h_prev + h
+        a = a * a_prev
+    out = h + a * carry_ref[...]
+    o_ref[...] = out.astype(o_ref.dtype)
+    carry_ref[...] = out[-1:, :]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def rglru_scan(a: jax.Array, b: jax.Array, *,
+               interpret: bool = True) -> jax.Array:
+    """h_t = a_t * h_{t-1} + b_t over [T, D] inputs (h_0 = 0)."""
+    if a.shape != b.shape or a.ndim != 2:
+        raise ValueError(f"bad shapes {a.shape} {b.shape}")
+    t, d = a.shape
+    chunk = min(CHUNK_T, t)
+    pad = (-t) % chunk
+    if pad:
+        a = jnp.concatenate([a, jnp.ones((pad, d), a.dtype)])
+        b = jnp.concatenate([b, jnp.zeros((pad, d), b.dtype)])
+
+    out = pl.pallas_call(
+        functools.partial(_rglru_kernel, chunk_t=chunk),
+        out_shape=jax.ShapeDtypeStruct(a.shape, jnp.float32),
+        grid=(a.shape[0] // chunk,),
+        in_specs=[pl.BlockSpec((chunk, d), lambda i: (i, 0))] * 2,
+        out_specs=pl.BlockSpec((chunk, d), lambda i: (i, 0)),
+        scratch_shapes=[pltpu_vmem((1, d), jnp.float32)],
+        interpret=interpret,
+    )(a, b)
+    return out[:t]
+
+
+def pltpu_vmem(shape, dtype):
+    """VMEM scratch allocation (portable across pallas versions)."""
+    from jax.experimental.pallas import tpu as pltpu
+    return pltpu.VMEM(shape, dtype)

@@ -1,0 +1,63 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+``interpret`` defaults to True on CPU hosts (kernel bodies execute in
+Python for correctness validation) and False on real TPU backends, where
+`pl.pallas_call` compiles to Mosaic.  Each wrapper is the drop-in,
+signature-compatible implementation of its `repro.kernels.ref` oracle.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels import fused_combine as _fc
+from repro.kernels import quant_combine as _qc
+from repro.kernels import topk_accum as _ta
+from repro.kernels import chunk_scan as _cs
+from repro.kernels import rwkv6_recurrence as _rw
+
+
+@functools.cache
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def combine_add(x, y):
+    return _fc.fused_combine(x, y, op="add", interpret=_interpret_default())
+
+
+def combine_max(x, y):
+    return _fc.fused_combine(x, y, op="max", interpret=_interpret_default())
+
+
+def combine_min(x, y):
+    return _fc.fused_combine(x, y, op="min", interpret=_interpret_default())
+
+
+def combine_mac(acc, x, alpha: float = 1.0):
+    return _fc.fused_combine(acc, x, op="mac", alpha=float(alpha),
+                             interpret=_interpret_default())
+
+
+def quant_combine(qa, sa, qb, sb):
+    return _qc.quant_combine(qa, sa, qb, sb, interpret=_interpret_default())
+
+
+def topk_accumulate(dense, idx, vals):
+    return _ta.topk_accumulate(dense, idx, vals,
+                               interpret=_interpret_default())
+
+
+def prefix_sum(x):
+    return _cs.prefix_sum(x, interpret=_interpret_default())
+
+
+def rglru_scan(a, b):
+    return _cs.rglru_scan(a, b, interpret=_interpret_default())
+
+
+def rwkv6_recurrence(r, k, v, w, u):
+    return _rw.rwkv6_recurrence(r, k, v, w, u,
+                                interpret=_interpret_default())

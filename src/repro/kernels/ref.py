@@ -1,0 +1,117 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the semantics contracts: tests sweep shapes/dtypes and assert the
+kernels match these references (interpret mode on CPU, compiled on TPU).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# fused_combine — per-hop reduce combines (the switch aggregation unit)
+# ---------------------------------------------------------------------------
+
+def combine_add(x: jax.Array, y: jax.Array) -> jax.Array:
+    return x + y
+
+
+def combine_max(x: jax.Array, y: jax.Array) -> jax.Array:
+    return jnp.maximum(x, y)
+
+
+def combine_min(x: jax.Array, y: jax.Array) -> jax.Array:
+    return jnp.minimum(x, y)
+
+
+def combine_mac(acc: jax.Array, x: jax.Array, alpha: float = 1.0) -> jax.Array:
+    """acc + alpha * x  (the paper's fused multiply-accumulate example)."""
+    return acc + jnp.asarray(alpha, acc.dtype) * x
+
+
+# ---------------------------------------------------------------------------
+# quant_combine — encoded-domain int8 combine (dequant-add-requant)
+# ---------------------------------------------------------------------------
+
+def quant_combine(qa: jax.Array, sa: jax.Array,
+                  qb: jax.Array, sb: jax.Array
+                  ) -> tuple[jax.Array, jax.Array]:
+    """Combine two blockwise-int8 payloads: q[B, block], s[B]."""
+    acc = qa.astype(jnp.float32) * sa[:, None] + \
+        qb.astype(jnp.float32) * sb[:, None]
+    absmax = jnp.max(jnp.abs(acc), axis=1)
+    scale = jnp.where(absmax > 0, absmax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(acc / scale[:, None]), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+# ---------------------------------------------------------------------------
+# topk_accumulate — sparse (idx, val) scatter-add into a dense accumulator
+# ---------------------------------------------------------------------------
+
+def topk_accumulate(dense: jax.Array, idx: jax.Array,
+                    vals: jax.Array) -> jax.Array:
+    """dense[idx] += vals   (duplicate indices accumulate)."""
+    return dense.at[idx].add(vals.astype(dense.dtype))
+
+
+# ---------------------------------------------------------------------------
+# prefix_sum — long-vector inclusive scan (chunked in the kernel)
+# ---------------------------------------------------------------------------
+
+def prefix_sum(x: jax.Array) -> jax.Array:
+    return jnp.cumsum(x, axis=0)
+
+
+# ---------------------------------------------------------------------------
+# rglru_scan — gated linear recurrence  h_t = a_t * h_{t-1} + b_t
+# ---------------------------------------------------------------------------
+
+def rglru_scan(a: jax.Array, b: jax.Array,
+               h0: jax.Array | None = None) -> jax.Array:
+    """a, b: [T, D]; returns h: [T, D] with h_t = a_t*h_{t-1} + b_t."""
+    if h0 is None:
+        h0 = jnp.zeros(a.shape[1:], a.dtype)
+
+    def step(h, ab):
+        at, bt = ab
+        h = at * h + bt
+        return h, h
+
+    _, hs = jax.lax.scan(step, h0, (a, b))
+    return hs
+
+
+# ---------------------------------------------------------------------------
+# rwkv6 — data-dependent-decay WKV recurrence (one head)
+# ---------------------------------------------------------------------------
+
+def rwkv6_recurrence(r: jax.Array, k: jax.Array, v: jax.Array,
+                     w: jax.Array, u: jax.Array,
+                     s0: jax.Array | None = None
+                     ) -> tuple[jax.Array, jax.Array]:
+    """RWKV-6 "Finch" WKV for a single head.
+
+    r,k,w: [T, K], v: [T, V], u: [K].  State S: [K, V].
+      o_t = (S_{t-1} + (u * k_t)^T v_t)^T r_t
+      S_t = diag(w_t) S_{t-1} + k_t^T v_t
+    Returns (o: [T, V], S_T).
+    """
+    T, K = r.shape
+    V = v.shape[1]
+    if s0 is None:
+        s0 = jnp.zeros((K, V), jnp.float32)
+
+    def step(S, rkvw):
+        rt, kt, vt, wt = rkvw
+        kv = kt[:, None] * vt[None, :]                     # [K, V]
+        o = ((S + u[:, None] * kv) * rt[:, None]).sum(0)   # [V]
+        S = wt[:, None] * S + kv
+        return S, o
+
+    sT, o = jax.lax.scan(step, s0.astype(jnp.float32),
+                         (r.astype(jnp.float32), k.astype(jnp.float32),
+                          v.astype(jnp.float32), w.astype(jnp.float32)))
+    return o.astype(v.dtype), sT

@@ -1,0 +1,303 @@
+"""Cell lowering: build the (train|prefill|decode) program for one
+(architecture × shape × mesh) and lower+compile it with ShapeDtypeStruct
+inputs — no allocation ever happens; this is the multi-pod dry-run engine.
+
+Returned artifacts per cell: the compiled object plus memory/cost analyses
+and the HLO text for collective-bytes accounting (roofline/analysis.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro import configs
+from repro.launch.shapes import SHAPES, ShapeCell, applicable
+from repro.models import Model
+from repro.sharding import rules
+from repro.train import optimizer as opt_lib
+from repro.train.step import TrainState, build_train_step_gspmd, _ns
+
+PyTree = Any
+
+# per-arch microbatch counts for train_4k (keeps live activations + logits
+# within a 16 GB v5e during the batched step; tuned in §Perf)
+TRAIN_MICROBATCHES = {
+    "default": 8,
+    "deepseek-v2-236b": 16,
+    "nemotron-4-15b": 8,
+}
+
+
+def sds(shape, dtype) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def _tree_sds(tree: PyTree) -> PyTree:
+    return jax.tree.map(lambda l: sds(l.shape, l.dtype), tree)
+
+
+# ---------------------------------------------------------------------------
+# input_specs — ShapeDtypeStruct stand-ins for every model input
+# ---------------------------------------------------------------------------
+
+def input_specs(arch: str, shape_name: str) -> dict:
+    """Shape/dtype stand-ins for the given cell (weak-type-correct,
+    shardable, no device allocation)."""
+    return _input_specs_cfg(configs.get(arch), SHAPES[shape_name])
+
+
+def _input_specs_cfg(cfg, cell: ShapeCell) -> dict:
+    model = Model(cfg)
+    out: dict = {}
+    if cell.kind == "train":
+        out["tokens"] = sds((cell.global_batch, cell.seq_len + 1), jnp.int32)
+        ctx = model.context_inputs(cell.global_batch)
+        if ctx is not None:
+            out["context"] = ctx
+    elif cell.kind == "prefill":
+        out["tokens"] = sds((cell.global_batch, cell.seq_len), jnp.int32)
+        ctx = model.context_inputs(cell.global_batch)
+        if ctx is not None:
+            out["context"] = ctx
+    else:  # decode
+        out["token"] = sds((cell.global_batch,), jnp.int32)
+        out["index"] = sds((), jnp.int32)
+        out["cache"] = _tree_sds(jax.eval_shape(
+            lambda: model.init_cache(cell.global_batch, cell.seq_len)))
+        ctx = model.context_inputs(cell.global_batch)
+        if ctx is not None:
+            out["context"] = ctx
+    return out
+
+
+# ---------------------------------------------------------------------------
+# cache sharding heuristics
+# ---------------------------------------------------------------------------
+
+def cache_specs(cache: PyTree, cfg, mesh: Mesh, batch: int) -> PyTree:
+    """Decode-cache shardings: [stack?, B, S|W, heads?, d] — batch over DP,
+    a heads/width-like dim over TP when divisible."""
+    dp = rules.dp_axes(mesh)
+    dp_total = 1
+    for a in dp:
+        dp_total *= mesh.shape[a]
+    batch_ax = dp if batch % dp_total == 0 and batch > 1 else None
+    tp_candidates = {cfg.n_kv_heads, cfg.n_heads, cfg.d_model // 64,
+                     cfg.d_model, cfg.hybrid.lru_width or cfg.d_model}
+
+    def one(path, leaf):
+        ps = rules._path_str(path)
+        stacked = ps.startswith("layers/")
+        off = 1 if stacked else 0        # leading period-stack dim
+        dims: list = [None] * len(leaf.shape)
+        if len(leaf.shape) > off and leaf.shape[off] == batch:
+            dims[off] = batch_ax
+        for i in range(off + 2, len(leaf.shape)):
+            d = leaf.shape[i]
+            if d in tp_candidates and d % mesh.shape["model"] == 0:
+                dims[i] = "model"
+                break
+        return P(*dims)
+
+    return jax.tree_util.tree_map_with_path(one, cache)
+
+
+# ---------------------------------------------------------------------------
+# program builders per cell kind
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class LoweredCell:
+    arch: str
+    shape: str
+    mesh_desc: str
+    lowered: Any
+    args: tuple
+    kind: str
+
+
+def build_cell(arch: str, shape_name: str, mesh: Mesh, *,
+               microbatches: Optional[int] = None,
+               remat: Optional[str] = None,
+               extra_config: Optional[dict] = None) -> LoweredCell:
+    ok, reason = applicable(arch, shape_name)
+    if not ok:
+        raise ValueError(f"{arch}×{shape_name}: {reason}")
+    cfg = configs.get(arch)
+    overrides = dict(extra_config or {})
+    if remat is not None:
+        overrides["remat"] = remat
+    if shape_name in ("prefill_32k", "decode_32k"):
+        overrides.setdefault("max_seq", 32768)
+    if shape_name == "long_500k":
+        overrides.setdefault("max_seq", 524288)
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    model = Model(cfg)
+    cell = SHAPES[shape_name]
+    ins = _input_specs_cfg(cfg, cell)
+
+    if cell.kind == "train":
+        mb = microbatches or TRAIN_MICROBATCHES.get(
+            arch, TRAIN_MICROBATCHES["default"])
+        optimizer = opt_lib.make_optimizer(cfg.optimizer)
+        step = build_train_step_gspmd(model, optimizer, mesh,
+                                      microbatches=mb, donate=True)
+        state_sds = jax.eval_shape(
+            lambda k: TrainState(model.init(k),
+                                 optimizer.init(model.param_shapes()),
+                                 jnp.zeros((), jnp.int32), None),
+            jax.random.key(0))
+        batch = {"tokens": ins["tokens"]}
+        if "context" in ins:
+            batch["context"] = ins["context"]
+        lowered = step.lower(state_sds, batch)
+        return LoweredCell(arch, shape_name, _mesh_desc(mesh), lowered,
+                           (state_sds, batch), "train")
+
+    pspecs = rules.param_specs(model.param_shapes(), mesh,
+                               cfg.parallelism)
+    pshard = _ns(mesh, pspecs)
+    param_sds = _tree_sds(model.param_shapes())
+
+    from repro.sharding.act import activation_sharding
+
+    if cell.kind == "prefill":
+        def prefill_fn(params, tokens, context=None):
+            with activation_sharding(mesh, parallelism=cfg.parallelism):
+                hidden, _ = model.forward(params, tokens, context=context)
+                logits = model.logits(params, hidden[:, -1:, :])
+                return logits[:, 0, :]
+
+        bshard = NamedSharding(mesh, rules.batch_spec(mesh, extra_dims=1))
+        args = [param_sds, ins["tokens"]]
+        in_sh = [pshard, bshard]
+        if "context" in ins:
+            args.append(ins["context"])
+            in_sh.append(NamedSharding(mesh,
+                                       rules.batch_spec(mesh, extra_dims=2)))
+        lowered = jax.jit(prefill_fn, in_shardings=tuple(in_sh)).lower(*args)
+        return LoweredCell(arch, shape_name, _mesh_desc(mesh), lowered,
+                           tuple(args), "prefill")
+
+    # decode
+    cshard = _ns(mesh, cache_specs(ins["cache"], cfg, mesh,
+                                   cell.global_batch))
+    dp_total = 1
+    for a in rules.dp_axes(mesh):
+        dp_total *= mesh.shape[a]
+    tok_spec = rules.dp_axes(mesh) if cell.global_batch % dp_total == 0 \
+        and cell.global_batch > 1 else None
+    tshard = NamedSharding(mesh, P(tok_spec))
+
+    def decode_fn(params, token, cache, index, context=None):
+        with activation_sharding(mesh, parallelism=cfg.parallelism):
+            return model.decode_step(params, token, cache, index,
+                                     context=context)
+
+    args = [param_sds, ins["token"], ins["cache"], ins["index"]]
+    in_sh = [pshard, tshard, cshard, NamedSharding(mesh, P())]
+    if "context" in ins:
+        args.append(ins["context"])
+        in_sh.append(NamedSharding(mesh, P(tok_spec, None, None)))
+    lowered = jax.jit(decode_fn, in_shardings=tuple(in_sh),
+                      donate_argnums=(2,)).lower(*args)
+    return LoweredCell(arch, shape_name, _mesh_desc(mesh), lowered,
+                       tuple(args), "decode")
+
+
+def _mesh_desc(mesh: Mesh) -> str:
+    return "x".join(f"{mesh.shape[a]}{a[0]}" for a in mesh.axis_names)
+
+
+# ---------------------------------------------------------------------------
+# linear probes — exact per-device cost recovery.
+#
+# XLA's cost_analysis counts a While body ONCE regardless of trip count, so
+# the full (rolled-scan) artifact under-reports flops/bytes/collectives.
+# HLO costs are exactly linear in (#periods, #microbatches) for these
+# programs, so we lower small *unrolled* probes at (1,2) periods × (1,2)
+# microbatches and solve for the per-period / per-microbatch / per-step
+# components; the full-cell cost is their exact composition.  The probes
+# ARE compiled dry-runs of the same program family (same sharding, same
+# kernels) — only their loop structure is inlined.
+# ---------------------------------------------------------------------------
+
+ANALYSIS_OVERRIDES = dict(scan_layers=False, analysis_unroll=True,
+                          attn_chunk=4096, wkv_chunk=512)
+
+
+def probe_layer_counts(cfg) -> tuple[int, int, int]:
+    """(period_len, rem_len, n_periods_full) for the probe ladder."""
+    from repro.models.transformer import _period_of
+    period, n_periods, rem = _period_of(cfg)
+    return len(period), len(rem), n_periods
+
+
+def build_probe(arch: str, shape_name: str, mesh: Mesh, *,
+                periods: int, microbatches: int = 1,
+                extra_config: Optional[dict] = None) -> LoweredCell:
+    cfg0 = configs.get(arch)
+    plen, rlen, _ = probe_layer_counts(cfg0)
+    cell = SHAPES[shape_name]
+    overrides = dict(ANALYSIS_OVERRIDES)
+    overrides.update(extra_config or {})
+    overrides["n_layers"] = rlen + periods * plen
+    if cell.kind == "train":
+        mb_cell = TRAIN_MICROBATCHES.get(arch, TRAIN_MICROBATCHES["default"])
+        probe_mb_batch = cell.global_batch // mb_cell
+        probe_batch = probe_mb_batch * microbatches
+        # shrink the shape cell for the probe: same seq, smaller batch
+        probe_cell = dataclasses.replace(cell, global_batch=probe_batch)
+        return _build_with_cell(arch, shape_name, probe_cell, mesh,
+                                overrides, microbatches)
+    return _build_with_cell(arch, shape_name, cell, mesh, overrides, 1)
+
+
+def _build_with_cell(arch, shape_name, cell, mesh, overrides, microbatches):
+    """build_cell with an overridden ShapeCell (probe machinery)."""
+    import repro.launch.cells as me
+    orig = SHAPES[shape_name]
+    try:
+        SHAPES[shape_name] = cell
+        return build_cell(arch, shape_name, mesh,
+                          microbatches=microbatches,
+                          extra_config=overrides)
+    finally:
+        SHAPES[shape_name] = orig
+
+
+def compose_probe_costs(costs: dict, *, n_periods: int,
+                        mb_cell: int, kind: str) -> dict:
+    """Solve the linear system from probe costs and compose the full cell.
+
+    ``costs``: {(periods, mb): {metric: value}}.  For serve kinds only
+    (1,1) and (2,1) are needed; train adds (1,2) and (2,2).
+
+      P(p, m) = O + m·E + p·(m·Lmb + Lstep)
+    """
+    out = {}
+    metrics = costs[(1, 1)].keys()
+    for met in metrics:
+        p11 = costs[(1, 1)][met]
+        p21 = costs[(2, 1)][met]
+        if kind == "train":
+            p12 = costs[(1, 2)][met]
+            p22 = costs[(2, 2)][met]
+            l_mb = (p22 - p12) - (p21 - p11)
+            l_step = (p21 - p11) - l_mb
+            e_mb = p12 - p11 - l_mb      # P12 - P11 = E + Lmb
+            o = p11 - e_mb - l_mb - l_step
+            total = (mb_cell * e_mb + n_periods * (mb_cell * l_mb + l_step)
+                     + o)
+        else:
+            l_step = p21 - p11
+            o = p11 - l_step
+            total = o + n_periods * l_step
+        out[met] = max(total, 0.0)
+    return out

@@ -1,0 +1,91 @@
+"""Model — the public facade over the zoo.
+
+    model = Model(cfg)
+    params         = model.init(key)                  # or jax.eval_shape
+    hidden, aux    = model.forward(params, tokens)    # train path
+    logits         = model.logits(params, hidden)
+    cache          = model.init_cache(batch, seq)
+    lg, cache      = model.prefill(params, tokens, cache)
+    lg, cache      = model.decode_step(params, token, cache, index)
+
+``context_inputs`` describes the stub-modality inputs (whisper frame
+embeddings / vision patch embeddings) as shapes so launch/input_specs can
+construct ShapeDtypeStructs.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import decode as D
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+
+PyTree = Any
+
+
+class Model:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    # -- params --------------------------------------------------------------
+
+    def init(self, key: jax.Array) -> PyTree:
+        return T.init_stack(key, self.cfg)
+
+    def param_shapes(self) -> PyTree:
+        return jax.eval_shape(self.init, jax.random.key(0))
+
+    # -- stub modality frontends (assignment: backbone only) ------------------
+
+    def context_inputs(self, batch: int) -> Optional[jax.ShapeDtypeStruct]:
+        cfg = self.cfg
+        if cfg.family == "encdec":
+            return jax.ShapeDtypeStruct(
+                (batch, cfg.encdec.encoder_seq, cfg.d_model), jnp.bfloat16)
+        if cfg.family == "vlm":
+            return jax.ShapeDtypeStruct(
+                (batch, cfg.vlm.image_tokens, cfg.d_model), jnp.bfloat16)
+        return None
+
+    def _context(self, params, context):
+        """encdec runs its encoder over the stub embeddings; vlm uses the
+        patch embeddings directly."""
+        if context is None:
+            return None
+        if self.cfg.family == "encdec":
+            return T.encode(params, self.cfg, context)
+        return context
+
+    # -- training ------------------------------------------------------------
+
+    def forward(self, params: PyTree, tokens: jax.Array, *,
+                context: Optional[jax.Array] = None
+                ) -> tuple[jax.Array, jax.Array]:
+        ctx = self._context(params, context)
+        return T.forward(params, self.cfg, tokens, context=ctx)
+
+    def logits(self, params: PyTree, hidden: jax.Array) -> jax.Array:
+        return T.logits(params, self.cfg, hidden)
+
+    # -- serving ---------------------------------------------------------------
+
+    def init_cache(self, batch: int, seq: int,
+                   dtype=jnp.bfloat16) -> PyTree:
+        return D.init_cache(self.cfg, batch, seq, dtype)
+
+    def prefill(self, params: PyTree, tokens: jax.Array, cache: PyTree, *,
+                context: Optional[jax.Array] = None
+                ) -> tuple[jax.Array, PyTree]:
+        ctx = self._context(params, context)
+        return D.prefill(params, self.cfg, tokens, cache, context=ctx)
+
+    def decode_step(self, params: PyTree, token: jax.Array, cache: PyTree,
+                    index, *, context: Optional[jax.Array] = None
+                    ) -> tuple[jax.Array, PyTree]:
+        ctx = self._context(params, context)
+        return D.decode_step(params, self.cfg, token, cache, index,
+                             context=ctx)

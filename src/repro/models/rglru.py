@@ -1,0 +1,148 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin).
+
+    x1 = causal_conv(W_x u),  g = W_g u
+    r_t = sigmoid(w_r ⊙ x1 + b_r)        (recurrence gate)
+    i_t = sigmoid(w_i ⊙ x1 + b_i)        (input gate)
+    a_t = exp(-c · softplus(Λ) · r_t)     (data-dependent decay, c = 8)
+    h_t = a_t ⊙ h_{t-1} + sqrt(1 - a_t²) ⊙ (i_t ⊙ x1_t)
+    y   = W_out (h ⊙ gelu(g))
+
+The scan is the affine recurrence h_t = a_t h_{t-1} + b_t — Type 3 look-
+aside state.  Training uses the chunked log-step scan (kernels/chunk_scan
+semantics; models run the jnp form so jax.grad applies, the Pallas kernel
+is validated against the same oracle).  Decode carries (h, conv window) —
+O(1) state, which is why the hybrid arch runs the long_500k cell.
+
+Sequence parallelism: `rglru_scan_sp` splits T across the mesh axis and
+joins chunks with the ACiS Type 3 cross-rank scan of (prod a, h) pairs.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.config import HybridConfig
+
+PyTree = Any
+_C = 8.0
+
+
+def init_rglru(key, d_model: int, cfg: HybridConfig,
+               dtype=jnp.bfloat16) -> PyTree:
+    w = cfg.lru_width or d_model
+    ks = jax.random.split(key, 6)
+    # Λ init so that a ∈ (0.9, 0.999) at r = 0.5 (Griffin appendix)
+    lam = jnp.log(jnp.expm1(-2.0 * jnp.log(
+        jax.random.uniform(ks[0], (w,), jnp.float32, 0.9, 0.999)) / _C))
+    return {
+        "wx": L.dense_init(ks[1], d_model, w, dtype),
+        "wg": L.dense_init(ks[2], d_model, w, dtype),
+        "conv": L.init_conv1d(ks[3], cfg.conv_width, w, dtype),
+        "wout": L.dense_init(ks[4], w, d_model, dtype),
+        "lam": lam,
+        "w_r": jnp.zeros((w,), jnp.float32),
+        "b_r": jnp.zeros((w,), jnp.float32),
+        "w_i": jnp.zeros((w,), jnp.float32),
+        "b_i": jnp.zeros((w,), jnp.float32),
+    }
+
+
+def _gates(p, x1):
+    x1f = x1.astype(jnp.float32)
+    r = jax.nn.sigmoid(p["w_r"] * x1f + p["b_r"])
+    i = jax.nn.sigmoid(p["w_i"] * x1f + p["b_i"])
+    log_a = -_C * jax.nn.softplus(p["lam"]) * r
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (i * x1f)
+    return a, b
+
+
+def _affine_scan(a: jax.Array, b: jax.Array, h0: jax.Array) -> jax.Array:
+    """h_t = a_t h_{t-1} + b_t over axis 1.  a, b: [B, T, W].
+
+    Implemented with `lax.associative_scan` (Blelloch) over the affine
+    monoid (A, B)∘(A', B') = (A·A', A'·B + B') — log-depth, MXU/VPU
+    parallel, the production Griffin formulation (and fully visible to
+    XLA cost analysis, unlike a While loop)."""
+    def combine(lo, hi):
+        return lo[0] * hi[0], hi[0] * lo[1] + hi[1]
+
+    aa, bb = jax.lax.associative_scan(combine, (a, b), axis=1)
+    del aa
+    return bb + jnp.cumprod(a, axis=1) * h0[:, None, :] if h0 is not None \
+        else bb
+
+
+def rglru_block(p: PyTree, u: jax.Array, *, cfg: HybridConfig,
+                h0: Optional[jax.Array] = None) -> jax.Array:
+    """u: [B, T, D] -> [B, T, D]."""
+    bsz = u.shape[0]
+    w = p["wx"].shape[1]
+    from repro.sharding.act import shard_act
+    x1 = shard_act(L.causal_conv1d(p["conv"], u @ p["wx"]), "dp", None, "tp")
+    g = shard_act(u @ p["wg"], "dp", None, "tp")
+    a, b = _gates(p, x1)
+    if h0 is None:
+        h0 = jnp.zeros((bsz, w), jnp.float32)
+    h = _affine_scan(a, b, h0)
+    y = (h * jax.nn.gelu(g.astype(jnp.float32), approximate=True))
+    return y.astype(u.dtype) @ p["wout"]
+
+
+# ---------------------------------------------------------------------------
+# decode (single token, carried state)
+# ---------------------------------------------------------------------------
+
+def init_rglru_cache(batch: int, cfg: HybridConfig, d_model: int,
+                     dtype=jnp.bfloat16) -> PyTree:
+    w = cfg.lru_width or d_model
+    return {"h": jnp.zeros((batch, w), jnp.float32),
+            "conv": jnp.zeros((batch, cfg.conv_width - 1, w), dtype)}
+
+
+def rglru_decode(p: PyTree, u_t: jax.Array, cache: PyTree, *,
+                 cfg: HybridConfig) -> tuple[jax.Array, PyTree]:
+    """u_t: [B, 1, D]."""
+    x_t = (u_t[:, 0, :] @ p["wx"])
+    x1, conv_win = L.conv1d_decode(p["conv"], cache["conv"], x_t)
+    g = u_t[:, 0, :] @ p["wg"]
+    a, b = _gates(p, x1)
+    h = a * cache["h"] + b
+    y = h * jax.nn.gelu(g.astype(jnp.float32), approximate=True)
+    out = y.astype(u_t.dtype) @ p["wout"]
+    return out[:, None, :], {"h": h, "conv": conv_win}
+
+
+# ---------------------------------------------------------------------------
+# sequence-parallel scan (ACiS Type 3 joins the chunks across ranks)
+# ---------------------------------------------------------------------------
+
+def rglru_scan_sp(a: jax.Array, b: jax.Array, axis_name: str) -> jax.Array:
+    """Each rank holds a contiguous T-chunk of (a, b); the cross-rank carry
+    is an exclusive rank-scan of the affine monoid (A, B) ∘ (A', B') =
+    (A·A', A·B' + B) — the look-aside carry walking the network."""
+    from repro.core.ring import rank_prefix_scan
+    from repro.core.types import Monoid
+
+    h_local = _affine_scan(a, b, jnp.zeros((a.shape[0], a.shape[2]),
+                                           jnp.float32))
+    a_prod = jnp.prod(a, axis=1)                    # [B, W]
+    h_last = h_local[:, -1, :]
+
+    affine = Monoid(
+        "affine",
+        lambda lo, hi: (lo[0] * hi[0], hi[0] * lo[1] + hi[1]),
+        lambda s: (jnp.ones(s[0].shape, s[0].dtype),
+                   jnp.zeros(s[1].shape, s[1].dtype)),
+        commutative=False)
+    carry = rank_prefix_scan((a_prod, h_last), axis_name, affine,
+                             exclusive=True)
+    carry_in = carry[1]
+    # h_t (global) = h_t(local, h0=0) + (prod_{s<=t} a_s) * carry_in
+    a_cum = jnp.cumprod(a, axis=1)
+    return h_local + a_cum * carry_in[:, None, :]

@@ -1,0 +1,245 @@
+"""RWKV-6 "Finch" block: WKV6 token mix (data-dependent decay) + channel mix.
+
+Token mix (per head, head dim K = V = 64):
+    token-shift lerp (learned μ per channel) feeds r, k, v, g and the
+    decay LoRA:  w_t = exp(-exp(w0 + tanh(x̄ A) B))  (data-dependent)
+    o_t = WKV(r, k, v, w, u)   — the recurrence of kernels/rwkv6_recurrence
+    out = W_o (groupnorm(o) ⊙ silu(g))
+
+Channel mix:
+    out = sigmoid(W_r x̄r) ⊙ (W_v relu(W_k x̄k)²)
+
+The WKV state S[H, K, V] is the Type 3 look-aside memory of this arch; the
+`wkv_sp` variant chunks the sequence across a mesh axis and joins with the
+cross-rank scan of the (decay-product, state) affine pair — sequence
+parallelism for the 500k cell.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+PyTree = Any
+HEAD = 64
+LORA = 64
+
+
+def init_rwkv6(key, d: int, dtype=jnp.bfloat16) -> PyTree:
+    ks = jax.random.split(key, 12)
+    h = d // HEAD
+    return {
+        "mu": {name: jnp.full((d,), 0.5, jnp.float32)
+               for name in ("r", "k", "v", "g", "w")},
+        "wr": L.dense_init(ks[0], d, d, dtype),
+        "wk": L.dense_init(ks[1], d, d, dtype),
+        "wv": L.dense_init(ks[2], d, d, dtype),
+        "wg": L.dense_init(ks[3], d, d, dtype),
+        "wo": L.dense_init(ks[4], d, d, dtype),
+        "w0": jnp.full((d,), -6.0, jnp.float32),   # base decay (w ≈ 1-2e-3)
+        "w_lora_a": L.dense_init(ks[5], d, LORA, jnp.float32, scale=0.01),
+        "w_lora_b": L.dense_init(ks[6], LORA, d, jnp.float32, scale=0.01),
+        "u": (0.1 * jax.random.normal(ks[7], (h, HEAD), jnp.float32)),
+        "ln_o": L.init_rmsnorm(d),
+    }
+
+
+def _token_shift(x: jax.Array, x_prev: Optional[jax.Array] = None
+                 ) -> jax.Array:
+    """x_{t-1} stream.  x: [B, T, D]; x_prev: [B, D] (decode carry)."""
+    if x_prev is None:
+        return jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1, :]
+    return x_prev[:, None, :]
+
+
+def _mix(mu: jax.Array, x: jax.Array, xs: jax.Array) -> jax.Array:
+    return x + (xs - x) * mu.astype(x.dtype)
+
+
+def _wkv_inputs(p, x, xs):
+    b, t, d = x.shape
+    h = d // HEAD
+    r = _mix(p["mu"]["r"], x, xs) @ p["wr"]
+    k = _mix(p["mu"]["k"], x, xs) @ p["wk"]
+    v = _mix(p["mu"]["v"], x, xs) @ p["wv"]
+    g = _mix(p["mu"]["g"], x, xs) @ p["wg"]
+    # decay LoRA runs in the activation dtype (its cotangents ride the
+    # TP collectives; f32 here doubled the wire — §Perf rwkv6 iteration);
+    # only the exponentials stay f32.
+    xw = _mix(p["mu"]["w"], x, xs)
+    dw = jnp.tanh(xw @ p["w_lora_a"].astype(xw.dtype)) \
+        @ p["w_lora_b"].astype(xw.dtype)
+    w = jnp.exp(-jnp.exp(p["w0"] + dw.astype(jnp.float32)))
+    from repro.sharding.act import shard_act
+    hd = lambda z: shard_act(z.reshape(b, t, h, HEAD), "dp", None, "tp", None)
+    return hd(r), hd(k), hd(v), g, hd(w)
+
+
+def wkv(r, k, v, w, u, s0=None):
+    """Batched multi-head WKV6.  r,k,w: [B,T,H,K], v: [B,T,H,V], u: [H,K].
+
+    Returns (o: [B,T,H,V], s_final: [B,H,K,V]).  lax.scan over T (the
+    oracle semantics of kernels/rwkv6_recurrence; the Pallas kernel is the
+    TPU fast path for serving).
+    """
+    b, t, h, kk = r.shape
+    vv = v.shape[-1]
+    if s0 is None:
+        s0 = jnp.zeros((b, h, kk, vv), jnp.float32)
+
+    def step(s, rkvw):
+        rt, kt, vt, wt = rkvw                       # [B,H,K],[B,H,V]...
+        kv = kt[..., :, None] * vt[..., None, :]    # [B,H,K,V]
+        ot = jnp.einsum("bhkv,bhk->bhv", s + u[:, :, None] * kv, rt)
+        s = wt[..., :, None] * s + kv
+        return s, ot
+
+    xs = jax.tree.map(lambda z: z.swapaxes(0, 1).astype(jnp.float32),
+                      (r, k, v, w))
+    s_final, o = jax.lax.scan(step, s0, xs)
+    return o.swapaxes(0, 1).astype(v.dtype), s_final
+
+
+def wkv_chunked(r, k, v, w, u, *, chunk: int = 32, s0=None,
+                unroll: bool = False):
+    """Chunked-parallel WKV6 — the MXU training path.
+
+    Equivalent to :func:`wkv` (the scan oracle) but processes time in
+    chunks: intra-chunk interactions become masked [C,C] matmuls with
+    per-channel decay factored as q̃_t·k̃_s = (r_t e^{L_{t-1}-L_h})·
+    (k_s e^{L_h-L_s}) (L = cumulative log-decay, shifted by the chunk
+    midpoint L_h so both factors stay within f32 range for |log w|·C/2 ≲
+    80); inter-chunk flows through the carried state S with strictly
+    negative exponents.  Extreme decays (w → 0) need a smaller ``chunk``.
+    """
+    b, t, h, kk = r.shape
+    vv = v.shape[-1]
+    c = min(chunk, t)
+    pad = (-t) % c
+    if pad:
+        zk = jnp.zeros((b, pad, h, kk), jnp.float32)
+        r = jnp.concatenate([r.astype(jnp.float32), zk], 1)
+        k = jnp.concatenate([k.astype(jnp.float32), zk], 1)
+        v = jnp.concatenate([v.astype(jnp.float32),
+                             jnp.zeros((b, pad, h, vv), jnp.float32)], 1)
+        w = jnp.concatenate([w.astype(jnp.float32),
+                             jnp.ones((b, pad, h, kk), jnp.float32)], 1)
+    tp = t + pad
+    nc = tp // c
+
+    def resh(z, dd):
+        return z.astype(jnp.float32).reshape(b, nc, c, h, dd) \
+            .transpose(1, 0, 3, 2, 4)          # [NC, B, H, C, dd]
+
+    rc, kc, vc, wc = resh(r, kk), resh(k, kk), resh(v, vv), resh(w, kk)
+    if s0 is None:
+        s0 = jnp.zeros((b, h, kk, vv), jnp.float32)
+
+    mask_lt = jnp.tril(jnp.ones((c, c), jnp.float32), k=-1)   # s < t
+
+    def per_chunk(S, xs):
+        rr, kk_, vv_, ww = xs                   # [B,H,C,·]
+        lw = jnp.log(jnp.maximum(ww, 1e-30))    # [B,H,C,K]
+        L = jnp.cumsum(lw, axis=2)              # inclusive
+        L_prev = L - lw                         # exclusive (L_{t-1})
+        L_half = L[:, :, c // 2:c // 2 + 1, :]
+        q_in = rr * jnp.exp(L_prev - L_half)    # [B,H,C,K]
+        k_in = kk_ * jnp.exp(L_half - L)
+        A = jnp.einsum("bhtk,bhsk->bhts", q_in, k_in) * mask_lt
+        o = jnp.einsum("bhts,bhsv->bhtv", A, vv_)
+        # diagonal (current-token u-boosted) term
+        o = o + jnp.einsum("bhtk,bhtv->bhtv", rr * u[None, :, None, :] * kk_,
+                           vv_)
+        # inter-chunk: state contribution (exponents <= 0)
+        q_cross = rr * jnp.exp(L_prev)
+        o = o + jnp.einsum("bhtk,bhkv->bhtv", q_cross, S)
+        # state update
+        k_dec = kk_ * jnp.exp(L[:, :, -1:, :] - L)
+        S = jnp.exp(L[:, :, -1, :])[..., None] * S + \
+            jnp.einsum("bhtk,bhtv->bhkv", k_dec, vv_)
+        return S, o
+
+    S, os_ = jax.lax.scan(per_chunk, s0, (rc, kc, vc, wc),
+                          unroll=nc if unroll else 1)
+    o = os_.transpose(1, 0, 3, 2, 4).reshape(b, tp, h, vv)[:, :t]
+    return o.astype(v.dtype), S
+
+
+def rwkv6_token_mix(p: PyTree, x: jax.Array, *,
+                    chunked: bool | None = None, chunk: int = 32,
+                    unroll: bool = False) -> jax.Array:
+    b, t, d = x.shape
+    xs = _token_shift(x)
+    r, k, v, g, w = _wkv_inputs(p, x, xs)
+    use_chunked = chunked if chunked is not None else t >= 64
+    if use_chunked:
+        o, _ = wkv_chunked(r, k, v, w, p["u"], chunk=chunk, unroll=unroll)
+    else:
+        o, _ = wkv(r, k, v, w, p["u"])
+    o = L.rmsnorm(p["ln_o"], o.reshape(b, t, d))
+    return (o * jax.nn.silu(g.astype(o.dtype))) @ p["wo"]
+
+
+def init_channel_mix(key, d: int, f: int, dtype=jnp.bfloat16) -> PyTree:
+    ks = jax.random.split(key, 3)
+    return {
+        "mu": {name: jnp.full((d,), 0.5, jnp.float32) for name in ("k", "r")},
+        "wk": L.dense_init(ks[0], d, f, dtype),
+        "wv": L.dense_init(ks[1], f, d, dtype),
+        "wr": L.dense_init(ks[2], d, d, dtype),
+    }
+
+
+def rwkv6_channel_mix(p: PyTree, x: jax.Array) -> jax.Array:
+    xs = _token_shift(x)
+    kk = jnp.square(jax.nn.relu(_mix(p["mu"]["k"], x, xs) @ p["wk"]))
+    rr = jax.nn.sigmoid((_mix(p["mu"]["r"], x, xs) @ p["wr"])
+                        .astype(jnp.float32)).astype(x.dtype)
+    return rr * (kk @ p["wv"])
+
+
+# ---------------------------------------------------------------------------
+# decode (state caches: WKV state + last-token shifts)
+# ---------------------------------------------------------------------------
+
+def init_rwkv6_cache(batch: int, d: int, dtype=jnp.bfloat16) -> PyTree:
+    h = d // HEAD
+    return {"s": jnp.zeros((batch, h, HEAD, HEAD), jnp.float32),
+            "x_tok": jnp.zeros((batch, d), dtype),
+            "x_ch": jnp.zeros((batch, d), dtype)}
+
+
+def rwkv6_decode(p_tok: PyTree, p_ch: PyTree, x: jax.Array, cache: PyTree,
+                 norm_tok, norm_ch) -> tuple[jax.Array, PyTree]:
+    """One token through token-mix + channel-mix with carried state.
+
+    x: [B, 1, D] (post-embedding); norms applied here to keep the carried
+    pre-norm streams consistent.
+    """
+    b, _, d = x.shape
+    h = d // HEAD
+    xn = norm_tok(x)
+    xs = _token_shift(xn, cache["x_tok"])
+    r, k, v, g, w = _wkv_inputs(p_tok, xn, xs)
+    sq = lambda z: z[:, 0]
+    kv = sq(k)[..., :, None] * sq(v)[..., None, :]
+    o = jnp.einsum("bhkv,bhk->bhv",
+                   cache["s"] + p_tok["u"][:, :, None] * kv,
+                   sq(r).astype(jnp.float32))
+    s_new = sq(w).astype(jnp.float32)[..., :, None] * cache["s"] + kv
+    o = L.rmsnorm(p_tok["ln_o"], o.reshape(b, 1, d).astype(x.dtype))
+    x = x + (o * jax.nn.silu(g.astype(o.dtype))) @ p_tok["wo"]
+
+    xn2 = norm_ch(x)
+    xs2 = _token_shift(xn2, cache["x_ch"])
+    kk = jnp.square(jax.nn.relu(_mix(p_ch["mu"]["k"], xn2, xs2) @ p_ch["wk"]))
+    rr = jax.nn.sigmoid((_mix(p_ch["mu"]["r"], xn2, xs2) @ p_ch["wr"])
+                        .astype(jnp.float32)).astype(x.dtype)
+    x = x + rr * (kk @ p_ch["wv"])
+    new_cache = {"s": s_new, "x_tok": xn[:, 0], "x_ch": xn2[:, 0]}
+    return x, new_cache

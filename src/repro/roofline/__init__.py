@@ -1,0 +1,1 @@
+"""repro.roofline — cost-analysis + HLO collective-bytes roofline model."""

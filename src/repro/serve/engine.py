@@ -1,0 +1,147 @@
+"""Batched serving engine: continuous batching with per-slot positions.
+
+Fixed B decode slots; every slot carries its own position (the decode path
+takes an int32 [B] index vector — cache writes are per-row scatters, masking
+is per-row).  Finished sequences are immediately replaced from the request
+queue; new prompts prefill *inside the running batch*: the new slot steps
+through its prompt tokens while other slots keep generating — one jitted
+decode program for everything, zero recompiles in steady state.
+
+On a real pod the decode program is SPMD over the mesh (cache sharded per
+sharding/rules.py); this driver is the host-side control loop and is
+exercised by tests/test_serving.py and examples/serve_batched.py.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.model import Model
+
+PyTree = Any
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray                 # [t] int32
+    max_new_tokens: int = 16
+    eos: Optional[int] = None
+
+
+@dataclasses.dataclass
+class Completion:
+    rid: int
+    prompt_len: int
+    tokens: list[int]
+
+
+class ServeEngine:
+    def __init__(self, model: Model, params: PyTree, *, slots: int = 4,
+                 max_seq: int = 256):
+        self.model = model
+        self.params = params
+        self.slots = slots
+        self.max_seq = max_seq
+        self.cache = model.init_cache(slots, max_seq)
+
+        # host-side slot state
+        self.rid = np.full(slots, -1, np.int64)
+        self.pos = np.zeros(slots, np.int32)          # next write position
+        self.remaining = np.zeros(slots, np.int32)
+        self.eos = np.full(slots, -1, np.int64)
+        self.prompt: list[Optional[np.ndarray]] = [None] * slots
+        self.prompt_cursor = np.zeros(slots, np.int32)
+        self.generated: list[list[int]] = [[] for _ in range(slots)]
+        self.queue: list[Request] = []
+        self.done: list[Completion] = []
+        self.ticks = 0
+
+        self._decode = jax.jit(
+            lambda p, tok, cache, idx: model.decode_step(p, tok, cache, idx))
+
+    def submit(self, req: Request):
+        assert len(req.prompt) + req.max_new_tokens < self.max_seq
+        self.queue.append(req)
+
+    # -- slot management -------------------------------------------------------
+
+    def _reset_slot_cache(self, s: int):
+        def reset(leaf):
+            if leaf.ndim >= 1 and leaf.shape[0] == self.slots:
+                fill = -1 if leaf.dtype == jnp.int32 and leaf.ndim == 2 \
+                    else 0       # window 'pos' buffers use -1 = invalid
+                return leaf.at[s].set(fill)
+            return leaf
+        self.cache = jax.tree.map(reset, self.cache)
+
+    def _admit(self, s: int, req: Request):
+        self._reset_slot_cache(s)
+        self.rid[s] = req.rid
+        self.pos[s] = 0
+        self.remaining[s] = req.max_new_tokens
+        self.eos[s] = -1 if req.eos is None else req.eos
+        self.prompt[s] = np.asarray(req.prompt, np.int32)
+        self.prompt_cursor[s] = 0
+        self.generated[s] = []
+
+    def _retire(self, s: int):
+        self.done.append(Completion(int(self.rid[s]),
+                                    len(self.prompt[s]),
+                                    self.generated[s]))
+        self.rid[s] = -1
+
+    # -- one engine tick ---------------------------------------------------------
+
+    def step(self) -> int:
+        for s in range(self.slots):
+            if self.rid[s] < 0 and self.queue:
+                self._admit(s, self.queue.pop(0))
+        active = np.flatnonzero(self.rid >= 0)
+        if active.size == 0:
+            return 0
+
+        # token each active slot feeds this tick: next prompt token while
+        # prefilling, else its last generated token
+        tok = np.zeros(self.slots, np.int32)
+        in_prefill = np.zeros(self.slots, bool)
+        for s in active:
+            cur = self.prompt_cursor[s]
+            if cur < len(self.prompt[s]):
+                tok[s] = self.prompt[s][cur]
+                in_prefill[s] = True
+            else:
+                tok[s] = self.generated[s][-1] if self.generated[s] \
+                    else self.prompt[s][-1]
+
+        idx = jnp.asarray(self.pos)
+        lg, self.cache = self._decode(self.params, jnp.asarray(tok),
+                                      self.cache, idx)
+        lg = np.asarray(lg)
+        self.ticks += 1
+
+        for s in active:
+            self.pos[s] += 1
+            if in_prefill[s]:
+                self.prompt_cursor[s] += 1
+                if self.prompt_cursor[s] < len(self.prompt[s]):
+                    continue               # still prefilling
+                # prompt finished: this tick's logits predict token 1
+            nxt = int(lg[s].argmax())
+            self.generated[s].append(nxt)
+            self.remaining[s] -= 1
+            if (self.remaining[s] <= 0 or nxt == self.eos[s]
+                    or self.pos[s] >= self.max_seq - 1):
+                self._retire(s)
+        return int(active.size)
+
+    def run_to_completion(self, max_ticks: int = 100000) -> list[Completion]:
+        for _ in range(max_ticks):
+            if self.step() == 0 and not self.queue:
+                break
+        return sorted(self.done, key=lambda c: c.rid)

@@ -1,0 +1,1 @@
+"""repro.sharding — DP/FSDP/TP/EP partition rules."""

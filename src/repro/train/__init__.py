@@ -1,0 +1,1 @@
+"""repro.train — optimizer, loss, step builders, fault-tolerant loop, PP."""

@@ -1,0 +1,45 @@
+"""Next-token cross-entropy (stable, vocab-parallel-friendly) + z-loss."""
+
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+def cross_entropy(logits: jax.Array, targets: jax.Array, *,
+                  z_loss: float = 1e-4,
+                  mask: Optional[jax.Array] = None
+                  ) -> tuple[jax.Array, dict]:
+    """logits: [B, T, V] (f32), targets: [B, T] int32.
+
+    Works under GSPMD with vocab-sharded logits: logsumexp and the one-hot
+    gather are einsum/reduce ops the partitioner handles with a single
+    small all-reduce over the vocab axis.
+    """
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)                       # [B, T]
+    true_logit = jnp.take_along_axis(
+        logits, targets[..., None], axis=-1)[..., 0]
+    nll = lse - true_logit
+    zl = z_loss * jnp.square(lse)
+    per_tok = nll + zl
+    if mask is None:
+        loss = per_tok.mean()
+        denom = per_tok.size
+    else:
+        m = mask.astype(jnp.float32)
+        denom = jnp.maximum(m.sum(), 1.0)
+        loss = (per_tok * m).sum() / denom
+    metrics = {
+        "nll": (nll if mask is None else nll * mask).mean(),
+        "z_loss": (zl if mask is None else zl * mask).mean(),
+        "accuracy": ((logits.argmax(-1) == targets)
+                     if mask is None else
+                     (logits.argmax(-1) == targets) * mask)
+        .astype(jnp.float32).mean(),
+    }
+    return loss, metrics

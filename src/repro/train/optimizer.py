@@ -1,0 +1,147 @@
+"""Optimizers (from scratch): AdamW and Adafactor, plus LR schedules.
+
+Functional (init_fn, update_fn) pairs over pytrees.  Optimizer state
+inherits the parameter sharding (FSDP×TP) under GSPMD, which is ZeRO-ish by
+construction; Adafactor's factored second moment is the memory-constrained
+choice for the 236-B config (see configs/deepseek_v2_236b.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[PyTree], PyTree]
+    update: Callable[[PyTree, PyTree, PyTree, jax.Array], tuple[PyTree, PyTree]]
+    name: str = "opt"
+
+
+# ---------------------------------------------------------------------------
+# schedules
+# ---------------------------------------------------------------------------
+
+def warmup_cosine(base_lr: float, warmup: int, total: int,
+                  final_frac: float = 0.1) -> Callable[[jax.Array], jax.Array]:
+    def lr(step):
+        step = step.astype(jnp.float32)
+        warm = base_lr * jnp.minimum(1.0, step / max(warmup, 1))
+        prog = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.where(step < warmup, warm, base_lr * cos)
+    return lr
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+def adamw(lr: Callable | float = 1e-3, b1: float = 0.9, b2: float = 0.95,
+          eps: float = 1e-8, weight_decay: float = 0.1,
+          state_dtype=jnp.float32) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: jnp.asarray(lr))
+
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, state_dtype)
+        return {"m": jax.tree.map(zeros, params),
+                "v": jax.tree.map(zeros, params)}
+
+    def update(grads, state, params, step):
+        t = step.astype(jnp.float32) + 1.0
+        lr_t = lr_fn(step)
+        c1 = 1.0 - b1 ** t
+        c2 = 1.0 - b2 ** t
+
+        def upd(g, m, v, p):
+            g = g.astype(jnp.float32)
+            m = (b1 * m.astype(jnp.float32) + (1 - b1) * g)
+            v = (b2 * v.astype(jnp.float32) + (1 - b2) * jnp.square(g))
+            mh, vh = m / c1, v / c2
+            delta = mh / (jnp.sqrt(vh) + eps) + weight_decay * \
+                p.astype(jnp.float32)
+            new_p = p.astype(jnp.float32) - lr_t * delta
+            return new_p.astype(p.dtype), m.astype(state_dtype), \
+                v.astype(state_dtype)
+
+        out = jax.tree.map(upd, grads, state["m"], state["v"], params)
+        leaves = lambda i: jax.tree.map(lambda o: o[i], out,
+                                        is_leaf=lambda o: isinstance(o, tuple))
+        return leaves(0), {"m": leaves(1), "v": leaves(2)}
+
+    return Optimizer(init, update, "adamw")
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (factored second moment; memory-lean for 100B+ params)
+# ---------------------------------------------------------------------------
+
+def adafactor(lr: Callable | float = 1e-2, decay: float = 0.8,
+              eps: float = 1e-30, clip_threshold: float = 1.0,
+              weight_decay: float = 0.0) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: jnp.asarray(lr))
+
+    def _factored(shape) -> bool:
+        return len(shape) >= 2
+
+    def init(params):
+        def per(p):
+            if _factored(p.shape):
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:],
+                                        jnp.float32)}
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+        return {"f": jax.tree.map(per, params)}
+
+    def update(grads, state, params, step):
+        t = step.astype(jnp.float32) + 1.0
+        beta = 1.0 - t ** (-decay)
+        lr_t = lr_fn(step)
+
+        def upd(g, st, p):
+            g = g.astype(jnp.float32)
+            g2 = jnp.square(g) + eps
+            if _factored(p.shape):
+                vr = beta * st["vr"] + (1 - beta) * g2.mean(axis=-1)
+                vc = beta * st["vc"] + (1 - beta) * g2.mean(axis=-2)
+                denom = (vr[..., None] * vc[..., None, :]
+                         / jnp.maximum(vr.mean(axis=-1,
+                                               keepdims=True)[..., None],
+                                       eps))
+                pre = g * jax.lax.rsqrt(denom + eps)
+                new_st = {"vr": vr, "vc": vc}
+            else:
+                v = beta * st["v"] + (1 - beta) * g2
+                pre = g * jax.lax.rsqrt(v + eps)
+                new_st = {"v": v}
+            # update clipping (RMS)
+            rms = jnp.sqrt(jnp.mean(jnp.square(pre)) + 1e-12)
+            pre = pre / jnp.maximum(1.0, rms / clip_threshold)
+            new_p = p.astype(jnp.float32) - lr_t * (
+                pre + weight_decay * p.astype(jnp.float32))
+            return new_p.astype(p.dtype), new_st
+
+        out = jax.tree_util.tree_map(
+            upd, grads, state["f"], params,
+            is_leaf=lambda x: isinstance(x, dict) and ("v" in x or "vr" in x))
+        new_params = jax.tree.map(lambda o: o[0], out,
+                                  is_leaf=lambda o: isinstance(o, tuple))
+        new_f = jax.tree.map(lambda o: o[1], out,
+                             is_leaf=lambda o: isinstance(o, tuple))
+        return new_params, {"f": new_f}
+
+    return Optimizer(init, update, "adafactor")
+
+
+def make_optimizer(name: str, lr=None, total_steps: int = 10000) -> Optimizer:
+    if name == "adamw":
+        return adamw(lr or warmup_cosine(3e-4, 200, total_steps))
+    if name == "adafactor":
+        return adafactor(lr or warmup_cosine(1e-2, 200, total_steps))
+    raise ValueError(f"unknown optimizer {name!r}")

@@ -1,0 +1,145 @@
+"""Per-architecture smoke tests: reduced configs, one forward + one decode
+step on CPU, asserting shapes and finiteness.  (Deliverable f.)"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import Model
+
+ARCHS = configs.names()
+
+
+def _tokens(rng, cfg, b=2, t=16):
+    return jnp.asarray(rng.integers(0, cfg.vocab, (b, t)), jnp.int32)
+
+
+def _context(rng, model, b):
+    spec = model.context_inputs(b)
+    if spec is None:
+        return None
+    return jnp.asarray(rng.standard_normal(spec.shape), spec.dtype)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_forward(arch, rng):
+    cfg = configs.get_smoke(arch)
+    model = Model(cfg)
+    params = model.init(jax.random.key(0))
+    toks = _tokens(rng, cfg)
+    ctx = _context(rng, model, 2)
+    hidden, aux = jax.jit(
+        lambda p, t, c: model.forward(p, t, context=c))(params, toks, ctx)
+    assert hidden.shape == (2, 16, cfg.d_model)
+    assert np.all(np.isfinite(np.asarray(hidden, np.float32)))
+    lg = model.logits(params, hidden)
+    assert lg.shape == (2, 16, cfg.vocab)
+    assert np.all(np.isfinite(np.asarray(lg)))
+    assert np.isfinite(float(aux))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_train_step_loss_decreases(arch, rng):
+    """One SGD step on repeated data must reduce next-token loss."""
+    cfg = configs.get_smoke(arch)
+    model = Model(cfg)
+    params = model.init(jax.random.key(1))
+    toks = _tokens(rng, cfg, b=2, t=8)
+    ctx = _context(rng, model, 2)
+
+    def loss_fn(p):
+        h, aux = model.forward(p, toks[:, :-1], context=ctx)
+        lg = model.logits(p, h)
+        tgt = toks[:, 1:]
+        ll = jax.nn.log_softmax(lg, axis=-1)
+        nll = -jnp.take_along_axis(ll, tgt[..., None], axis=-1).mean()
+        return nll + aux
+
+    g = jax.jit(jax.grad(loss_fn))(params)
+    l0 = float(jax.jit(loss_fn)(params))
+    params2 = jax.tree.map(
+        lambda p, gg: (p.astype(jnp.float32) - 0.5 * gg.astype(jnp.float32))
+        .astype(p.dtype), params, g)
+    l1 = float(jax.jit(loss_fn)(params2))
+    assert np.isfinite(l0) and np.isfinite(l1)
+    assert l1 < l0, f"{arch}: loss did not decrease ({l0} -> {l1})"
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_decode_matches_forward(arch, rng):
+    """Prefill+decode must agree with the teacher-forced forward pass.
+
+    Params are cast to f32 so the check is about *semantics* (cache
+    handling, masking, state carries) rather than bf16 rounding noise
+    between batched and sequential execution orders."""
+    cfg = configs.get_smoke(arch)
+    model = Model(cfg)
+    params = jax.tree.map(
+        lambda p: p.astype(jnp.float32) if p.dtype == jnp.bfloat16 else p,
+        model.init(jax.random.key(2)))
+    b, t = 2, 8
+    toks = _tokens(rng, cfg, b=b, t=t)
+    ctx = _context(rng, model, b)
+    if ctx is not None:
+        ctx = ctx.astype(jnp.float32)
+
+    # teacher-forced logits at the last position
+    h, _ = model.forward(params, toks, context=ctx)
+    lg_fwd = np.asarray(model.logits(params, h))[:, -1, :]
+
+    cache = jax.tree.map(
+        lambda c: c.astype(jnp.float32) if c.dtype == jnp.bfloat16 else c,
+        model.init_cache(b, 32))
+    lg_pre, cache = jax.jit(
+        lambda p, tk, c, cx: model.prefill(p, tk, c, context=cx)
+    )(params, toks, cache, ctx)
+    np.testing.assert_allclose(np.asarray(lg_pre), lg_fwd, rtol=2e-2,
+                               atol=2e-2)
+
+    # one more decode step == forward over t+1 tokens
+    nxt = jnp.asarray(rng.integers(0, cfg.vocab, (b,)), jnp.int32)
+    lg_dec, _ = jax.jit(
+        lambda p, tok, c, cx: model.decode_step(p, tok, c, t, context=cx)
+    )(params, nxt, cache, ctx)
+    toks2 = jnp.concatenate([toks, nxt[:, None]], axis=1)
+    h2, _ = model.forward(params, toks2, context=ctx)
+    lg_fwd2 = np.asarray(model.logits(params, h2))[:, -1, :]
+    np.testing.assert_allclose(np.asarray(lg_dec), lg_fwd2, rtol=2e-2,
+                               atol=2e-2)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_param_count_analytic_vs_actual(arch):
+    """config.param_count() must track the real init within 10%."""
+    cfg = configs.get_smoke(arch)
+    model = Model(cfg)
+    shapes = model.param_shapes()
+    actual = sum(int(np.prod(l.shape)) for l in jax.tree.leaves(shapes))
+    est = cfg.param_count()
+    assert abs(est - actual) / actual < 0.35, (est, actual)
+
+
+def test_full_configs_param_counts():
+    """Full configs match their published parameter classes."""
+    expect = {
+        "nemotron-4-15b": (15e9, 0.25),
+        "granite-8b": (8e9, 0.25),
+        "qwen3-8b": (8e9, 0.30),
+        "granite-3-8b": (8e9, 0.30),
+        "qwen2-moe-a2.7b": (14.3e9, 0.30),   # total (not active) params
+        "deepseek-v2-236b": (236e9, 0.25),
+        "recurrentgemma-9b": (9e9, 0.35),
+        "rwkv6-1.6b": (1.6e9, 0.35),
+        "whisper-small": (0.24e9, 0.45),
+        "llama-3.2-vision-11b": (10.6e9, 0.30),
+    }
+    for arch, (target, tol) in expect.items():
+        n = configs.get(arch).param_count()
+        assert abs(n - target) / target < tol, (arch, n, target)
+
+
+def test_moe_active_params_smaller_than_total():
+    cfg = configs.get("deepseek-v2-236b")
+    assert cfg.active_param_count() < 0.2 * cfg.param_count()

@@ -1,0 +1,179 @@
+"""Type 1/2 collectives, wire codecs, and backend parity (8 devices)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.core import collectives
+from repro.core.types import ADD, MAX, ARGMAX_WITH_PAYLOAD, WELFORD
+from repro.core.wire import BF16, FP8, IDENTITY, int8_codec, quantize_int8, \
+    dequantize_int8
+
+N = 8
+
+
+def smap(fn, mesh, in_specs, out_specs):
+    return jax.jit(jax.shard_map(fn, mesh=mesh, in_specs=in_specs,
+                                 out_specs=out_specs, check_vma=False))
+
+
+# ---------------------------------------------------------------------------
+# backend parity: acis must equal xla on the Type 1 subset
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("op,monoid", [("psum", ADD), ("pmax", MAX)])
+def test_backend_parity_allreduce(mesh8, rng, op, monoid):
+    x = rng.standard_normal((N, 17)).astype(np.float32)
+
+    def acis(xl):
+        return collectives.all_reduce(xl[0], "data", monoid,
+                                      backend="acis")[None]
+
+    def xla(xl):
+        return collectives.all_reduce(xl[0], "data", monoid,
+                                      backend="xla")[None]
+
+    a = np.asarray(smap(acis, mesh8, P("data", None), P("data", None))(
+        jnp.asarray(x)))
+    b = np.asarray(smap(xla, mesh8, P("data", None), P("data", None))(
+        jnp.asarray(x)))
+    np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-5)
+
+
+def test_xla_backend_rejects_user_defined_ops(mesh8):
+    """The Type 1 fixed-function limitation, reified as an error."""
+    with pytest.raises(ValueError, match="Type 1 fixed-op limitation"):
+        def f(xl):
+            return collectives.all_reduce(xl, "data", WELFORD, backend="xla")
+        jax.shard_map(f, mesh=mesh8, in_specs=P("data"), out_specs=P("data"),
+                      check_vma=False)(jnp.ones((8, 3, 3)))
+
+
+# ---------------------------------------------------------------------------
+# Type 2: user-defined monoids over user-defined datatypes
+# ---------------------------------------------------------------------------
+
+def test_allreduce_argmax_with_payload(mesh8, rng):
+    vals = rng.standard_normal((N, 12)).astype(np.float32)
+    payload = rng.standard_normal((N, 12)).astype(np.float32)
+
+    def f(v, p):
+        out_v, out_p = collectives.all_reduce(
+            (v[0], p[0]), "data", ARGMAX_WITH_PAYLOAD, backend="acis",
+            latency_optimal=True)
+        return out_v[None], out_p[None]
+
+    ov, op_ = smap(f, mesh8, (P("data", None), P("data", None)),
+                   (P("data", None), P("data", None)))(
+        jnp.asarray(vals), jnp.asarray(payload))
+    winner = vals.argmax(axis=0)
+    np.testing.assert_allclose(np.asarray(ov)[0], vals.max(axis=0), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(op_)[0],
+                               payload[winner, np.arange(12)], rtol=1e-6)
+
+
+def test_allreduce_welford_variance(mesh8, rng):
+    """Type 2 'matrix/stateful datatype': distributed mean/var in one pass."""
+    data = rng.standard_normal((N, 64)).astype(np.float32)
+
+    def f(xl):
+        x = xl[0]
+        n0 = jnp.full(x.shape, 1.0, jnp.float32)
+        m0 = x
+        s0 = jnp.zeros_like(x)
+        n, m, s = collectives.all_reduce(
+            (n0, m0, s0), "data", WELFORD, backend="acis",
+            latency_optimal=True)
+        return (m[None], (s / n)[None])
+
+    m, var = smap(f, mesh8, P("data", None),
+                  (P("data", None), P("data", None)))(jnp.asarray(data))
+    np.testing.assert_allclose(np.asarray(m)[0], data.mean(axis=0),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(var)[0], data.var(axis=0),
+                               rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# wire codecs (Type 0 / Type 2 wire dtypes)
+# ---------------------------------------------------------------------------
+
+def test_quantize_roundtrip(rng):
+    x = rng.standard_normal(1000).astype(np.float32) * 3.0
+    q, s, size = quantize_int8(jnp.asarray(x))
+    y = np.asarray(dequantize_int8(q, s, size))
+    assert y.shape == x.shape
+    np.testing.assert_allclose(y, x, atol=3.5 * np.abs(x).max() / 127)
+
+
+@pytest.mark.parametrize("codec", [BF16, FP8])
+def test_cast_codec_allreduce(mesh8, rng, codec):
+    x = (rng.standard_normal((N, 32)) * 0.1).astype(np.float32)
+
+    def f(xl):
+        return collectives.all_reduce(xl[0], "data", ADD, codec=codec)[None]
+
+    out = np.asarray(smap(f, mesh8, P("data", None), P("data", None))(
+        jnp.asarray(x)))
+    want = x.sum(axis=0)
+    tol = 0.05 if codec is BF16 else 0.4
+    np.testing.assert_allclose(out[0], want, atol=tol)
+
+
+def test_int8_codec_allreduce_encoded_domain(mesh8, rng):
+    """Per-hop dequant-add-requant (the in-switch aggregation program)."""
+    x = rng.standard_normal((N, 512)).astype(np.float32)
+
+    def f(xl):
+        return collectives.all_reduce(xl[0], "data", ADD,
+                                      codec=int8_codec())[None]
+
+    out = np.asarray(smap(f, mesh8, P("data", None), P("data", None))(
+        jnp.asarray(x)))
+    want = x.sum(axis=0)
+    # lossy: blockwise int8 at every hop; error bounded by hop count * lsb
+    scale = np.abs(x).max() / 127
+    assert np.max(np.abs(out[0] - want)) < scale * N * 2.5
+    # all ranks agree exactly (deterministic ring)
+    for i in range(1, N):
+        np.testing.assert_array_equal(out[i], out[0])
+
+
+def test_wire_ratio_accounting():
+    assert BF16.wire_ratio == 0.5
+    assert FP8.wire_ratio == 0.25
+    c = int8_codec(256)
+    assert abs(c.wire_ratio - (1 + 4 / 256) / 4) < 1e-9
+
+
+# ---------------------------------------------------------------------------
+# prefix scan public API & alltoall backends
+# ---------------------------------------------------------------------------
+
+def test_prefix_scan_matches_numpy(mesh8, rng):
+    x = rng.standard_normal((N, 7)).astype(np.float32)
+
+    def f(xl):
+        return collectives.prefix_scan(xl[0], "data", ADD)[None]
+
+    out = np.asarray(smap(f, mesh8, P("data", None), P("data", None))(
+        jnp.asarray(x)))
+    np.testing.assert_allclose(out, np.cumsum(x, axis=0), rtol=1e-5,
+                               atol=1e-5)
+
+
+@pytest.mark.parametrize("backend", ["acis", "xla"])
+def test_all_to_all_backends(mesh8, rng, backend):
+    chunk = 2
+    x = rng.standard_normal((N, N * chunk)).astype(np.float32)
+
+    def f(xl):
+        return collectives.all_to_all(xl[0], "data", backend=backend)[None]
+
+    out = np.asarray(smap(f, mesh8, P("data", None), P("data", None))(
+        jnp.asarray(x)))
+    xs = x.reshape(N, N, chunk)
+    want = np.swapaxes(xs, 0, 1).reshape(N, N * chunk)
+    np.testing.assert_allclose(out, want, rtol=1e-6, atol=1e-6)

@@ -1,0 +1,151 @@
+"""Type 4 fused collectives: fused == unfused semantics (8 devices)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.core import fused
+
+N = 8
+
+
+def smap(fn, mesh, in_specs, out_specs):
+    return jax.jit(jax.shard_map(fn, mesh=mesh, in_specs=in_specs,
+                                 out_specs=out_specs, check_vma=False))
+
+
+def test_allgather_op_allgather_fused_equals_baseline(mesh8, rng):
+    x = rng.standard_normal((N * 16,)).astype(np.float32)
+
+    def fzd(xl):
+        return fused.allgather_op_allgather(xl, "data")
+
+    def base(xl):
+        return fused.allgather_op_allgather_baseline(xl, "data")
+
+    # fused output is replicated content: every rank's slice of the gathered
+    # result equals the full prefix sum
+    a = np.asarray(smap(fzd, mesh8, P("data"), P(None))(jnp.asarray(x)))
+    b = np.asarray(smap(base, mesh8, P("data"), P(None))(jnp.asarray(x)))
+    want = np.cumsum(x)
+    np.testing.assert_allclose(a, want, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(b, want, rtol=1e-4, atol=1e-4)
+
+
+def test_fused_allreduce_alltoall(mesh8, rng):
+    hist = rng.integers(0, 10, (N, 32)).astype(np.float32)
+    keys = rng.standard_normal((N, N * 4)).astype(np.float32)
+
+    def fzd(h, k):
+        hh, kk = fused.fused_allreduce_alltoall(h[0], k[0], "data")
+        return hh[None], kk[None]
+
+    def base(h, k):
+        hh, kk = fused.allreduce_alltoall_baseline(h[0], k[0], "data")
+        return hh[None], kk[None]
+
+    spec = (P("data", None), P("data", None))
+    ha, ka = smap(fzd, mesh8, spec, spec)(jnp.asarray(hist), jnp.asarray(keys))
+    hb, kb = smap(base, mesh8, spec, spec)(jnp.asarray(hist), jnp.asarray(keys))
+    np.testing.assert_allclose(np.asarray(ha), np.asarray(hb), rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(ka), np.asarray(kb), rtol=1e-6)
+    # oracle
+    np.testing.assert_allclose(np.asarray(ha)[0], hist.sum(0), rtol=1e-5)
+
+
+def test_map_reduce_scatter(mesh8, rng):
+    x = rng.standard_normal((N, N * 8)).astype(np.float32)
+
+    def f(xl):
+        return fused.map_reduce_scatter(xl[0], "data", jnp.square)[None]
+
+    out = np.asarray(smap(f, mesh8, P("data", None), P("data", None))(
+        jnp.asarray(x)))
+    want = np.square(x).sum(axis=0)
+    got = out.reshape(-1)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_allgather_map_applied_in_flight(mesh8, rng):
+    x = rng.standard_normal((N, 4)).astype(np.float32)
+
+    def f(xl):
+        return fused.allgather_map(xl[0], "data", lambda c: c * 3.0)[None]
+
+    out = np.asarray(smap(f, mesh8, P("data", None), P("data", None))(
+        jnp.asarray(x)))
+    want = (3.0 * x).reshape(-1)
+    for i in range(N):
+        np.testing.assert_allclose(out[i], want, rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# collective matmul
+# ---------------------------------------------------------------------------
+
+def test_allgather_matmul_overlapped_equals_baseline(mesh_dm, rng):
+    # mesh_dm: data=2, model=4; operate over 'model'
+    m_loc, k, n_loc = 6, 16, 8
+    nm = 4
+    x = rng.standard_normal((nm * m_loc, k)).astype(np.float32)
+    w = rng.standard_normal((k, nm * n_loc)).astype(np.float32)
+
+    def fzd(xl, wl):
+        return fused.allgather_matmul(xl, wl, "model")
+
+    def base(xl, wl):
+        return fused.allgather_matmul_baseline(xl, wl, "model")
+
+    in_specs = (P("model", None), P(None, "model"))
+    a = np.asarray(smap(fzd, mesh_dm, in_specs, P(None, "model"))(
+        jnp.asarray(x), jnp.asarray(w)))
+    b = np.asarray(smap(base, mesh_dm, in_specs, P(None, "model"))(
+        jnp.asarray(x), jnp.asarray(w)))
+    np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(a, x @ w, rtol=1e-4, atol=1e-4)
+
+
+def test_matmul_reduce_scatter_overlapped_equals_baseline(mesh_dm, rng):
+    m, k_loc, n_cols = 6, 8, 32
+    nm = 4
+    x = rng.standard_normal((m, nm * k_loc)).astype(np.float32)
+    w = rng.standard_normal((nm * k_loc, n_cols)).astype(np.float32)
+
+    def fzd(xl, wl):
+        return fused.matmul_reduce_scatter(xl, wl, "model")
+
+    def base(xl, wl):
+        return fused.matmul_reduce_scatter_baseline(xl, wl, "model")
+
+    in_specs = (P(None, "model"), P("model", None))
+    a = np.asarray(smap(fzd, mesh_dm, in_specs, P(None, "model"))(
+        jnp.asarray(x), jnp.asarray(w)))
+    b = np.asarray(smap(base, mesh_dm, in_specs, P(None, "model"))(
+        jnp.asarray(x), jnp.asarray(w)))
+    np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(a, x @ w, rtol=1e-4, atol=1e-4)
+
+
+def test_collective_matmul_differentiable(mesh_dm, rng):
+    """The fused matmul must be trainable (grads flow through ppermute)."""
+    m_loc, k, n_loc = 4, 8, 4
+    x = jnp.asarray(rng.standard_normal((4 * m_loc, k)).astype(np.float32))
+    w = jnp.asarray(rng.standard_normal((k, 4 * n_loc)).astype(np.float32))
+
+    def loss(w):
+        def f(xl, wl):
+            y = fused.allgather_matmul(xl, wl, "model")
+            return jnp.sum(y ** 2).reshape(1)
+        part = jax.shard_map(f, mesh=mesh_dm,
+                             in_specs=(P("model", None), P(None, "model")),
+                             out_specs=P("model"), check_vma=False)
+        return part(x, w).sum()
+
+    g = jax.grad(loss)(w)
+    # oracle: d/dw sum((xw)^2) = 2 x^T (x w); shard_map sums partials over
+    # the 4 model ranks (each computes the full loss over its column shard)
+    want = 2 * x.T @ (x @ w)
+    np.testing.assert_allclose(np.asarray(g), np.asarray(want) * 4.0 / 4.0,
+                               rtol=1e-3, atol=1e-3)

@@ -1,0 +1,198 @@
+"""Ring/log-step schedule correctness vs numpy oracles (8 devices)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.core import ring
+from repro.core.types import ADD, MAX, MIN, Monoid
+
+N = 8
+
+
+def smap(fn, mesh, in_specs, out_specs):
+    return jax.jit(jax.shard_map(fn, mesh=mesh, in_specs=in_specs,
+                                 out_specs=out_specs, check_vma=False))
+
+
+# ---------------------------------------------------------------------------
+# reduce-scatter
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("monoid", [ADD, MAX, MIN])
+def test_ring_reduce_scatter_matches_oracle(mesh8, rng, monoid):
+    # global x: [N, N*chunk] -> per-rank rows; RS over flattened rows
+    chunk = 16
+    x = rng.standard_normal((N, N * chunk)).astype(np.float32)
+
+    def f(xl):  # xl: [1, N*chunk]
+        return ring.ring_reduce_scatter(xl[0], "data", monoid)[None]
+
+    out = smap(f, mesh8, P("data", None), P("data", None))(jnp.asarray(x))
+    out = np.asarray(out)  # [N, chunk]
+
+    red = {"add": np.sum, "max": np.max, "min": np.min}[monoid.name](x, axis=0)
+    for i in range(N):
+        np.testing.assert_allclose(out[i], red[i * chunk:(i + 1) * chunk],
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_ring_reduce_scatter_matches_psum_scatter(mesh8, rng):
+    chunk = 8
+    x = rng.standard_normal((N, N * chunk)).astype(np.float32)
+
+    def ours(xl):
+        return ring.ring_reduce_scatter(xl[0], "data", ADD)[None]
+
+    def xla(xl):
+        return jax.lax.psum_scatter(xl[0], "data", tiled=True)[None]
+
+    a = smap(ours, mesh8, P("data", None), P("data", None))(jnp.asarray(x))
+    b = smap(xla, mesh8, P("data", None), P("data", None))(jnp.asarray(x))
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5,
+                               atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# all-gather / all-reduce
+# ---------------------------------------------------------------------------
+
+def test_ring_all_gather(mesh8, rng):
+    x = rng.standard_normal((N, 4, 3)).astype(np.float32)
+
+    def f(xl):
+        return ring.ring_all_gather(xl[0], "data")[None]
+
+    out = np.asarray(smap(f, mesh8, P("data", None, None),
+                          P("data", None, None))(jnp.asarray(x)))
+    want = x.reshape(N * 4, 3)
+    for i in range(N):
+        np.testing.assert_allclose(out[i], want, rtol=1e-6, atol=1e-6)
+
+
+def test_ring_all_gather_hop_map_applied_once(mesh8, rng):
+    """The in-flight map must be applied exactly once per chunk."""
+    x = rng.standard_normal((N, 4)).astype(np.float32)
+
+    def f(xl):
+        return ring.ring_all_gather(xl[0], "data",
+                                    hop_map=lambda c: 2.0 * c + 1.0)[None]
+
+    out = np.asarray(smap(f, mesh8, P("data", None),
+                          P("data", None))(jnp.asarray(x)))
+    want = (2.0 * x + 1.0).reshape(-1)
+    for i in range(N):
+        np.testing.assert_allclose(out[i], want, rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("latency_optimal", [False, True])
+@pytest.mark.parametrize("shape", [(33,), (8, 5), (128,)])
+def test_ring_all_reduce(mesh8, rng, latency_optimal, shape):
+    x = rng.standard_normal((N,) + shape).astype(np.float32)
+
+    def f(xl):
+        return ring.ring_all_reduce(xl[0], "data", ADD,
+                                    latency_optimal=latency_optimal)[None]
+
+    spec = P("data", *([None] * len(shape)))
+    out = np.asarray(smap(f, mesh8, spec, spec)(jnp.asarray(x)))
+    want = x.sum(axis=0)
+    for i in range(N):
+        np.testing.assert_allclose(out[i], want, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# broadcast
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("root", [0, 3, 7])
+@pytest.mark.parametrize("kind", ["ring", "tree"])
+def test_broadcast(mesh8, rng, root, kind):
+    x = rng.standard_normal((N, 6)).astype(np.float32)
+    fn = ring.ring_broadcast if kind == "ring" else ring.tree_broadcast
+
+    def f(xl):
+        return fn(xl[0], "data", root)[None]
+
+    out = np.asarray(smap(f, mesh8, P("data", None),
+                          P("data", None))(jnp.asarray(x)))
+    for i in range(N):
+        np.testing.assert_allclose(out[i], x[root], rtol=1e-6, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# rank prefix scan (Type 3 carry)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("exclusive", [False, True])
+def test_rank_prefix_scan_add(mesh8, rng, exclusive):
+    x = rng.standard_normal((N, 5)).astype(np.float32)
+
+    def f(xl):
+        return ring.rank_prefix_scan(xl[0], "data", ADD,
+                                     exclusive=exclusive)[None]
+
+    out = np.asarray(smap(f, mesh8, P("data", None),
+                          P("data", None))(jnp.asarray(x)))
+    inc = np.cumsum(x, axis=0)
+    want = np.concatenate([np.zeros((1, 5), np.float32), inc[:-1]]) \
+        if exclusive else inc
+    np.testing.assert_allclose(out, want, rtol=1e-5, atol=1e-5)
+
+
+def test_rank_prefix_scan_noncommutative(mesh8):
+    """Matrix-product scan: order across ranks must be respected."""
+    rng = np.random.default_rng(1)
+    x = (np.eye(3, dtype=np.float32)[None].repeat(N, 0)
+         + 0.1 * rng.standard_normal((N, 3, 3)).astype(np.float32))
+    matmul = Monoid("matmul", lambda a, b: a @ b,
+                    lambda s: jnp.broadcast_to(jnp.eye(3, dtype=s.dtype),
+                                               s.shape), commutative=False)
+
+    def f(xl):
+        return ring.rank_prefix_scan(xl[0], "data", matmul)[None]
+
+    out = np.asarray(smap(f, mesh8, P("data", None, None),
+                          P("data", None, None))(jnp.asarray(x)))
+    acc = np.eye(3, dtype=np.float32)
+    for i in range(N):
+        # combine(shifted_from_lower_rank, local) => prefix in rank order
+        acc = acc @ x[i]
+        np.testing.assert_allclose(out[i], acc, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# all-to-all
+# ---------------------------------------------------------------------------
+
+def test_ring_all_to_all(mesh8, rng):
+    chunk = 3
+    x = rng.standard_normal((N, N * chunk, 2)).astype(np.float32)
+
+    def f(xl):
+        return ring.ring_all_to_all(xl[0], "data")[None]
+
+    out = np.asarray(smap(f, mesh8, P("data", None, None),
+                          P("data", None, None))(jnp.asarray(x)))
+    xs = x.reshape(N, N, chunk, 2)
+    want = np.swapaxes(xs, 0, 1)  # out[i][j] = xs[j][i]
+    np.testing.assert_allclose(out, want.reshape(N, N * chunk, 2),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_axis_size_one_degenerates():
+    mesh1 = jax.make_mesh((1,), ("data",),
+                          axis_types=(jax.sharding.AxisType.Auto,))
+    x = jnp.arange(8.0)
+
+    def f(xl):
+        a = ring.ring_all_reduce(xl, "data")
+        b = ring.ring_all_gather(xl, "data")
+        c = ring.rank_prefix_scan(xl, "data")
+        return a + b + c
+
+    out = jax.shard_map(f, mesh=mesh1, in_specs=P("data"),
+                        out_specs=P("data"), check_vma=False)(x)
+    np.testing.assert_allclose(np.asarray(out), 3 * np.arange(8.0))

@@ -1,0 +1,113 @@
+"""Launch-path coverage at test scale: cell building, probe composition,
+roofline parsing, shape applicability."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch import cells, shapes
+from repro.roofline import analysis
+
+
+def test_shape_matrix_counts():
+    all_cells = shapes.all_cells()
+    assert len(all_cells) == 40                      # 10 archs × 4 shapes
+    runnable = shapes.runnable_cells()
+    assert len(runnable) == 32                       # 8 long_500k skips
+    skipped = set(all_cells) - set(runnable)
+    assert all(s == "long_500k" for _, s in skipped)
+    ok, reason = shapes.applicable("nemotron-4-15b", "long_500k")
+    assert not ok and "full-attention" in reason
+    assert shapes.applicable("rwkv6-1.6b", "long_500k")[0]
+    assert shapes.applicable("recurrentgemma-9b", "long_500k")[0]
+
+
+def test_input_specs_every_cell():
+    """input_specs builds ShapeDtypeStructs for all 40 nominal cells."""
+    for arch, shape in shapes.all_cells():
+        ins = cells.input_specs(arch, shape)
+        for leaf in jax.tree.leaves(ins):
+            assert isinstance(leaf, jax.ShapeDtypeStruct)
+        cell = shapes.SHAPES[shape]
+        if cell.kind == "train":
+            assert ins["tokens"].shape == (cell.global_batch,
+                                           cell.seq_len + 1)
+        elif cell.kind == "decode":
+            assert ins["token"].shape == (cell.global_batch,)
+            assert "cache" in ins
+
+
+def test_probe_composition_exact():
+    """The linear solver recovers a synthetic P(p,m) exactly."""
+    O, E, Lmb, Lstep = 7.0, 3.0, 2.0, 5.0
+
+    def P(p, m):
+        return O + m * E + p * (m * Lmb + Lstep)
+
+    costs = {(1, 1): {"x": P(1, 1)}, (2, 1): {"x": P(2, 1)},
+             (1, 2): {"x": P(1, 2)}, (2, 2): {"x": P(2, 2)}}
+    got = cells.compose_probe_costs(costs, n_periods=24, mb_cell=8,
+                                    kind="train")
+    assert abs(got["x"] - P(24, 8)) < 1e-9
+    got2 = cells.compose_probe_costs(
+        {(1, 1): {"x": O + Lstep}, (2, 1): {"x": O + 2 * Lstep}},
+        n_periods=24, mb_cell=1, kind="prefill")
+    assert abs(got2["x"] - (O + 24 * Lstep)) < 1e-9
+
+
+def test_collective_bytes_parser():
+    hlo = """
+  %all-reduce.1 = f32[16,128]{1,0} all-reduce(%x), replica_groups={}
+  %ag = (bf16[4,256]{1,0}, bf16[4,256]{1,0}) all-gather-start(%a, %b)
+  %agd = bf16[4,256]{1,0} all-gather-done(%ag)
+  %p = f32[8]{0} collective-permute(%y), source_target_pairs={{0,1}}
+  %ignore = f32[999]{0} add(%p, %p)
+"""
+    out = analysis.collective_bytes(hlo)
+    assert out["bytes"]["all-reduce"] == 16 * 128 * 4
+    assert out["bytes"]["all-gather"] == 2 * 4 * 256 * 2  # start only
+    assert out["bytes"]["collective-permute"] == 32
+    assert out["counts"]["all-reduce"] == 1
+
+
+def test_build_and_compile_smallest_cell(devices):
+    """End-to-end lower+compile of a real cell on the 8-device test mesh
+    (2×4 'data'×'model') — the same machinery the 512-chip dry-run uses."""
+    mesh = jax.make_mesh((2, 4), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    # shrink the shape cell so the test compiles in seconds
+    small = shapes.ShapeCell("train_4k", 128, 8, "train")
+    built = cells._build_with_cell(
+        "rwkv6-1.6b", "train_4k", small, mesh,
+        {"n_layers": 2, "scan_layers": False, "analysis_unroll": True,
+         "attn_chunk": 128, "wkv_chunk": 64}, 2)
+    compiled = built.lowered.compile()
+    cost = compiled.cost_analysis()
+    assert float(cost.get("flops", 0)) > 0
+    roof = analysis.analyze(built, compiled)
+    assert roof.t_compute > 0 and roof.bottleneck in (
+        "compute", "memory", "collective")
+
+
+def test_roofline_terms_math():
+    r = analysis.Roofline(arch="x", shape="train_4k", mesh="16dx16m",
+                          chips=256, flops=197e12, hbm_bytes=819e9,
+                          coll_bytes=50e9, coll_detail={},
+                          model_flops=197e12 * 256)
+    assert abs(r.t_compute - 1.0) < 1e-9
+    assert abs(r.t_memory - 1.0) < 1e-9
+    assert abs(r.t_collective - 1.0) < 1e-9
+    assert abs(r.useful_flops_ratio - 1.0) < 1e-9
+    assert abs(r.roofline_fraction - 1.0) < 1e-9
+
+
+def test_pure_dp_parallelism_specs(mesh_dm):
+    from repro.sharding import rules
+    shapes_t = {"layers": {"pos0_self": {"attn": {
+        "wq": jax.ShapeDtypeStruct((2, 64, 64), jnp.bfloat16)}}}}
+    tp = jax.tree.leaves(rules.param_specs(shapes_t, mesh_dm))[0]
+    dp = jax.tree.leaves(rules.param_specs(shapes_t, mesh_dm,
+                                           "pure_dp"))[0]
+    assert "model" in str(tp) and "model" not in str(dp)
+    assert rules.dp_axes(mesh_dm, "pure_dp") == ("data", "model")

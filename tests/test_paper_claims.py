@@ -1,0 +1,87 @@
+"""Validation against the paper's own claims (EXPERIMENTS.md §Validation).
+
+The paper's evaluation is itself an emulation (its §V.A methodology with
+Table II parameters); we rebuilt that emulator and check our numbers land
+on the published claims:
+
+  * Fig. 5: fused Allgather_op_Allgather — avg 1.98× vs MPI4py
+  * Fig. 4: GCN at 24 nodes — avg 3.4× vs SKX cluster
+  * Fig. 3: ACiS ≥ MPI for every collective/size/node-count, growing with n
+  * Fig. 6: IS & MG benefit most among NPB; miniFE above NPB average
+"""
+
+import sys
+import os
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+import pytest
+
+from benchmarks import figures, netmodel as nm
+
+
+def test_fig5_mean_speedup_matches_paper():
+    got = figures.fig5_mean_speedup()
+    assert abs(got - 1.98) / 1.98 < 0.10, got   # within 10% of 1.98x
+
+
+def test_fig5_speedup_grows_with_message_size():
+    """Paper: "especially for larger message sizes"."""
+    small = nm.mpi4py_allgather_op_allgather(3, 1024) / \
+        nm.acis_allgather_op_allgather(3, 1024)
+    large = nm.mpi4py_allgather_op_allgather(3, 4 << 20) / \
+        nm.acis_allgather_op_allgather(3, 4 << 20)
+    assert large > small
+
+
+def test_fig4_mean_speedup_matches_paper():
+    got = figures.fig4_mean_speedup(24)
+    assert abs(got - 3.4) / 3.4 < 0.25, got     # within 25% of 3.4x
+
+
+def test_fig4_every_dataset_speeds_up():
+    for _, _, derived in figures.fig4_gcn(24):
+        assert float(derived.split("=")[1]) > 1.0
+
+
+def test_fig3_acis_wins_everywhere_and_scales():
+    for base, acis in [(nm.mpi_allreduce, nm.acis_allreduce),
+                       (nm.mpi_allgather, nm.acis_allgather),
+                       (nm.mpi_bcast, nm.acis_bcast),
+                       (nm.mpi_gather, nm.acis_gather)]:
+        for n in (32, 64, 128):
+            for m in (64, 4096, 1 << 20, 4 << 20):
+                assert base(n, m) / acis(n, m) > 1.0, (base.__name__, n, m)
+        # advantage grows with node count where the network itself merges
+        # or replicates (allreduce, bcast — the paper's headline point);
+        # gather/allgather carry identical wire volume in both systems,
+        # so their ratios saturate toward the bandwidth bound instead.
+        if base in (nm.mpi_allreduce, nm.mpi_bcast):
+            assert base(128, 4096) / acis(128, 4096) >= \
+                base(32, 4096) / acis(32, 4096)
+
+
+def test_fig6_is_and_mg_benefit_most():
+    """Paper: "the performance benefits for MG and IS are higher than for
+    the others" (among NPB)."""
+    sp = {r[0].split("_")[1]: float(r[2].split("=")[1])
+          for r in figures.fig6_npb(128)}
+    assert sp["IS"] > sp["LU"] and sp["IS"] > sp["SP"]
+    assert sp["MG"] > sp["LU"] and sp["MG"] > sp["SP"]
+    assert all(v >= 1.0 for v in sp.values())
+
+
+def test_fused_beats_unfused_in_emulator():
+    """Type 4 fusion is never a loss in the model."""
+    for m in (1024, 1 << 16, 1 << 22):
+        assert nm.acis_fused_allreduce_alltoall(64, 4096, m) <= \
+            nm.mpi_allreduce_then_alltoall(64, 4096, m)
+
+
+def test_compression_payoff_model():
+    """Type 2 wire compression halves the bandwidth term of the inter-pod
+    stage — the emulator agrees with the analytic ratio."""
+    m = 8 << 20
+    t_f32 = nm.acis_allreduce(64, m)
+    t_int8 = nm.acis_allreduce(64, m // 2)   # int16 partials = 0.5x wire
+    assert t_int8 < t_f32

@@ -1,0 +1,98 @@
+"""Hypothesis property tests on core engine invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+from jax.sharding import PartitionSpec as P
+
+from repro.core import ring
+from repro.core.types import ADD
+from repro.core.wire import dequantize_int8, quantize_int8
+
+N = 8
+_MESH = None
+
+
+def mesh():
+    global _MESH
+    if _MESH is None:
+        _MESH = jax.make_mesh((N,), ("data",),
+                              axis_types=(jax.sharding.AxisType.Auto,))
+    return _MESH
+
+
+def smap(fn, in_specs, out_specs):
+    return jax.jit(jax.shard_map(fn, mesh=mesh(), in_specs=in_specs,
+                                 out_specs=out_specs, check_vma=False))
+
+
+# cache jitted collectives across hypothesis examples (shape-keyed by jit)
+_AR = smap(lambda xl: ring.ring_all_reduce(xl[0], "data", ADD)[None],
+           P("data", None), P("data", None))
+_A2A = smap(lambda xl: ring.ring_all_to_all(xl[0], "data")[None],
+            P("data", None), P("data", None))
+_SCAN = smap(lambda xl: ring.rank_prefix_scan(xl[0], "data", ADD)[None],
+             P("data", None), P("data", None))
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 64), st.integers(0, 2 ** 31 - 1))
+def test_allreduce_equals_sum(dim, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((N, dim)).astype(np.float32)
+    out = np.asarray(_AR(jnp.asarray(x)))
+    want = x.sum(axis=0)
+    for i in range(N):
+        np.testing.assert_allclose(out[i], want, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 8), st.integers(0, 2 ** 31 - 1))
+def test_alltoall_is_involution(chunk, seed):
+    """A2A is a block transpose: applying it twice is the identity."""
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((N, N * chunk)).astype(np.float32)
+    once = _A2A(jnp.asarray(x))
+    twice = np.asarray(_A2A(once))
+    np.testing.assert_allclose(twice, x, rtol=1e-6, atol=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 32), st.integers(0, 2 ** 31 - 1))
+def test_scan_last_rank_equals_allreduce(dim, seed):
+    """Inclusive scan at the last rank == the full reduction."""
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((N, dim)).astype(np.float32)
+    scan = np.asarray(_SCAN(jnp.asarray(x)))
+    np.testing.assert_allclose(scan[-1], x.sum(axis=0), rtol=1e-4, atol=1e-4)
+    # monotone property: scan[i] - scan[i-1] == x[i]
+    diffs = scan[1:] - scan[:-1]
+    np.testing.assert_allclose(diffs, x[1:], rtol=1e-3, atol=1e-3)
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(1, 1000), st.floats(0.01, 100.0),
+       st.integers(0, 2 ** 31 - 1))
+def test_quantization_error_bound(size, scale_mag, seed):
+    """|x - deq(quant(x))| <= blockwise absmax / 127 / 2 (+eps)."""
+    rng = np.random.default_rng(seed)
+    x = (rng.standard_normal(size) * scale_mag).astype(np.float32)
+    q, s, n = quantize_int8(jnp.asarray(x))
+    y = np.asarray(dequantize_int8(q, s, n))
+    blocks = np.ceil(size / 256).astype(int)
+    pad = blocks * 256 - size
+    xp = np.pad(x, (0, pad)).reshape(blocks, 256)
+    bound = (np.abs(xp).max(axis=1, keepdims=True) / 127 / 2 + 1e-6)
+    err = np.abs(xp - np.pad(y, (0, pad)).reshape(blocks, 256))
+    assert np.all(err <= bound * 1.001)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 100), st.integers(1, 16))
+def test_pad_to_multiple_roundtrip(size, n):
+    x = jnp.arange(float(size))
+    padded, orig = ring.pad_to_multiple(x, n)
+    assert padded.shape[0] % n == 0
+    assert orig == size
+    np.testing.assert_array_equal(np.asarray(padded[:size]), np.asarray(x))

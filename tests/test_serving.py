@@ -1,0 +1,84 @@
+"""Continuous-batching serving engine tests (per-slot positions)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import Model
+from repro.serve.engine import Completion, Request, ServeEngine
+
+ARCH = "acis-100m"
+
+
+@pytest.fixture(scope="module")
+def served():
+    cfg = configs.get_smoke(ARCH)
+    model = Model(cfg)
+    params = model.init(jax.random.key(0))
+    return cfg, model, params
+
+
+def _greedy_reference(model, params, prompt, n_new, vocab):
+    """Oracle: full forward re-run per generated token."""
+    toks = list(prompt)
+    for _ in range(n_new):
+        h, _ = model.forward(params, jnp.asarray([toks], jnp.int32))
+        lg = model.logits(params, h)[0, -1]
+        toks.append(int(np.asarray(lg).argmax()))
+    return toks[len(prompt):]
+
+
+def test_single_request_matches_full_forward(served, rng):
+    cfg, model, params = served
+    prompt = rng.integers(0, cfg.vocab, 5).astype(np.int32)
+    eng = ServeEngine(model, params, slots=2, max_seq=64)
+    eng.submit(Request(rid=0, prompt=prompt, max_new_tokens=6))
+    done = eng.run_to_completion()
+    assert len(done) == 1
+    want = _greedy_reference(model, params, prompt, 6, cfg.vocab)
+    assert done[0].tokens == want
+
+
+def test_continuous_batching_heterogeneous_lengths(served, rng):
+    """Requests with different prompt/generation lengths sharing slots must
+    each match their independent greedy decode (no cache cross-talk)."""
+    cfg, model, params = served
+    reqs = [
+        Request(rid=0, prompt=rng.integers(0, cfg.vocab, 3).astype(np.int32),
+                max_new_tokens=8),
+        Request(rid=1, prompt=rng.integers(0, cfg.vocab, 7).astype(np.int32),
+                max_new_tokens=4),
+        Request(rid=2, prompt=rng.integers(0, cfg.vocab, 5).astype(np.int32),
+                max_new_tokens=6),
+        Request(rid=3, prompt=rng.integers(0, cfg.vocab, 2).astype(np.int32),
+                max_new_tokens=9),
+        Request(rid=4, prompt=rng.integers(0, cfg.vocab, 4).astype(np.int32),
+                max_new_tokens=5),
+    ]
+    eng = ServeEngine(model, params, slots=2, max_seq=64)
+    for r in reqs:
+        eng.submit(r)
+    done = eng.run_to_completion()
+    assert len(done) == 5
+    by_rid = {c.rid: c for c in done}
+    for r in reqs:
+        want = _greedy_reference(model, params, r.prompt, r.max_new_tokens,
+                                 cfg.vocab)
+        assert by_rid[r.rid].tokens == want, f"rid {r.rid}"
+
+
+def test_slot_refill_reuses_batch(served, rng):
+    """More requests than slots: the engine must recycle slots and keep one
+    jitted program (no per-request recompile)."""
+    cfg, model, params = served
+    eng = ServeEngine(model, params, slots=2, max_seq=64)
+    for i in range(4):
+        eng.submit(Request(rid=i,
+                           prompt=rng.integers(0, cfg.vocab,
+                                               3 + i).astype(np.int32),
+                           max_new_tokens=4))
+    done = eng.run_to_completion()
+    assert sorted(c.rid for c in done) == [0, 1, 2, 3]
+    assert eng.ticks < 60  # sanity: refills overlapped, not serialized

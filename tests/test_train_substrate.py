@@ -1,0 +1,265 @@
+"""Substrate tests: optimizer, train-step strategies, checkpoint/restart,
+data determinism, pipeline parallelism."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro import configs
+from repro.core import make_engine
+from repro.data.pipeline import BigramStream, DataConfig
+from repro.models import Model
+from repro.checkpoint import checkpoint as ckpt
+from repro.train import optimizer as opt_lib
+from repro.train.loop import LoopConfig, TrainLoop, run_with_restarts
+from repro.train.step import (TrainState, build_train_step_acis,
+                              build_train_step_gspmd, init_state)
+
+ARCH = "acis-100m"
+
+
+def _setup(mesh, backend="xla", microbatches=1, f32=False):
+    import dataclasses
+    cfg = configs.get_smoke(ARCH)
+    if f32:
+        cfg = dataclasses.replace(cfg, param_dtype="float32",
+                                  dtype="float32")
+    model = Model(cfg)
+    optimizer = opt_lib.adamw(lr=1e-2)
+    if backend == "xla":
+        step = build_train_step_gspmd(model, optimizer, mesh,
+                                      microbatches=microbatches,
+                                      donate=False)
+        engine = None
+    else:
+        engine = make_engine(backend, inner_axis="data",
+                             outer_axis="pod" if "pod" in mesh.axis_names
+                             else None)
+        step = build_train_step_acis(model, optimizer, mesh, engine,
+                                     microbatches=microbatches)
+    state = init_state(model, optimizer, jax.random.key(0), engine)
+    return cfg, model, step, state
+
+
+def _stream(cfg, batch=8):
+    return BigramStream(DataConfig(vocab=cfg.vocab, seq_len=16,
+                                   global_batch=batch, seed=3))
+
+
+# ---------------------------------------------------------------------------
+# optimizers
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", ["adamw", "adafactor"])
+def test_optimizer_descends_quadratic(name):
+    o = opt_lib.adamw(1e-1) if name == "adamw" else opt_lib.adafactor(1e-1)
+    params = {"w": jnp.array([[3.0, -2.0], [1.0, 4.0]])}
+    state = o.init(params)
+    val = lambda p: jnp.sum(jnp.square(p["w"]))
+    for step in range(200):
+        g = jax.grad(val)(params)
+        params, state = o.update(g, state, params,
+                                 jnp.asarray(step, jnp.int32))
+    assert float(val(params)) < 0.05
+
+
+def test_warmup_cosine_schedule():
+    lr = opt_lib.warmup_cosine(1.0, 10, 100)
+    assert float(lr(jnp.asarray(0))) == 0.0
+    assert abs(float(lr(jnp.asarray(10))) - 1.0) < 1e-6
+    assert float(lr(jnp.asarray(99))) < 0.2
+
+
+# ---------------------------------------------------------------------------
+# train steps
+# ---------------------------------------------------------------------------
+
+def test_gspmd_train_step_descends(mesh_dm):
+    cfg, model, step, state = _setup(mesh_dm)
+    stream = _stream(cfg)
+    with jax.set_mesh(mesh_dm):
+        losses = []
+        for i in range(12):
+            batch = {"tokens": jnp.asarray(stream.batch(i)["tokens"])}
+            state, m = step(state, batch)
+            losses.append(float(m["nll"]))
+    assert losses[-1] < losses[0] - 0.2, losses
+    assert int(np.asarray(state.step)) == 12
+
+
+@pytest.mark.parametrize("microbatches", [1, 4])
+def test_gspmd_microbatching_equivalent(mesh_dm, microbatches):
+    """Grad accumulation must match the single-shot gradient (same batch)."""
+    cfg, model, step1, state = _setup(mesh_dm, microbatches=1)
+    _, _, stepm, _ = _setup(mesh_dm, microbatches=microbatches)
+    stream = _stream(cfg)
+    batch = {"tokens": jnp.asarray(stream.batch(0)["tokens"])}
+    with jax.set_mesh(mesh_dm):
+        s1, m1 = step1(state, batch)
+        sm, mm = stepm(state, batch)
+    np.testing.assert_allclose(float(m1["nll"]), float(mm["nll"]), rtol=1e-3)
+    l1 = jax.tree.leaves(s1.params)[0]
+    lm = jax.tree.leaves(sm.params)[0]
+    np.testing.assert_allclose(np.asarray(l1, np.float32),
+                               np.asarray(lm, np.float32), atol=2e-2)
+
+
+@pytest.mark.parametrize("backend", ["acis", "acis_compressed"])
+def test_acis_step_matches_xla_step(mesh_dm, backend):
+    """The MPI-transparency claim: swapping the transport must not change
+    training (to reduction-order tolerance for 'acis', to EF-compression
+    tolerance otherwise).  f32 params so the comparison isn't dominated by
+    bf16 rounding amplified through Adam's rsqrt."""
+    cfg, model, step_x, state_x = _setup(mesh_dm, "xla", f32=True)
+    _, _, step_a, state_a = _setup(mesh_dm, backend, f32=True)
+    stream = _stream(cfg)
+    with jax.set_mesh(mesh_dm):
+        for i in range(3):
+            batch = {"tokens": jnp.asarray(stream.batch(i)["tokens"])}
+            state_x, mx = step_x(state_x, batch)
+            state_a, ma = step_a(state_a, batch)
+    # param-trajectory tolerance: Adam's rsqrt amplifies reduction-order
+    # noise on near-zero grads into up to ~2·lr per step for isolated
+    # elements (observed: 2/16k elements at 1.3e-2 after 3 steps with
+    # lr=1e-2); the tight functional check is the loss match below.
+    atol = 6e-2 if "compressed" in backend else 2.5e-2
+    for lx, la in zip(jax.tree.leaves(state_x.params),
+                      jax.tree.leaves(state_a.params)):
+        np.testing.assert_allclose(np.asarray(lx, np.float32),
+                                   np.asarray(la, np.float32), atol=atol)
+    np.testing.assert_allclose(float(mx["nll"]), float(ma["nll"]), atol=0.05)
+
+
+# ---------------------------------------------------------------------------
+# data pipeline
+# ---------------------------------------------------------------------------
+
+def test_data_deterministic_and_host_sharded():
+    cfg = DataConfig(vocab=64, seq_len=8, global_batch=8, seed=1)
+    s1, s2 = BigramStream(cfg), BigramStream(cfg)
+    np.testing.assert_array_equal(s1.batch(5)["tokens"],
+                                  s2.batch(5)["tokens"])
+    a = BigramStream(DataConfig(vocab=64, seq_len=8, global_batch=8, seed=1,
+                                host_id=0, num_hosts=2))
+    b = BigramStream(DataConfig(vocab=64, seq_len=8, global_batch=8, seed=1,
+                                host_id=1, num_hosts=2))
+    assert a.batch(0)["tokens"].shape == (4, 9)
+    assert not np.array_equal(a.batch(0)["tokens"], b.batch(0)["tokens"])
+
+
+def test_data_has_learnable_structure():
+    cfg = DataConfig(vocab=64, seq_len=8, global_batch=4, seed=1,
+                     branching=4)
+    s = BigramStream(cfg)
+    assert s.entropy() < np.log(64) * 0.5   # far below uniform entropy
+
+
+# ---------------------------------------------------------------------------
+# checkpoint / restart / elastic
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_roundtrip(tmp_path, mesh_dm):
+    cfg, model, step, state = _setup(mesh_dm)
+    d = str(tmp_path / "ck")
+    ckpt.save(d, 7, state)
+    like = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+                        state)
+    restored, stepno, _ = ckpt.restore(d, like)
+    assert stepno == 7
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_detects_corruption(tmp_path, mesh_dm):
+    cfg, model, step, state = _setup(mesh_dm)
+    d = str(tmp_path / "ck")
+    path = ckpt.save(d, 1, state)
+    # corrupt one shard
+    victim = sorted(os.listdir(path))[1]
+    arr = np.load(os.path.join(path, victim))
+    arr = np.asarray(arr)
+    arr.flat[0] += 1
+    np.save(os.path.join(path, victim), arr)
+    like = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+                        state)
+    with pytest.raises(IOError, match="checksum"):
+        ckpt.restore(d, like)
+
+
+def test_training_resumes_bit_exact_after_crash(tmp_path, mesh_dm):
+    """Kill at step 6, restart from the step-5 checkpoint, final state must
+    equal an uninterrupted run (data position is derived from the step)."""
+    cfg, model, stepfn, state0 = _setup(mesh_dm)
+    stream = _stream(cfg)
+    d = str(tmp_path / "ck")
+
+    def make_loop(fail_at=None):
+        _, _, stepfn, st = _setup(mesh_dm)
+        loop = TrainLoop(stepfn, stream,
+                         LoopConfig(total_steps=10, ckpt_every=5,
+                                    ckpt_dir=d, fail_at_step=fail_at,
+                                    log_every=100))
+        return loop, st
+
+    with jax.set_mesh(mesh_dm):
+        # uninterrupted reference (no checkpoint dir interference)
+        _, _, stepfn_r, st_r = _setup(mesh_dm)
+        ref_loop = TrainLoop(stepfn_r, stream,
+                             LoopConfig(total_steps=10, log_every=100))
+        ref = ref_loop.run(st_r)
+
+        calls = {"n": 0}
+
+        def factory():
+            calls["n"] += 1
+            return make_loop(fail_at=6 if calls["n"] == 1 else None)
+
+        final, restarts = run_with_restarts(factory)
+    assert restarts == 1
+    for a, b in zip(jax.tree.leaves(ref.params),
+                    jax.tree.leaves(final.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_elastic_restore_across_meshes(tmp_path, mesh_dm, mesh8):
+    """A checkpoint written under one mesh restores onto a different mesh
+    (global arrays are mesh-agnostic)."""
+    from repro.sharding import rules
+    cfg, model, step, state = _setup(mesh_dm)
+    d = str(tmp_path / "ck")
+    ckpt.save(d, 3, state.params)
+    like = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+                        state.params)
+    shardings = rules.param_shardings(like, mesh8)
+    restored, _, _ = ckpt.restore(d, like, shardings=shardings)
+    for a, b in zip(jax.tree.leaves(state.params),
+                    jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# pipeline parallelism
+# ---------------------------------------------------------------------------
+
+def test_pipeline_matches_sequential(devices):
+    from repro.train.pipeline import run_pipeline
+    mesh = jax.make_mesh((4,), ("pipe",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    rng = np.random.default_rng(0)
+    s, m, mb, dim = 4, 6, 3, 8
+    ws = jnp.asarray(rng.standard_normal((s, dim, dim)).astype(np.float32)
+                     * 0.5)
+    x = jnp.asarray(rng.standard_normal((m, mb, dim)).astype(np.float32))
+
+    def stage_fn(wslice, xin):     # wslice: [1, dim, dim] local stage params
+        return jnp.tanh(xin @ wslice[0])
+
+    got = np.asarray(run_pipeline(mesh, stage_fn, ws, x))
+    want = np.asarray(x)
+    for i in range(s):
+        want = np.tanh(want @ np.asarray(ws[i]))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
