@@ -1,153 +1,17 @@
-"""Analytic network emulator — the paper's own evaluation methodology.
+"""Analytic network emulator — re-exported from :mod:`repro.core.netmodel`.
 
-The paper's direct-network results (§V.A) come from an emulation with
-"(1) the same volume of traffic in the network links, (2) an identical
-number of network hops, and (3) an accurate overhead of the accelerator",
-parameterized by Table II.  This module rebuilds that emulator so the
-benchmark suite can reproduce the paper's figures (3-6) and so the
-framework can *predict* collective latency when choosing schedules
-(latency-vs-bandwidth crossover, Type 2/3 compression payoff).
-
-Table II constants (measured by the authors on their testbed):
-    MPI overhead        14.8 µs      (per software message)
-    max network BW      95.9 Gb/s    (11.99 GB/s)
-    PCIe latency        0.9 µs
-    FPGA-FPGA link      0.44 µs      (Aurora)
-    min port-to-port    52 ns
+The emulator moved into the package proper so the compiler's
+``SelectSchedule`` pass can consult it (latency-vs-bandwidth ring choice)
+without depending on the benchmarks tree.  This shim keeps the historical
+``from benchmarks import netmodel`` import path working for the benchmark
+runner and the paper-claims tests.
 """
 
-from __future__ import annotations
-
-import dataclasses
-import math
-
-
-@dataclasses.dataclass(frozen=True)
-class NetParams:
-    mpi_overhead: float = 14.8e-6
-    bw: float = 95.9e9 / 8            # bytes/s
-    pcie: float = 0.9e-6
-    fpga_link: float = 0.44e-6
-    port: float = 52e-9
-    host_bw: float = 6e9 # endpoint compute stream (B/s)
-    py_overhead: float = 15e-6        # MPI4py per-collective python cost
-    accel_clock: float = 250e6        # ACiS kernel (Vitis, 250 MHz)
-    accel_width: int = 64             # bytes/cycle through the CGRA pipe
-
-
-PAPER = NetParams()
-
-
-def torus_hops(n: int) -> int:
-    """Average hop count of a 3D-torus of n nodes (paper emulates 3D torus)."""
-    side = max(round(n ** (1 / 3)), 1)
-    return max(3 * (side // 2), 1)
-
-
-# ---------------------------------------------------------------------------
-# baseline MPI collectives (endpoint compute, passive network)
-# ---------------------------------------------------------------------------
-
-def mpi_allgather(n: int, m: int, p: NetParams = PAPER) -> float:
-    """Bruck-style latency term + ring bandwidth term."""
-    return math.ceil(math.log2(max(n, 2))) * p.mpi_overhead \
-        + (n - 1) * m / p.bw
-
-
-def mpi_allreduce(n: int, m: int, p: NetParams = PAPER) -> float:
-    """Recursive-doubling latency + ring RS/AG bandwidth (MPI hybrid)."""
-    return 2 * math.ceil(math.log2(max(n, 2))) * p.mpi_overhead \
-        + 2 * (n - 1) / n * m / p.bw \
-        + m / p.host_bw                       # endpoint reduction compute
-
-
-def mpi_bcast(n: int, m: int, p: NetParams = PAPER) -> float:
-    """Binomial tree."""
-    return math.ceil(math.log2(max(n, 2))) * (p.mpi_overhead + m / p.bw)
-
-
-def mpi_gather(n: int, m: int, p: NetParams = PAPER) -> float:
-    """Binomial tree latency; root link carries all (n-1) payloads."""
-    return math.ceil(math.log2(max(n, 2))) * p.mpi_overhead \
-        + (n - 1) * m / p.bw
-
-
-def mpi_alltoall(n: int, m: int, p: NetParams = PAPER) -> float:
-    return (n - 1) * (p.mpi_overhead + (m / n) / p.bw)
-
-
-# ---------------------------------------------------------------------------
-# ACiS collectives (in-switch processing)
-# ---------------------------------------------------------------------------
-
-def _acis_base(n: int, p: NetParams) -> float:
-    """Fixed path cost: host→NIC→fabric→…→host, once per collective."""
-    return 2 * p.pcie + torus_hops(n) * (p.fpga_link + p.port) \
-        + p.mpi_overhead  # one software injection (ExaMPI transport)
-
-
-def acis_allgather(n: int, m: int, p: NetParams = PAPER) -> float:
-    # replication happens in the fabric; each link still carries (n-1)m/n·…
-    return _acis_base(n, p) + (n - 1) * m / p.bw \
-        + (n - 1) * (p.fpga_link + p.port)
-
-
-def acis_allreduce(n: int, m: int, p: NetParams = PAPER) -> float:
-    """In-network reduction: messages merge as they travel — each link
-    carries each byte once; combine runs at line rate in the CGRA."""
-    stream = m / p.bw + m / (p.accel_clock * p.accel_width)
-    return _acis_base(n, p) + stream + math.ceil(
-        math.log2(max(n, 2))) * (p.fpga_link + p.port)
-
-
-def acis_bcast(n: int, m: int, p: NetParams = PAPER) -> float:
-    return _acis_base(n, p) + m / p.bw + math.ceil(
-        math.log2(max(n, 2))) * (p.fpga_link + p.port)
-
-
-def acis_gather(n: int, m: int, p: NetParams = PAPER) -> float:
-    return _acis_base(n, p) + (n - 1) * m / p.bw
-
-
-def acis_alltoall(n: int, m: int, p: NetParams = PAPER) -> float:
-    return _acis_base(n, p) + (n - 1) * (m / n) / p.bw \
-        + (n - 1) * (p.fpga_link + p.port)
-
-
-# ---------------------------------------------------------------------------
-# fused chains (Type 4): intermediate communication is bypassed
-# ---------------------------------------------------------------------------
-
-def mpi4py_allgather_op_allgather(n: int, m: int,
-                                  p: NetParams = PAPER) -> float:
-    """Paper Fig. 5 baseline: AG → host prefix-sum → AG(v), plus python."""
-    ag = mpi_allgather(n, m, p) + p.py_overhead
-    op = (n * m) / p.host_bw + p.py_overhead
-    return 2 * ag + op
-
-
-def acis_allgather_op_allgather(n: int, m: int,
-                                p: NetParams = PAPER) -> float:
-    """Fused: one traversal; the op streams through the CGRA in-flight.
-    The paper's runtime is itself Python-based (§V: "the runtime and MPI
-    support are based on Python"), so the fixed software cost appears once
-    on this path too."""
-    return _acis_base(n, p) + p.py_overhead + 2 * p.mpi_overhead \
-        + (n - 1) * m / p.bw \
-        + (n * m) / (p.accel_clock * p.accel_width) \
-        + (n - 1) * (p.fpga_link + p.port)
-
-
-def mpi_allreduce_then_alltoall(n: int, m_hist: int, m_keys: int,
-                                p: NetParams = PAPER) -> float:
-    return mpi_allreduce(n, m_hist, p) + mpi_alltoall(n, m_keys, p)
-
-
-def acis_fused_allreduce_alltoall(n: int, m_hist: int, m_keys: int,
-                                  p: NetParams = PAPER) -> float:
-    """Shared schedule: the histogram hops ride the key exchange; the
-    reduction is free behind the (larger) key traffic."""
-    keys = acis_alltoall(n, m_keys, p)
-    hist_exposed = max(0.0, acis_allreduce(n, m_hist, p) - keys)
-    return keys + 0.1 * hist_exposed + _acis_base(n, p) * 0.0 + \
-        (m_hist / (p.accel_clock * p.accel_width))
+from repro.core.netmodel import (  # noqa: F401
+    NetParams, PAPER, torus_hops, _acis_base,
+    mpi_allgather, mpi_allreduce, mpi_bcast, mpi_gather, mpi_alltoall,
+    acis_allgather, acis_allreduce, acis_bcast, acis_gather, acis_alltoall,
+    mpi4py_allgather_op_allgather, acis_allgather_op_allgather,
+    mpi_allreduce_then_alltoall, acis_fused_allreduce_alltoall,
+    ring_allreduce_time, ring_crossover_bytes,
+)

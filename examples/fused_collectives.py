@@ -14,6 +14,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from repro import core as acis
 from repro.core import collectives, fused
 from repro.core.lookaside import (distributed_prefix_sum,
                                   error_feedback_all_reduce,
@@ -83,6 +84,24 @@ def main():
     print(f"Type 4    allgather_op_allgather fused   one gather round "
           f"(baseline: two)  match="
           f"{bool(jnp.allclose(got, jnp.cumsum(flat), atol=1e-2))}")
+
+    # Type 4: traced multi-tensor program through the pass pipeline —
+    # map∘reduce on one input rides next to an alltoall on the other,
+    # with the schedule chosen from the payload bytes.
+    eng = acis.make_engine("acis", latency_optimal_below=16384)
+
+    def histshuf(hist, keys):
+        return acis.reduce(acis.map(jnp.square, hist)), \
+            acis.all_to_all(keys)
+
+    fprog = eng.compile(
+        histshuf, mesh, (P("data", None), P("data")),
+        (P("data", None), P("data")),
+        in_avals=(jnp.zeros((1, 128), jnp.float32),
+                  jnp.zeros((1024,), jnp.float32)))
+    h, k = fprog(jnp.ones((n, 128)), jnp.arange(float(n * 1024)))
+    print(f"Type 4    traced DAG program            stages={fprog.stages} "
+          f"schedules={[s or '-' for s in fprog.schedules]}")
 
     # Type 4: collective matmul (compute rides the ring)
     xm = jnp.asarray(rng.standard_normal((64, 32)).astype(np.float32))

@@ -2,12 +2,15 @@
 
     PYTHONPATH=src python examples/quickstart.py
 
-1.  Build a SwitchProgram (the paper's fused-collective IR), compile it,
-    and run it on an 8-device mesh — the Fig. 5 fused
-    Allgather_op_Allgather in three lines.
-2.  Run a Type 2 user-defined collective (Welford mean/variance) that a
+1.  Trace a switch program from a plain Python function (the paper's
+    dataflow-graph front-end), compile it through the pass pipeline, and
+    run it on an 8-device mesh — the Fig. 5 fused Allgather_op_Allgather
+    in three lines.
+2.  Trace a *two-tensor* program (the NAS-IS histogram/keys pair) — one
+    fused in-network program with two inputs and two outputs.
+3.  Run a Type 2 user-defined collective (Welford mean/variance) that a
     fixed-function switch cannot express.
-3.  Forward a small assigned-architecture model through one step.
+4.  Forward a small assigned-architecture model through one step.
 """
 
 import os
@@ -18,7 +21,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
-from repro.core import AllGather, Scan, SwitchProgram, compile_program
+from repro import core as acis
 from repro.core import collectives
 from repro.core.types import WELFORD
 from repro import configs
@@ -28,10 +31,13 @@ from repro.models import Model
 def main():
     mesh = jax.make_mesh((8,), ("data",),
                          axis_types=(jax.sharding.AxisType.Auto,))
+    engine = acis.make_engine("acis")
 
-    # -- 1. Type 4 fused collective via the compiler -------------------------
-    prog = SwitchProgram([AllGather(), Scan(), AllGather()], name="fig5")
-    fn = compile_program(prog, mesh, "data", P("data"), P(None))
+    # -- 1. Type 4 fused collective via trace + the pass pipeline ------------
+    def fem(x):
+        return acis.all_gather(acis.scan(acis.all_gather(x)))
+
+    fn = engine.compile(fem, mesh, P("data"), P(None))
     x = jnp.arange(32.0)
     out = fn(x)
     print("fused stages:", fn.stages)
@@ -39,7 +45,19 @@ def main():
                                rtol=1e-5)
     print("fig5 fused allgather_op_allgather ✓  (prefix sum in-network)")
 
-    # -- 2. Type 2 user-defined collective ----------------------------------
+    # -- 2. multi-tensor program: AR + A2A share one ring traversal ----------
+    def histogram_shuffle(hist, keys):
+        return acis.reduce(hist), acis.all_to_all(keys)
+
+    fn2 = engine.compile(histogram_shuffle, mesh,
+                         (P("data", None), P("data")),
+                         (P("data", None), P("data")))
+    hist = jnp.ones((8, 16)); keys = jnp.arange(64.0)
+    h, k = fn2(hist, keys)
+    print(f"nas-is fused stages: {fn2.stages}  "
+          f"hist sum={float(h[0, 0]):.0f} (expect 8)")
+
+    # -- 3. Type 2 user-defined collective ----------------------------------
     def welford_stats(xl):
         n0 = jnp.ones_like(xl)
         n, m, s = collectives.all_reduce((n0, xl, jnp.zeros_like(xl)),
@@ -60,7 +78,7 @@ def main():
           f"var={float(var[0]):.4f} "
           f"(numpy: {ref.mean(0)[0]:+.4f} {ref.var(0)[0]:.4f})")
 
-    # -- 3. one of the assigned architectures, reduced config ----------------
+    # -- 4. one of the assigned architectures, reduced config ----------------
     cfg = configs.get_smoke("qwen3-8b")
     model = Model(cfg)
     params = model.init(jax.random.key(0))

@@ -1,0 +1,120 @@
+"""Forward-compat shims so the codebase runs on older jax (0.4.x).
+
+The repo is written against the current jax API surface:
+
+  * ``jax.shard_map(f, mesh=..., in_specs=..., out_specs=..., check_vma=...,
+    axis_names=...)``
+  * ``jax.sharding.AxisType`` + ``jax.make_mesh(..., axis_types=...)``
+  * ``jax.set_mesh(mesh)`` as a context manager
+
+On jax 0.4.x those live under ``jax.experimental.shard_map`` (with
+``check_rep``/``auto`` spellings) or do not exist at all.  ``install()``
+bridges the gap in one place instead of sprinkling version checks through
+every module; it is a no-op on a jax new enough to provide the real APIs.
+
+Imported for its side effect from ``repro/__init__.py`` — anything that
+imports any ``repro`` module gets the shims before touching jax.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import enum
+import functools
+import inspect
+
+import jax
+import jax.sharding
+
+
+class _AxisTypeShim(enum.Enum):
+    Auto = "auto"
+    Explicit = "explicit"
+    Manual = "manual"
+
+
+def _install_axis_type() -> None:
+    if not hasattr(jax.sharding, "AxisType"):
+        jax.sharding.AxisType = _AxisTypeShim
+
+
+def _install_make_mesh() -> None:
+    if "axis_types" in inspect.signature(jax.make_mesh).parameters:
+        return
+    orig = jax.make_mesh
+
+    @functools.wraps(orig)
+    def make_mesh(axis_shapes, axis_names, *, axis_types=None, devices=None):
+        del axis_types  # 0.4.x meshes are implicitly Auto everywhere
+        return orig(axis_shapes, axis_names, devices=devices)
+
+    jax.make_mesh = make_mesh
+
+
+def _install_shard_map() -> None:
+    if hasattr(jax, "shard_map"):
+        return
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma=True,
+                  axis_names=None):
+        # Partial-manual (axis_names ⊂ mesh axes) is miscompiled by the
+        # 0.4.x SPMD partitioner (PartitionId / IsManualSubgroup failures)
+        # as soon as the body runs explicit schedules, so run fully manual
+        # instead.  This is semantically identical whenever in/out specs and
+        # body collectives only reference the manual axes — the auto axes
+        # then just replicate the same block computation.
+        del axis_names
+        return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_rep=bool(check_vma))
+
+    jax.shard_map = shard_map
+
+
+def _install_set_mesh() -> None:
+    if hasattr(jax, "set_mesh"):
+        return
+
+    @contextlib.contextmanager
+    def set_mesh(mesh):
+        with mesh:
+            yield mesh
+
+    jax.set_mesh = set_mesh
+
+
+def _install_axis_size() -> None:
+    from jax import lax
+    if hasattr(lax, "axis_size"):
+        return
+
+    def axis_size(axis_name):
+        # psum of a python scalar over a named axis is evaluated statically.
+        return lax.psum(1, axis_name)
+
+    lax.axis_size = axis_size
+
+
+def _install_cost_analysis() -> None:
+    # jax 0.4.x returns [dict] (one per program); current jax returns dict.
+    import jax.stages
+
+    orig = jax.stages.Compiled.cost_analysis
+
+    @functools.wraps(orig)
+    def cost_analysis(self):
+        out = orig(self)
+        if isinstance(out, list):
+            return out[0] if out else {}
+        return out
+
+    jax.stages.Compiled.cost_analysis = cost_analysis
+
+
+def install() -> None:
+    _install_axis_type()
+    _install_make_mesh()
+    _install_shard_map()
+    _install_set_mesh()
+    _install_axis_size()
+    _install_cost_analysis()

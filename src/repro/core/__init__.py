@@ -8,26 +8,50 @@ Layering:
   compression top-k / int8 / low-rank wire datatypes
   lookaside   Type 3 stateful ops (error feedback, PowerSGD, scan, GCN)
   fused       Type 4 fused collectives (+ collective matmul)
-  program     SwitchProgram IR (the S2S translator front-end analogue)
-  compiler    fusion compiler emitting one shard_map program (CGRA binary)
+  program     DAG IR (DagProgram) + the legacy SwitchProgram chain shim
+  tracing     traced frontend: write programs as plain Python functions
+              over symbolic Values (trace / map / reduce / all_gather / …)
+  compiler    pass pipeline — Legalize (DCE, wire sinking) → FuseHops
+              (first-class fusion patterns) → SelectSchedule (latency- vs
+              bandwidth-optimal rings via CollectiveConfig.
+              latency_optimal_below + the netmodel cost model) → Emit
+              (one shard_map program, the "CGRA binary")
+  netmodel    analytic network emulator (paper Table II) — feeds both the
+              benchmark figures and the SelectSchedule cost model
   topology    hierarchical multi-pod schedules + straggler masking
   switchops   SPU instruction registry (jnp refs + Pallas kernels)
-  api         CollectiveEngine — the MPI-transparency layer
+  api         CollectiveEngine — the MPI-transparency layer;
+              engine.compile(fn_or_program, ...) is the one entry point
+
+Quick taste of the traced API (usually imported as ``acis``)::
+
+    from repro import core as acis
+
+    def fem(x):
+        return acis.all_gather(acis.scan(acis.all_gather(x)))
+
+    fn = acis.make_engine("acis").compile(fem, mesh, P("data"), P(None))
 """
 
 from repro.core.types import (ADD, MAX, MIN, PROD, AcisType, Monoid,
                               TYPE1_MONOIDS, tree_monoid)
 from repro.core.api import (BACKENDS, CollectiveConfig, CollectiveEngine,
                             make_engine)
-from repro.core.program import (AllGather, AllToAll, Bcast, Map, Node,
-                                Reduce, ReduceScatter, Scan, SwitchProgram,
-                                Wire)
-from repro.core.compiler import compile_program, compile_rank_local
+from repro.core.program import (AllGather, AllToAll, Bcast, DagNode,
+                                DagProgram, Map, Node, Reduce, ReduceScatter,
+                                Scan, SwitchProgram, Wire)
+from repro.core.compiler import (CompiledProgram, Stage,
+                                 compile_program, compile_rank_local)
+from repro.core.tracing import (Value, all_gather, all_to_all, bcast,
+                                reduce, reduce_scatter, scan, trace, wire)
+from repro.core.tracing import map  # noqa: A004  (traced op, by design)
 
 __all__ = [
     "ADD", "MAX", "MIN", "PROD", "AcisType", "Monoid", "TYPE1_MONOIDS",
     "tree_monoid", "BACKENDS", "CollectiveConfig", "CollectiveEngine",
     "make_engine", "AllGather", "AllToAll", "Bcast", "Map", "Node", "Reduce",
-    "ReduceScatter", "Scan", "SwitchProgram", "Wire", "compile_program",
-    "compile_rank_local",
+    "ReduceScatter", "Scan", "SwitchProgram", "Wire", "DagNode", "DagProgram",
+    "CompiledProgram", "Stage", "compile_program", "compile_rank_local",
+    "Value", "trace", "map", "reduce", "reduce_scatter", "all_gather",
+    "all_to_all", "scan", "bcast", "wire",
 ]

@@ -79,11 +79,15 @@ class CollectiveEngine:
     def needs_residual(self) -> bool:
         return self.compressed
 
-    def init_state(self, grads_like: PyTree) -> PyTree:
-        """Look-aside state (Type 3): error-feedback residuals, or empty."""
+    def init_state(self, grads_like: PyTree) -> Optional[PyTree]:
+        """Look-aside state (Type 3): error-feedback residuals, or None.
+
+        Uncompressed backends are stateless — returning None (instead of a
+        pytree of dead zero scalars) keeps checkpoints and donated buffers
+        free of fake state."""
         if self.compressed:
             return init_residual(grads_like, jnp.float32)
-        return jax.tree.map(lambda p: jnp.zeros((), jnp.float32), grads_like)
+        return None
 
     # -- the gradient-sync transport -----------------------------------------
 
@@ -157,6 +161,36 @@ class CollectiveEngine:
     def all_to_all(self, x, axis_name=None):
         return collectives.all_to_all(
             x, axis_name or self.inner_axis, backend=self.base_backend)
+
+    # -- switch-program compilation (the one entry point) --------------------
+
+    def compile(self, prog, mesh=None, in_specs=None, out_specs=None, *,
+                axis_name: Optional[str] = None, in_avals=None,
+                axis_size: Optional[int] = None, jit: bool = True):
+        """Compile a switch program through the pass pipeline.
+
+        ``prog`` may be a plain Python function over traced values (see
+        :mod:`repro.core.tracing`), a traced :class:`DagProgram`, or a
+        legacy chain :class:`SwitchProgram`.  With ``mesh`` (plus
+        in/out specs) the result is the jitted shard_map "CGRA binary";
+        without it, a rank-local :class:`CompiledProgram` for use inside an
+        existing shard_map region.  The engine's
+        :class:`CollectiveConfig` drives the SelectSchedule pass
+        (``latency_optimal_below`` ring crossover); pass ``in_avals``
+        (rank-local ShapeDtypeStructs or arrays, one per program input) to
+        give the scheduler payload sizes.
+        """
+        from repro.core import compiler
+        ax = axis_name or self.inner_axis
+        if mesh is None:
+            return compiler.compile_rank_local(
+                prog, ax, axis_size=axis_size, config=self.config,
+                in_avals=in_avals)
+        if in_specs is None or out_specs is None:
+            raise ValueError("mesh compilation needs in_specs and out_specs")
+        return compiler.compile_program(
+            prog, mesh, ax, in_specs, out_specs, jit=jit,
+            config=self.config, in_avals=in_avals)
 
 
 def make_engine(backend: str = "xla", *, inner_axis: str = "data",

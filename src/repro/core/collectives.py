@@ -130,12 +130,29 @@ def reduce_scatter(
     *,
     backend: str = "acis",
     hop_combine: Optional[Callable] = None,
+    codec: WireCodec = IDENTITY,
 ) -> jax.Array:
     if backend == "xla":
         if monoid.name != "add":
             raise ValueError("xla psum_scatter is add-only (Type 1 limitation)")
+        if codec is not IDENTITY:
+            raise ValueError("xla backend cannot apply wire codecs in-flight")
         return lax.psum_scatter(x, axis_name, tiled=True)
-    return ring.ring_reduce_scatter(x, axis_name, monoid, hop_combine=hop_combine)
+    if codec is IDENTITY:
+        return ring.ring_reduce_scatter(x, axis_name, monoid,
+                                        hop_combine=hop_combine)
+    if codec.combine_encoded is not None:
+        # structured payloads (quantized pytrees) change the chunk layout;
+        # only the full RS∘AG all-reduce schedule implements that walk
+        raise ValueError(
+            f"wire codec {codec.name!r} (encoded-domain combine) is not "
+            "supported on a standalone reduce-scatter — use all_reduce, or "
+            "drop the wire() declaration")
+    # cast-style codec: hops and combines run in the wire dtype
+    enc = codec.encode(x)
+    red = ring.ring_reduce_scatter(enc, axis_name, monoid,
+                                   hop_combine=hop_combine)
+    return codec.decode(red).astype(x.dtype)
 
 
 def all_gather(

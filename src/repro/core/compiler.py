@@ -1,49 +1,114 @@
-"""SwitchProgram compiler — legalize, fuse, schedule, emit.
+"""SwitchProgram compiler — a pass pipeline over the DAG IR.
 
-Pipeline (mirroring the paper's back-end steps: parse IR → DFG →
-optimizations → code generation → scheduling):
+Mirrors the paper's back-end steps (parse IR → DFG → optimizations → code
+generation → scheduling) as four composable passes:
 
-  1. **Legalize**: canonicalize node chain (REDUCE → RS∘AG split when a
-     bandwidth-optimal schedule is requested; WIRE nodes sunk onto the
-     collective they feed).
-  2. **Fuse**: pattern rules —
-       * MAP before/after a collective  → hop-fused map (Type 4)
-       * ALLGATHER∘MAP∘ALLGATHER with SCAN-expressible map → fused
-         scan+gather (the paper's Fig. 5 op)
-       * REDUCE followed by ALLTOALL → fused shared-schedule hop loop
-       * RS∘AG adjacency → single all-reduce schedule
-  3. **Schedule/emit**: produce one rank-local callable; `compile_program`
-     wraps it in `jax.shard_map` + `jax.jit` — the "CGRA binary".
+  1. :class:`Legalize`   — dead-code-eliminate unused nodes and sink WIRE
+     nodes onto the collective they feed (the codec becomes a node
+     attribute; non-codec-capable consumers drop it, mirroring a
+     fixed-function wire).
+  2. :class:`FuseHops`   — pattern-match fusion opportunities.  Each rule
+     is a first-class :class:`FusionPattern` over the DAG (paper Fig. 5
+     AG∘scan∘AG, the NAS-IS AR+A2A pair, map-into-hop fusion, RS∘AG →
+     one all-reduce schedule); matched nodes are grouped into
+     :class:`StageIR` units and topologically ordered.
+  3. :class:`SelectSchedule` — pick the latency- vs bandwidth-optimal ring
+     for every all-reduce stage by propagating per-rank payload bytes
+     through the DAG and consulting ``CollectiveConfig.
+     latency_optimal_below`` plus the analytic cost model in
+     :mod:`repro.core.netmodel`.
+  4. :class:`Emit`       — lower every stage to a rank-local callable; the
+     emitted :class:`CompiledProgram` executes them over a value
+     environment (multi-input / multi-output programs are native).
 
-The emitted `CompiledProgram` records its fused stage list so tests (and
-the roofline accounting) can verify what was fused, exactly like inspecting
-the paper's generated schedule.
+`compile_program` wraps the result in `jax.shard_map` + `jax.jit` — the
+"CGRA binary".  The emitted program records its fused stage list and the
+chosen schedules so tests (and the roofline accounting) can verify what
+was fused, exactly like inspecting the paper's generated schedule.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
-from typing import Any, Callable, Optional, Sequence
+import math
+from typing import Any, Callable, Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import collectives, fused, ring
-from repro.core.program import (COLLECTIVE_KINDS, Node, OpKind, SwitchProgram)
+from repro.core import collectives, fused, netmodel, ring
+from repro.core.program import (COLLECTIVE_KINDS, DagNode, DagProgram, Node,
+                                OpKind, SwitchProgram)
+from repro.core.tracing import trace
 from repro.core.types import ADD
 from repro.core.wire import IDENTITY
 
 PyTree = Any
+ProgramLike = Union[DagProgram, SwitchProgram, Callable]
+
+
+def _as_dag(prog: ProgramLike) -> DagProgram:
+    if isinstance(prog, DagProgram):
+        return prog
+    if isinstance(prog, SwitchProgram):
+        return prog.to_dag()
+    if callable(prog):
+        return trace(prog)
+    raise TypeError(f"cannot compile {type(prog).__name__}")
+
+
+# ---------------------------------------------------------------------------
+# Compile context & stage forms
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class CompileContext:
+    """Everything the passes may consult.
+
+    ``config`` duck-types :class:`repro.core.api.CollectiveConfig` (only
+    ``latency_optimal_below`` is read) to avoid an api↔compiler import
+    cycle.  ``in_avals`` are rank-local shape/dtype structs for the program
+    inputs — optional; without them SelectSchedule keeps the
+    bandwidth-optimal default.
+    """
+
+    axis_name: str
+    axis_size: Optional[int] = None
+    config: Any = None
+    in_avals: Optional[Sequence[Any]] = None
+    net: netmodel.NetParams = netmodel.PAPER
+    dag: Optional[DagProgram] = None    # current form, updated per pass
+
+    @property
+    def latency_optimal_below(self) -> Optional[int]:
+        if self.config is None:
+            return None
+        return getattr(self.config, "latency_optimal_below", None)
+
+
+@dataclasses.dataclass(frozen=True)
+class StageIR:
+    """One fused group of DAG nodes, pre-emission."""
+
+    kind: str
+    nodes: tuple[DagNode, ...]
+    in_vids: tuple[int, ...]
+    out_vids: tuple[int, ...]
+    schedule: str = ""             # "latency" | "bandwidth" | "" (fixed)
+    bytes_in: Optional[int] = None
+    desc: str = ""
 
 
 @dataclasses.dataclass(frozen=True)
 class Stage:
-    """One fused in-network stage of the emitted schedule."""
+    """One emitted in-network stage: ``run(args, axis_name) -> outputs``."""
 
-    kind: str                      # e.g. "allreduce", "scan+allgather"
-    run: Callable[[PyTree, str], PyTree]
+    kind: str
+    run: Callable[[tuple, str], tuple]
     desc: str = ""
+    in_vids: tuple[int, ...] = ()
+    out_vids: tuple[int, ...] = ()
+    schedule: str = ""
 
     def __repr__(self):  # pragma: no cover
         return f"Stage({self.kind})"
@@ -51,178 +116,672 @@ class Stage:
 
 @dataclasses.dataclass
 class CompiledProgram:
+    """Rank-local executable: stages run in order over a value environment."""
+
     stages: Sequence[Stage]
-    source: SwitchProgram
+    source: DagProgram
     axis_name: str
 
     def stage_kinds(self) -> list[str]:
         return [s.kind for s in self.stages]
 
-    def __call__(self, x: PyTree) -> PyTree:
+    def stage_schedules(self) -> list[str]:
+        return [s.schedule for s in self.stages]
+
+    def __call__(self, *xs: PyTree) -> PyTree:
+        n_in = self.source.num_inputs
+        if len(xs) == 1 and n_in > 1 and isinstance(xs[0], (tuple, list)):
+            xs = tuple(xs[0])      # chain-shim spelling: one tuple argument
+        if len(xs) != n_in:
+            raise TypeError(
+                f"program {self.source.name!r} takes {n_in} inputs, "
+                f"got {len(xs)}")
+        env: dict[int, PyTree] = dict(enumerate(xs))
         for st in self.stages:
-            x = st.run(x, self.axis_name)
-        return x
+            outs = st.run(tuple(env[v] for v in st.in_vids), self.axis_name)
+            for vid, o in zip(st.out_vids, outs):
+                env[vid] = o
+        outs = tuple(env[v] for v in self.source.outputs)
+        return outs[0] if len(outs) == 1 else outs
 
 
 # ---------------------------------------------------------------------------
-# Fusion rules
+# Pass 1: Legalize
 # ---------------------------------------------------------------------------
 
-def _is_map(n: Node) -> bool:
-    return n.kind == OpKind.MAP
+# consumers that can apply a wire codec in-flight (all lower to an
+# all-reduce schedule, which takes `codec=`)
+_CODEC_SINKS = {OpKind.REDUCE, OpKind.REDUCE_SCATTER}
 
 
-def _fuse(nodes: list[Node], axis_name: str) -> list[Stage]:
-    stages: list[Stage] = []
-    i = 0
-    pending_codec = IDENTITY
-    while i < len(nodes):
-        n = nodes[i]
+class Legalize:
+    """Canonicalize the DAG: DCE + sink WIRE nodes onto their consumer."""
 
-        if n.kind == OpKind.WIRE:
-            # sink the codec onto the next collective
-            pending_codec = n.codec
-            i += 1
-            continue
+    name = "legalize"
 
-        # --- rule: AG ∘ SCAN-map ∘ AG → fused scan+gather (paper Fig. 5) ---
-        if (n.kind == OpKind.ALLGATHER and i + 2 < len(nodes)
-                and nodes[i + 1].kind == OpKind.SCAN
-                and nodes[i + 2].kind == OpKind.ALLGATHER):
-            mono = nodes[i + 1].monoid
-            if mono.name == "add":
-                stages.append(Stage(
-                    "scan+allgather",
-                    lambda x, ax: fused.allgather_op_allgather(x, ax),
-                    "fused allgather_op_allgather (in-network prefix scan)"))
+    def run(self, dag: DagProgram, ctx: CompileContext) -> DagProgram:
+        dag = self._dce(dag)
+        return self._sink_wires(dag)
+
+    @staticmethod
+    def _dce(dag: DagProgram) -> DagProgram:
+        live = set(dag.outputs)
+        keep: list[DagNode] = []
+        for nd in reversed(dag.nodes):
+            if nd.out in live:
+                keep.append(nd)
+                live.update(nd.inputs)
+        keep.reverse()
+        if len(keep) == len(dag.nodes):
+            return dag
+        return DagProgram(dag.num_inputs, tuple(keep), dag.outputs, dag.name)
+
+    @staticmethod
+    def _sink_wires(dag: DagProgram) -> DagProgram:
+        """Replace WIRE nodes by a ``codec`` attribute on their consumer.
+
+        The codec travels through single-input MAPs (the map runs before
+        the payload hits the wire, so the declaration still applies to the
+        collective downstream — the old chain compiler's pending-codec
+        behaviour).  A WIRE reaching a non-codec-capable op or a program
+        output is dropped — the wire format of those links is fixed.
+        """
+        if not any(nd.op.kind == OpKind.WIRE for nd in dag.nodes):
+            return dag
+        alias: dict[int, int] = {}       # wire out → its input
+        carried: dict[int, Any] = {}     # value id → pending codec
+
+        def resolve(vid: int) -> int:
+            while vid in alias:
+                vid = alias[vid]
+            return vid
+
+        nodes: list[DagNode] = []
+        for nd in dag.nodes:
+            if nd.op.kind == OpKind.WIRE:
+                alias[nd.out] = nd.inputs[0]
+                carried[nd.out] = nd.op.codec
+                continue
+            op = nd.op
+            ins = tuple(resolve(v) for v in nd.inputs)
+            codecs = [carried[v] for v in nd.inputs if v in carried]
+            if codecs:
+                if op.kind in _CODEC_SINKS:
+                    op = dataclasses.replace(op, codec=codecs[-1])
+                elif op.kind == OpKind.MAP and len(nd.inputs) == 1:
+                    carried[nd.out] = codecs[-1]
+            nodes.append(DagNode(op, ins, nd.out))
+        outputs = tuple(resolve(v) for v in dag.outputs)
+        return DagProgram(dag.num_inputs, tuple(nodes), outputs, dag.name)
+
+
+# ---------------------------------------------------------------------------
+# Pass 2: FuseHops — first-class fusion patterns
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class _MatchState:
+    """Shared lookup tables for pattern matching over one DAG."""
+
+    dag: DagProgram
+    users: dict[int, list[DagNode]]
+    out_set: set[int]
+    claimed: set[int]                       # node out-ids already grouped
+    ancestors: dict[int, set[int]]          # node out → transitive inputs
+
+    @classmethod
+    def build(cls, dag: DagProgram) -> "_MatchState":
+        anc: dict[int, set[int]] = {}
+        for nd in dag.nodes:
+            a: set[int] = set()
+            for v in nd.inputs:
+                a.add(v)
+                a |= anc.get(v, set())
+            anc[nd.out] = a
+        return cls(dag, dag.users(), set(dag.outputs), set(), anc)
+
+    def sole_user(self, vid: int) -> Optional[DagNode]:
+        """The unique consumer of ``vid`` if it isn't also a program
+        output (fusion would hide the intermediate value) and hasn't been
+        claimed by an earlier match (a cross-branch pattern may grab a
+        node defined after the current root)."""
+        us = self.users.get(vid, [])
+        if len(us) == 1 and vid not in self.out_set \
+                and us[0].out not in self.claimed:
+            return us[0]
+        return None
+
+    def independent(self, a: DagNode, b: DagNode) -> bool:
+        return a.out not in self.ancestors[b.out] \
+            and b.out not in self.ancestors[a.out]
+
+
+class FusionPattern:
+    """One fusion rule: try to build a :class:`StageIR` rooted at ``nd``."""
+
+    name = "pattern"
+
+    def match(self, nd: DagNode, st: _MatchState) -> Optional[StageIR]:
+        raise NotImplementedError
+
+
+class ScanGatherPattern(FusionPattern):
+    """AG ∘ SCAN ∘ AG → fused scan+gather (paper Fig. 5)."""
+
+    name = "scan+allgather"
+
+    def match(self, nd, st):
+        if nd.op.kind != OpKind.ALLGATHER:
+            return None
+        scan = st.sole_user(nd.out)
+        if scan is None or scan.op.kind != OpKind.SCAN:
+            return None
+        ag2 = st.sole_user(scan.out)
+        if ag2 is None or ag2.op.kind != OpKind.ALLGATHER:
+            return None
+        mono = scan.op.monoid
+        return StageIR("scan+allgather", (nd, scan, ag2),
+                       nd.inputs, (ag2.out,),
+                       desc=f"fused allgather_op_allgather "
+                            f"(in-network {mono.name}-scan)")
+
+
+class MapIntoReducePattern(FusionPattern):
+    """MAP ∘ REDUCE / MAP ∘ REDUCE_SCATTER → hop-fused map (Type 4)."""
+
+    name = "map+reduce"
+
+    def match(self, nd, st):
+        if nd.op.kind != OpKind.MAP or len(nd.inputs) != 1:
+            return None
+        red = st.sole_user(nd.out)
+        if red is None or red.op.kind not in (OpKind.REDUCE,
+                                              OpKind.REDUCE_SCATTER):
+            return None
+        if red.op.kind == OpKind.REDUCE:
+            return StageIR("map+allreduce", (nd, red), nd.inputs, (red.out,),
+                           desc="map fused ahead of AR schedule")
+        return StageIR("map+reduce_scatter", (nd, red), nd.inputs,
+                       (red.out,),
+                       desc=f"map({nd.op.name or 'fn'}) fused into RS hops")
+
+
+class GatherMapPattern(FusionPattern):
+    """ALLGATHER ∘ MAP → map applied in-flight at the forwarding hop."""
+
+    name = "allgather+map"
+
+    def match(self, nd, st):
+        if nd.op.kind != OpKind.ALLGATHER:
+            return None
+        mp = st.sole_user(nd.out)
+        if mp is None or mp.op.kind != OpKind.MAP or len(mp.inputs) != 1:
+            return None
+        return StageIR("allgather+map", (nd, mp), nd.inputs, (mp.out,),
+                       desc="map applied in-flight at forwarding hop")
+
+
+class ReduceAlltoallPattern(FusionPattern):
+    """Independent REDUCE(add) + ALLTOALL pair → one shared ring schedule
+    (the NAS IS histogram/keys fusion)."""
+
+    name = "allreduce+alltoall"
+
+    def match(self, nd, st):
+        pair = None
+        if self._fusable_reduce(nd):
+            pair = self._find(nd, OpKind.ALLTOALL, st)
+            red, a2a = nd, pair
+        elif nd.op.kind == OpKind.ALLTOALL:
+            pair = self._find(nd, OpKind.REDUCE, st)
+            red, a2a = pair, nd
+        if pair is None:
+            return None
+        return StageIR("allreduce+alltoall", (red, a2a),
+                       (red.inputs[0], a2a.inputs[0]),
+                       (red.out, a2a.out),
+                       schedule="latency",
+                       desc="fused AR+A2A on one ring traversal")
+
+    @staticmethod
+    def _fusable_reduce(nd: DagNode) -> bool:
+        # the shared-schedule kernel implements the add combine on the
+        # identity wire only — a sunk codec must go to the unfused AR
+        return (nd.op.kind == OpKind.REDUCE
+                and nd.op.monoid.name == "add"
+                and nd.op.codec is IDENTITY)
+
+    def _find(self, nd: DagNode, kind: OpKind,
+              st: _MatchState) -> Optional[DagNode]:
+        for cand in st.dag.nodes:
+            if (cand.op.kind == kind and cand.out not in st.claimed
+                    and (kind != OpKind.REDUCE
+                         or self._fusable_reduce(cand))
+                    and st.independent(nd, cand)):
+                return cand
+        return None
+
+
+class RsAgPattern(FusionPattern):
+    """REDUCE_SCATTER ∘ ALLGATHER → one all-reduce schedule."""
+
+    name = "allreduce"
+
+    def match(self, nd, st):
+        if nd.op.kind != OpKind.REDUCE_SCATTER:
+            return None
+        ag = st.sole_user(nd.out)
+        if ag is None or ag.op.kind != OpKind.ALLGATHER:
+            return None
+        return StageIR("allreduce", (nd, ag), nd.inputs, (ag.out,),
+                       desc="RS∘AG → ring AR")
+
+
+DEFAULT_PATTERNS: tuple[FusionPattern, ...] = (
+    ScanGatherPattern(),
+    MapIntoReducePattern(),
+    GatherMapPattern(),
+    ReduceAlltoallPattern(),
+    RsAgPattern(),
+)
+
+
+_SINGLE_KINDS = {
+    OpKind.MAP: "map",
+    OpKind.REDUCE: "allreduce",
+    OpKind.REDUCE_SCATTER: "reduce_scatter",
+    OpKind.ALLGATHER: "allgather",
+    OpKind.ALLTOALL: "alltoall",
+    OpKind.SCAN: "scan",
+    OpKind.BCAST: "bcast",
+}
+
+
+class FuseHops:
+    """Greedily apply fusion patterns in definition order, then
+    topologically order the resulting stage groups."""
+
+    name = "fuse_hops"
+
+    def __init__(self, patterns: Sequence[FusionPattern] = DEFAULT_PATTERNS):
+        self.patterns = tuple(patterns)
+
+    def run(self, dag: DagProgram, ctx: CompileContext) -> list[StageIR]:
+        st = _MatchState.build(dag)
+        groups: list[StageIR] = []
+        for nd in dag.nodes:
+            if nd.out in st.claimed:
+                continue
+            for pat in self.patterns:
+                m = pat.match(nd, st)
+                if m is not None:
+                    groups.append(m)
+                    st.claimed.update(g.out for g in m.nodes)
+                    break
             else:
-                def run_sg(x, ax, _m=mono, _ex=nodes[i + 1].exclusive):
-                    scanned = collectives.prefix_scan(x, ax, _m, exclusive=_ex)
-                    return ring.ring_all_gather(scanned, ax)
-                stages.append(Stage("scan+allgather", run_sg,
-                                    f"fused scan({mono.name})+allgather"))
-            i += 3
-            continue
+                groups.append(self._single(nd))
+                st.claimed.add(nd.out)
+        # Cross-branch fusions (AR+A2A pairs) can deadlock each other at
+        # the group level even though each pair is node-independent: two
+        # pairs may each consume a value the other produces.  Dissolve
+        # fused groups until the group graph is acyclic — unfused
+        # lowering is always legal, just less fused.
+        while True:
+            cyclic = self._find_cycle_member(groups)
+            if cyclic is None:
+                break
+            groups = [g for g in groups if g is not cyclic] \
+                + [self._single(nd) for nd in cyclic.nodes]
+        return self._topo(groups)
 
-        # --- rule: REDUCE ∘ ALLTOALL → shared-schedule fusion (NAS IS) ---
-        if (n.kind == OpKind.REDUCE and i + 1 < len(nodes)
-                and nodes[i + 1].kind == OpKind.ALLTOALL):
-            def run_ra(x, ax, _m=n.monoid):
-                hist, keys = x
-                return fused.fused_allreduce_alltoall(hist, keys, ax)
-            stages.append(Stage("allreduce+alltoall", run_ra,
-                                "fused AR+A2A on one ring traversal"))
-            i += 2
-            continue
+    @staticmethod
+    def _find_cycle_member(groups: list[StageIR]) -> Optional[StageIR]:
+        """A multi-node group participating in a group-graph cycle, or
+        None if the group graph is already acyclic (Kahn's algorithm)."""
+        produced_by = {v: g for g in groups for v in g.out_vids}
+        succs: dict[int, list[StageIR]] = {id(g): [] for g in groups}
+        indeg = {id(g): 0 for g in groups}
+        for g in groups:
+            for v in g.in_vids:
+                dep = produced_by.get(v)
+                if dep is not None and dep is not g:
+                    succs[id(dep)].append(g)
+                    indeg[id(g)] += 1
+        ready = [g for g in groups if indeg[id(g)] == 0]
+        seen = 0
+        while ready:
+            g = ready.pop()
+            seen += 1
+            for s in succs[id(g)]:
+                indeg[id(s)] -= 1
+                if indeg[id(s)] == 0:
+                    ready.append(s)
+        if seen == len(groups):
+            return None
+        for g in groups:
+            if indeg[id(g)] > 0 and len(g.nodes) > 1:
+                return g
+        raise AssertionError("cycle among single-node groups — invalid DAG")
 
-        # --- rule: MAP ∘ collective / collective ∘ MAP → hop fusion ---
-        if _is_map(n) and i + 1 < len(nodes) and nodes[i + 1].kind in (
-                OpKind.REDUCE_SCATTER, OpKind.REDUCE):
-            nxt = nodes[i + 1]
-            if nxt.kind == OpKind.REDUCE_SCATTER:
-                def run_mrs(x, ax, _f=n.fn, _m=nxt.monoid):
-                    return fused.map_reduce_scatter(x, ax, _f, _m)
-                stages.append(Stage("map+reduce_scatter", run_mrs,
-                                    f"map({n.name or 'fn'}) fused into RS hops"))
-            else:
-                def run_mar(x, ax, _f=n.fn, _m=nxt.monoid, _c=pending_codec):
-                    return collectives.all_reduce(_f(x), ax, _m, codec=_c)
-                stages.append(Stage("map+allreduce", run_mar,
-                                    "map fused ahead of AR schedule"))
-                pending_codec = IDENTITY
-            i += 2
-            continue
+    @staticmethod
+    def _single(nd: DagNode) -> StageIR:
+        kind = _SINGLE_KINDS.get(nd.op.kind)
+        if kind is None:
+            raise ValueError(f"cannot lower node {nd.op}")
+        return StageIR(kind, (nd,), nd.inputs, (nd.out,))
 
-        if n.kind == OpKind.ALLGATHER and i + 1 < len(nodes) and \
-                _is_map(nodes[i + 1]):
-            def run_agm(x, ax, _f=nodes[i + 1].fn):
-                return fused.allgather_map(x, ax, _f)
-            stages.append(Stage("allgather+map", run_agm,
-                                "map applied in-flight at forwarding hop"))
-            i += 2
-            continue
+    @staticmethod
+    def _topo(groups: list[StageIR]) -> list[StageIR]:
+        """Order groups so every consumed value is produced first (a
+        cross-branch fusion like AR+A2A can capture a node defined after
+        another group's root)."""
+        produced_by = {v: g for g in groups for v in g.out_vids}
+        ordered: list[StageIR] = []
+        emitted: set[int] = set()
 
-        # --- rule: RS ∘ AG → one all-reduce schedule ---
-        if (n.kind == OpKind.REDUCE_SCATTER and i + 1 < len(nodes)
-                and nodes[i + 1].kind == OpKind.ALLGATHER):
-            def run_ar(x, ax, _m=n.monoid, _c=pending_codec):
-                return collectives.all_reduce(x, ax, _m, codec=_c)
-            stages.append(Stage("allreduce", run_ar, "RS∘AG → ring AR"))
-            pending_codec = IDENTITY
-            i += 2
-            continue
+        def visit(g: StageIR):
+            if id(g) in emitted:
+                return
+            emitted.add(id(g))
+            for v in g.in_vids:
+                dep = produced_by.get(v)
+                if dep is not None:
+                    visit(dep)
+            ordered.append(g)
 
-        # --- single-node lowerings ---
-        stages.append(_lower_single(n, pending_codec))
-        if n.kind in COLLECTIVE_KINDS:
-            pending_codec = IDENTITY
-        i += 1
-    return stages
-
-
-def _lower_single(n: Node, codec) -> Stage:
-    if n.kind == OpKind.MAP:
-        return Stage("map", lambda x, ax, _f=n.fn: _f(x), n.name or "map")
-    if n.kind == OpKind.REDUCE:
-        return Stage("allreduce",
-                     lambda x, ax, _m=n.monoid, _c=codec:
-                     collectives.all_reduce(x, ax, _m, codec=_c),
-                     f"ring allreduce({n.monoid.name})")
-    if n.kind == OpKind.REDUCE_SCATTER:
-        return Stage("reduce_scatter",
-                     lambda x, ax, _m=n.monoid:
-                     collectives.reduce_scatter(x, ax, _m),
-                     f"ring RS({n.monoid.name})")
-    if n.kind == OpKind.ALLGATHER:
-        return Stage("allgather",
-                     lambda x, ax: collectives.all_gather(x, ax),
-                     "ring AG")
-    if n.kind == OpKind.ALLTOALL:
-        return Stage("alltoall",
-                     lambda x, ax: collectives.all_to_all(x, ax),
-                     "shifted-ppermute A2A")
-    if n.kind == OpKind.SCAN:
-        return Stage("scan",
-                     lambda x, ax, _m=n.monoid, _e=n.exclusive:
-                     collectives.prefix_scan(x, ax, _m, exclusive=_e),
-                     f"rank scan({n.monoid.name})")
-    if n.kind == OpKind.BCAST:
-        return Stage("bcast",
-                     lambda x, ax, _r=n.root:
-                     collectives.broadcast(x, ax, _r),
-                     f"tree bcast(root={n.root})")
-    raise ValueError(f"cannot lower node {n}")
+        for g in groups:
+            visit(g)
+        return ordered
 
 
 # ---------------------------------------------------------------------------
-# Public entry points
+# Pass 3: SelectSchedule — latency- vs bandwidth-optimal rings
 # ---------------------------------------------------------------------------
 
-def compile_rank_local(prog: SwitchProgram, axis_name: str) -> CompiledProgram:
+_RESCHEDULABLE = {"allreduce", "map+allreduce"}
+
+
+class SelectSchedule:
+    """Annotate all-reduce stages with the ring schedule to emit.
+
+    Per-rank payload bytes are propagated from ``ctx.in_avals`` through the
+    DAG; a stage whose payload is below ``CollectiveConfig.
+    latency_optimal_below`` gets the (n-1)-hop full-message latency ring,
+    larger ones the chunked RS∘AG bandwidth ring.  The analytic model in
+    :mod:`repro.core.netmodel` supplies predicted times (recorded in the
+    stage desc) and the crossover when no explicit threshold is configured.
+    """
+
+    name = "select_schedule"
+
+    def run(self, groups: list[StageIR],
+            ctx: CompileContext) -> list[StageIR]:
+        nbytes = self._value_bytes(ctx)
+        out: list[StageIR] = []
+        for g in groups:
+            if g.kind not in _RESCHEDULABLE:
+                out.append(g)
+                continue
+            red = next(nd for nd in g.nodes
+                       if nd.op.kind in (OpKind.REDUCE,
+                                         OpKind.REDUCE_SCATTER))
+            if red.op.codec.combine_encoded is not None:
+                # the encoded-domain combine only exists as the chunked
+                # RS∘AG walk — there is no latency-ring variant to pick
+                out.append(dataclasses.replace(
+                    g, schedule="bandwidth",
+                    desc=f"encoded-domain ({red.op.codec.name}) RS∘AG walk "
+                         "(fixed schedule)"))
+                continue
+            b = nbytes.get(g.in_vids[0]) if nbytes is not None else None
+            if b is not None:
+                # what actually travels: the sunk codec shrinks the wire
+                b = int(b * red.op.codec.wire_ratio)
+            out.append(dataclasses.replace(
+                g, bytes_in=b, **self._decide(b, ctx)))
+        return out
+
+    def _decide(self, payload: Optional[int], ctx: CompileContext) -> dict:
+        if payload is None:
+            return {"schedule": "bandwidth",
+                    "desc": "RS∘AG ring (payload unknown; "
+                            "bandwidth-optimal default)"}
+        n = ctx.axis_size or 2
+        threshold = ctx.latency_optimal_below
+        if threshold is None:
+            threshold = netmodel.ring_crossover_bytes(n, ctx.net)
+        t_lat = netmodel.ring_allreduce_time(n, payload, ctx.net,
+                                             latency_optimal=True)
+        t_bw = netmodel.ring_allreduce_time(n, payload, ctx.net,
+                                            latency_optimal=False)
+        sched = "latency" if payload < threshold else "bandwidth"
+        return {"schedule": sched,
+                "desc": f"{payload}B/rank vs threshold {threshold}B → "
+                        f"{sched}-optimal ring "
+                        f"(model: lat {t_lat * 1e6:.1f}us, "
+                        f"bw {t_bw * 1e6:.1f}us)"}
+
+    @staticmethod
+    def _value_bytes(ctx: CompileContext) -> Optional[dict[int, int]]:
+        """Per-rank payload bytes for every DAG value, or None if unknown.
+
+        Maps preserve their (first) input's size — the standard
+        size-preserving assumption for hop-fusable maps.
+        """
+        if ctx.in_avals is None or ctx.axis_size is None:
+            return None
+        n = ctx.axis_size
+        nbytes: dict[int, int] = {}
+        for i, aval in enumerate(ctx.in_avals):
+            size = int(math.prod(aval.shape)) if aval.shape else 1
+            nbytes[i] = size * jnp.dtype(aval.dtype).itemsize
+        for nd in ctx.dag.nodes:
+            src = nbytes.get(nd.inputs[0])
+            if src is None:
+                continue
+            k = nd.op.kind
+            if k == OpKind.ALLGATHER:
+                nbytes[nd.out] = src * n
+            elif k == OpKind.REDUCE_SCATTER:
+                nbytes[nd.out] = max(src // n, 1)
+            else:                       # MAP/REDUCE/A2A/SCAN/BCAST preserve
+                nbytes[nd.out] = src    # (WIRE nodes are gone by Legalize)
+        return nbytes
+
+
+# ---------------------------------------------------------------------------
+# Pass 4: Emit
+# ---------------------------------------------------------------------------
+
+class Emit:
+    """Lower every StageIR to a rank-local callable."""
+
+    name = "emit"
+
+    def run(self, groups: list[StageIR], ctx: CompileContext) -> list[Stage]:
+        return [self._emit(g) for g in groups]
+
+    def _emit(self, g: StageIR) -> Stage:
+        run = getattr(self, "_" + g.kind.replace("+", "_"))(g)
+        return Stage(g.kind, run, g.desc, g.in_vids, g.out_vids, g.schedule)
+
+    # -- fused stages --------------------------------------------------------
+
+    @staticmethod
+    def _scan_allgather(g: StageIR):
+        scan_op = g.nodes[1].op
+
+        def run(args, ax, _m=scan_op.monoid, _ex=scan_op.exclusive):
+            (x,) = args
+            if _m.name == "add" and not _ex:
+                return (fused.allgather_op_allgather(x, ax),)
+            return (fused.scan_then_allgather(x, ax, _m, exclusive=_ex),)
+        return run
+
+    @staticmethod
+    def _allreduce_alltoall(g: StageIR):
+        def run(args, ax):
+            hist, keys = args
+            return fused.fused_allreduce_alltoall(hist, keys, ax)
+        return run
+
+    @staticmethod
+    def _map_allreduce(g: StageIR):
+        mp, red = g.nodes[0].op, g.nodes[1].op
+        lat = g.schedule == "latency"
+
+        def run(args, ax, _f=mp.fn, _m=red.monoid, _c=red.codec, _l=lat):
+            (x,) = args
+            return (collectives.all_reduce(_f(x), ax, _m, codec=_c,
+                                           latency_optimal=_l),)
+        return run
+
+    @staticmethod
+    def _map_reduce_scatter(g: StageIR):
+        mp, rs = g.nodes[0].op, g.nodes[1].op
+
+        def run(args, ax, _f=mp.fn, _m=rs.monoid, _c=rs.codec):
+            (x,) = args
+            return (fused.map_reduce_scatter(x, ax, _f, _m, codec=_c),)
+        return run
+
+    @staticmethod
+    def _allgather_map(g: StageIR):
+        mp = g.nodes[1].op
+
+        def run(args, ax, _f=mp.fn):
+            (x,) = args
+            return (fused.allgather_map(x, ax, _f),)
+        return run
+
+    # -- single-node lowerings ----------------------------------------------
+
+    @staticmethod
+    def _map(g: StageIR):
+        op = g.nodes[0].op
+
+        def run(args, ax, _f=op.fn):
+            return (_f(*args),)
+        return run
+
+    @staticmethod
+    def _allreduce(g: StageIR):
+        op = g.nodes[-1].op if g.nodes[-1].op.kind == OpKind.REDUCE \
+            else g.nodes[0].op           # RS∘AG group: monoid/codec on RS
+        lat = g.schedule == "latency"
+
+        def run(args, ax, _m=op.monoid, _c=op.codec, _l=lat):
+            (x,) = args
+            return (collectives.all_reduce(x, ax, _m, codec=_c,
+                                           latency_optimal=_l),)
+        return run
+
+    @staticmethod
+    def _reduce_scatter(g: StageIR):
+        op = g.nodes[0].op
+
+        def run(args, ax, _m=op.monoid, _c=op.codec):
+            (x,) = args
+            return (collectives.reduce_scatter(x, ax, _m, codec=_c),)
+        return run
+
+    @staticmethod
+    def _allgather(g: StageIR):
+        def run(args, ax):
+            (x,) = args
+            return (collectives.all_gather(x, ax),)
+        return run
+
+    @staticmethod
+    def _alltoall(g: StageIR):
+        def run(args, ax):
+            (x,) = args
+            return (collectives.all_to_all(x, ax),)
+        return run
+
+    @staticmethod
+    def _scan(g: StageIR):
+        op = g.nodes[0].op
+
+        def run(args, ax, _m=op.monoid, _e=op.exclusive):
+            (x,) = args
+            return (collectives.prefix_scan(x, ax, _m, exclusive=_e),)
+        return run
+
+    @staticmethod
+    def _bcast(g: StageIR):
+        op = g.nodes[0].op
+
+        def run(args, ax, _r=op.root):
+            (x,) = args
+            return (collectives.broadcast(x, ax, _r),)
+        return run
+
+
+# ---------------------------------------------------------------------------
+# The pipeline & public entry points
+# ---------------------------------------------------------------------------
+
+DEFAULT_PIPELINE = (Legalize(), FuseHops(), SelectSchedule(), Emit())
+
+
+def run_pipeline(dag: DagProgram, ctx: CompileContext,
+                 pipeline=DEFAULT_PIPELINE):
+    ctx.dag = dag                       # Legalize may rewrite; keep current
+    unit: Any = dag
+    for p in pipeline:
+        unit = p.run(unit, ctx)
+        if isinstance(unit, DagProgram):
+            ctx.dag = unit
+    return unit, ctx.dag
+
+
+def compile_rank_local(
+    prog: ProgramLike,
+    axis_name: str,
+    *,
+    axis_size: Optional[int] = None,
+    config: Any = None,
+    in_avals: Optional[Sequence[Any]] = None,
+    pipeline=DEFAULT_PIPELINE,
+) -> CompiledProgram:
     """Compile to a rank-local callable (for use inside an existing
-    shard_map region, e.g. embedded in a train step)."""
-    stages = _fuse(list(prog.nodes), axis_name)
-    return CompiledProgram(stages, prog, axis_name)
+    shard_map region, e.g. embedded in a train step).
+
+    ``prog`` may be a traced :class:`DagProgram`, a legacy chain
+    :class:`SwitchProgram`, or a plain function (traced on the fly).
+    """
+    dag = _as_dag(prog)
+    ctx = CompileContext(axis_name=axis_name, axis_size=axis_size,
+                         config=config, in_avals=in_avals)
+    stages, final_dag = run_pipeline(dag, ctx, pipeline)
+    return CompiledProgram(stages, final_dag, axis_name)
 
 
 def compile_program(
-    prog: SwitchProgram,
+    prog: ProgramLike,
     mesh: jax.sharding.Mesh,
     axis_name: str,
     in_specs,
     out_specs,
     *,
     jit: bool = True,
+    config: Any = None,
+    in_avals: Optional[Sequence[Any]] = None,
 ) -> Callable:
     """Emit the full "CGRA binary": one shard_map-wrapped, jitted callable
     executing every fused stage in a single SPMD program."""
-    compiled = compile_rank_local(prog, axis_name)
+    axis_size = dict(zip(mesh.axis_names, mesh.devices.shape))[axis_name]
+    compiled = compile_rank_local(prog, axis_name, axis_size=axis_size,
+                                  config=config, in_avals=in_avals)
 
-    def run(x):
-        return compiled(x)
+    def run(*xs):
+        return compiled(*xs)
 
     fn = jax.shard_map(run, mesh=mesh, in_specs=in_specs,
                        out_specs=out_specs, check_vma=False)
     out = jax.jit(fn) if jit else fn
-    out.stages = compiled.stage_kinds()  # type: ignore[attr-defined]
+    out.stages = compiled.stage_kinds()        # type: ignore[attr-defined]
+    out.schedules = compiled.stage_schedules()  # type: ignore[attr-defined]
+    out.compiled = compiled                    # type: ignore[attr-defined]
     return out

@@ -30,6 +30,7 @@ from repro.core import ring
 from repro.core.types import ADD, Monoid
 from repro.core import collectives
 from repro.core.lookaside import distributed_prefix_sum
+from repro.core.wire import IDENTITY, WireCodec
 
 PyTree = Any
 
@@ -59,6 +60,16 @@ def allgather_op_allgather(x: jax.Array, axis_name: str) -> jax.Array:
     gather round instead of two, no redundant endpoint compute."""
     scanned_local = distributed_prefix_sum(x, axis_name)
     return ring.ring_all_gather(scanned_local, axis_name)
+
+
+def scan_then_allgather(x: jax.Array, axis_name: str, monoid: Monoid = ADD,
+                        *, exclusive: bool = False) -> jax.Array:
+    """Generalized Fig. 5 fusion: cross-rank ``monoid`` prefix scan with the
+    finished blocks gathered in the same program — one gather round for any
+    user-defined (Type 2) scan op, not just the prefix-sum special case."""
+    scanned = collectives.prefix_scan(x, axis_name, monoid,
+                                      exclusive=exclusive)
+    return ring.ring_all_gather(scanned, axis_name)
 
 
 # ---------------------------------------------------------------------------
@@ -111,12 +122,12 @@ def fused_allreduce_alltoall(hist: jax.Array, keys: jax.Array,
 
 def map_reduce_scatter(x: jax.Array, axis_name: str,
                        map_fn: Callable[[jax.Array], jax.Array],
-                       monoid: Monoid = ADD) -> jax.Array:
+                       monoid: Monoid = ADD,
+                       codec: WireCodec = IDENTITY) -> jax.Array:
     """map ∘ reduce-scatter in one schedule: the map is applied to each
     chunk right before it enters the ring (no full-size intermediate)."""
-    n = lax.axis_size(axis_name)
     mapped = map_fn(x)  # chunk-wise map fused by XLA into the hop loop
-    return ring.ring_reduce_scatter(mapped, axis_name, monoid)
+    return collectives.reduce_scatter(mapped, axis_name, monoid, codec=codec)
 
 
 def allgather_map(x: jax.Array, axis_name: str,

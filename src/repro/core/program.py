@@ -4,12 +4,20 @@ The paper's toolchain (§VI.B): parse MPI source → LLVM IR → dataflow graph 
 schedule/register-allocate onto the CGRA → binary carried as an argument of
 the fused-collective routine.
 
-Here the user builds a small dataflow graph of collective and map nodes; the
-compiler (core/compiler.py) legalizes it, applies fusion rules, and emits a
-single JAX callable executing under one `shard_map` — the "CGRA binary" is
-the jitted HLO.  This is the mechanism by which arbitrary *chains* of
-collectives and maps become one in-network program (Type 4) rather than a
-sequence of endpoint round-trips.
+The IR here is a true dataflow **DAG** (:class:`DagProgram`): nodes with
+explicit inputs and outputs over numbered values, multiple program inputs
+and multiple program outputs.  Users normally do not build it by hand —
+they write a plain Python function over symbolic values and call
+:func:`repro.core.tracing.trace`; the compiler (core/compiler.py) runs a
+pass pipeline (Legalize → FuseHops → SelectSchedule → Emit) over the DAG
+and emits a single JAX callable executing under one `shard_map` — the
+"CGRA binary" is the jitted HLO.  This is the mechanism by which arbitrary
+*graphs* of collectives and maps become one in-network program (Type 4)
+rather than a sequence of endpoint round-trips.
+
+:class:`SwitchProgram` — the original linear chain-of-nodes spelling — is
+kept as a thin front-end shim; :meth:`SwitchProgram.to_dag` builds the
+degenerate single-input chain DAG.
 
 Node vocabulary (the "SPU instruction set" at graph granularity):
   MAP(fn)              — elementwise/user map, fusable into adjacent hops
@@ -104,12 +112,87 @@ def Wire(codec: WireCodec) -> Node:
     return Node(OpKind.WIRE, codec=codec)
 
 
+# ---------------------------------------------------------------------------
+# DAG IR — the compiler's native program form
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class DagNode:
+    """One op applied to numbered values.
+
+    Value ids 0..num_inputs-1 are the program inputs; every node defines one
+    fresh value (``out``).  Only MAP may take more than one input.
+    """
+
+    op: Node
+    inputs: tuple[int, ...]
+    out: int
+
+    def label(self) -> str:
+        return self.op.label()
+
+
+@dataclasses.dataclass
+class DagProgram:
+    """A multi-input, multi-output dataflow graph of switch ops.
+
+    ``nodes`` is in value-definition order, which is always a valid
+    topological order (a node can only consume already-defined values —
+    enforced by :meth:`validate`).
+    """
+
+    num_inputs: int
+    nodes: Sequence[DagNode]
+    outputs: tuple[int, ...]
+    name: str = "program"
+
+    def __post_init__(self):
+        self.nodes = tuple(self.nodes)
+        self.outputs = tuple(self.outputs)
+        self.validate()
+
+    def validate(self) -> None:
+        defined = set(range(self.num_inputs))
+        for nd in self.nodes:
+            for vid in nd.inputs:
+                if vid not in defined:
+                    raise ValueError(
+                        f"node {nd.label()} consumes undefined value {vid}")
+            if nd.out in defined:
+                raise ValueError(f"value {nd.out} defined twice")
+            if nd.op.kind == OpKind.MAP:
+                if not nd.inputs:
+                    raise ValueError("map takes at least one input, got 0")
+            elif len(nd.inputs) != 1:
+                raise ValueError(
+                    f"{nd.op.kind.value} takes exactly one input, "
+                    f"got {len(nd.inputs)}")
+            defined.add(nd.out)
+        for vid in self.outputs:
+            if vid not in defined:
+                raise ValueError(f"program output {vid} is undefined")
+        if not self.outputs:
+            raise ValueError("program has no outputs")
+
+    def users(self) -> dict[int, list[DagNode]]:
+        """value id → nodes consuming it (program outputs not included)."""
+        out: dict[int, list[DagNode]] = {}
+        for nd in self.nodes:
+            for vid in nd.inputs:
+                out.setdefault(vid, []).append(nd)
+        return out
+
+    def labels(self) -> list[str]:
+        return [nd.label() for nd in self.nodes]
+
+
 @dataclasses.dataclass
 class SwitchProgram:
-    """A linear dataflow chain (the common fused-collective shape).
+    """A linear dataflow chain — kept as a thin shim over the DAG IR.
 
-    The paper's examples (Allgather_op_Allgather, AllReduce+AlltoAll,
-    MapReduce) are all chains; richer DAGs reduce to chains per-tensor.
+    The paper's examples (Allgather_op_Allgather, MapReduce) are chains;
+    :meth:`to_dag` converts to the compiler's native :class:`DagProgram`.
+    Prefer :func:`repro.core.tracing.trace` for new programs.
     """
 
     nodes: Sequence[Node]
@@ -120,3 +203,28 @@ class SwitchProgram:
 
     def labels(self) -> list[str]:
         return [n.label() for n in self.nodes]
+
+    def to_dag(self) -> DagProgram:
+        """Build the degenerate chain DAG: one input, each node consuming
+        the previous node's value.
+
+        Exception (the historical "tuple hack"): the exact chain
+        ``[Reduce(m), AllToAll()]`` meant *two independent tensors* — an
+        all-reduced histogram plus an all-to-all'd key array — flowing as a
+        tuple.  That spelling converts to the true two-input, two-output
+        DAG the fusion pattern expects.
+        """
+        if (len(self.nodes) == 2
+                and self.nodes[0].kind == OpKind.REDUCE
+                and self.nodes[1].kind == OpKind.ALLTOALL):
+            red = DagNode(self.nodes[0], (0,), 2)
+            a2a = DagNode(self.nodes[1], (1,), 3)
+            return DagProgram(2, (red, a2a), (red.out, a2a.out), self.name)
+        dag_nodes: list[DagNode] = []
+        vid = 0
+        next_vid = 1
+        for n in self.nodes:
+            dag_nodes.append(DagNode(n, (vid,), next_vid))
+            vid = next_vid
+            next_vid += 1
+        return DagProgram(1, tuple(dag_nodes), (vid,), self.name)

@@ -1,0 +1,175 @@
+"""Traced-DAG frontend — write switch programs as plain Python functions.
+
+The paper's toolchain starts from user source and recovers a dataflow
+graph; here the user writes an ordinary function over symbolic
+:class:`Value` handles and :func:`trace` records the graph directly:
+
+    from repro import core as acis
+
+    def histogram_shuffle(hist, keys):
+        h = acis.reduce(acis.map(jnp.square, hist))
+        k = acis.all_to_all(keys)
+        return h, k
+
+    prog = acis.trace(histogram_shuffle)          # -> DagProgram
+    fn = engine.compile(prog, mesh, in_specs, out_specs)
+
+Every op below accepts and returns :class:`Value` handles and may only be
+called on values of the trace in progress.  Multiple inputs and multiple
+outputs are natural — no tuple hacks.  Node creation order is the DAG's
+topological order.
+"""
+
+from __future__ import annotations
+
+import builtins
+import inspect
+from typing import Callable, Optional, Union
+
+from repro.core.program import DagNode, DagProgram, Node, OpKind
+from repro.core.types import ADD, Monoid
+from repro.core.wire import WireCodec
+
+
+class Value:
+    """Symbolic handle to one tensor flowing through a traced program."""
+
+    __slots__ = ("_tracer", "vid")
+
+    def __init__(self, tracer: "_Tracer", vid: int):
+        self._tracer = tracer
+        self.vid = vid
+
+    def __repr__(self):  # pragma: no cover
+        return f"Value({self.vid})"
+
+
+class _Tracer:
+    def __init__(self, num_inputs: int):
+        self.num_inputs = num_inputs
+        self.nodes: list[DagNode] = []
+        self._next_vid = num_inputs
+
+    def emit(self, op: Node, inputs: tuple[Value, ...]) -> Value:
+        for v in inputs:
+            if not isinstance(v, Value):
+                raise TypeError(
+                    f"{op.kind.value} expects traced Values, got "
+                    f"{type(v).__name__}; switch ops only run under trace()")
+            if v._tracer is not self:
+                raise ValueError(
+                    f"{op.kind.value} received a Value from a different "
+                    "trace — values cannot cross trace boundaries")
+        out = self._next_vid
+        self._next_vid += 1
+        self.nodes.append(DagNode(op, tuple(v.vid for v in inputs), out))
+        return Value(self, out)
+
+
+_ACTIVE: list[_Tracer] = []
+
+
+def _current(op_name: str) -> _Tracer:
+    if not _ACTIVE:
+        raise RuntimeError(
+            f"acis.{op_name} called outside trace(); wrap the program in "
+            "a function and pass it to trace() / engine.compile()")
+    return _ACTIVE[-1]
+
+
+def trace(fn: Callable, *, name: Optional[str] = None,
+          num_inputs: Optional[int] = None) -> DagProgram:
+    """Trace ``fn`` (a function of Value handles) into a :class:`DagProgram`.
+
+    The program's input arity is the function's positional arity, not
+    counting parameters with defaults (override with ``num_inputs`` for
+    ``*args`` signatures); its outputs are whatever the function returns —
+    a Value or a tuple/list of Values.
+    """
+    if num_inputs is None:
+        sig = inspect.signature(fn)
+        if any(p.kind == p.VAR_POSITIONAL for p in sig.parameters.values()):
+            raise ValueError("pass num_inputs= for *args signatures")
+        # parameters with defaults are configuration, not program inputs —
+        # feeding them Values would smuggle symbols into e.g. `exclusive=`
+        num_inputs = len([
+            p for p in sig.parameters.values()
+            if p.kind in (p.POSITIONAL_ONLY, p.POSITIONAL_OR_KEYWORD)
+            and p.default is p.empty])
+    if num_inputs < 1:
+        raise ValueError("traced programs need at least one input")
+    tracer = _Tracer(num_inputs)
+    args = [Value(tracer, i) for i in range(num_inputs)]
+    _ACTIVE.append(tracer)
+    try:
+        result = fn(*args)
+    finally:
+        _ACTIVE.pop()
+    outs = result if isinstance(result, (tuple, builtins.list)) else (result,)
+    for v in outs:
+        if not isinstance(v, Value) or v._tracer is not tracer:
+            raise TypeError(
+                "traced function must return Value(s) from this trace, got "
+                f"{type(v).__name__}")
+    return DagProgram(num_inputs, tuple(tracer.nodes),
+                      tuple(v.vid for v in outs),
+                      name or getattr(fn, "__name__", "traced"))
+
+
+# -- traced ops (the user-facing program vocabulary) -------------------------
+
+def map(fn: Callable, *xs: Value, name: str = "") -> Value:  # noqa: A001
+    """Apply ``fn`` elementwise/locally; fusable into adjacent hops.
+
+    ``fn`` must be *chunk-local* (elementwise or otherwise independent of
+    how the tensor is split across ranks): when the compiler fuses it into
+    a collective's hop loop it runs once per in-flight chunk, so a
+    function that mixes values across positions (e.g. ``cumsum``) would
+    compute something different fused vs unfused.  That is the IR's MAP
+    contract, not a compiler quirk — use ``scan`` for cross-position ops.
+
+    Accepts multiple inputs (``fn`` is called as ``fn(*tensors)``) — the
+    only op that may, which is what lets one program combine tensors.
+    """
+    if not xs:
+        raise TypeError("map needs at least one input value")
+    return _current("map").emit(
+        Node(OpKind.MAP, fn=fn, name=name or getattr(fn, "__name__", "")), xs)
+
+
+def _unary(op_name: str, op: Node, x: Value) -> Value:
+    # always emit into the *active* trace — going through the Value's own
+    # tracer would let a handle stashed from a finished trace silently
+    # append nodes to a dead graph
+    return _current(op_name).emit(op, (x,))
+
+
+def reduce(x: Value, monoid: Monoid = ADD) -> Value:  # noqa: A001
+    return _unary("reduce", Node(OpKind.REDUCE, monoid=monoid), x)
+
+
+def reduce_scatter(x: Value, monoid: Monoid = ADD) -> Value:
+    return _unary("reduce_scatter",
+                  Node(OpKind.REDUCE_SCATTER, monoid=monoid), x)
+
+
+def all_gather(x: Value) -> Value:
+    return _unary("all_gather", Node(OpKind.ALLGATHER), x)
+
+
+def all_to_all(x: Value) -> Value:
+    return _unary("all_to_all", Node(OpKind.ALLTOALL), x)
+
+
+def scan(x: Value, monoid: Monoid = ADD, *, exclusive: bool = False) -> Value:
+    return _unary("scan",
+                  Node(OpKind.SCAN, monoid=monoid, exclusive=exclusive), x)
+
+
+def bcast(x: Value, root: int = 0) -> Value:
+    return _unary("bcast", Node(OpKind.BCAST, root=root), x)
+
+
+def wire(codec: WireCodec, x: Value) -> Value:
+    """Declare the wire format for the collective this value feeds."""
+    return _unary("wire", Node(OpKind.WIRE, codec=codec), x)

@@ -89,6 +89,45 @@ def test_compiled_mapreduce_end_to_end(mesh8, rng):
         np.testing.assert_allclose(out[i], want, rtol=1e-4, atol=1e-4)
 
 
+def test_compile_program_accepts_plain_function(mesh8, rng):
+    """compile_program traces a raw python function on the fly."""
+    from repro import core as acis
+
+    fn = compile_program(
+        lambda x: acis.all_gather(acis.scan(acis.all_gather(x))),
+        mesh8, "data", P("data"), P(None))
+    assert fn.stages == ["scan+allgather"]
+    x = rng.standard_normal((N * 4,)).astype(np.float32)
+    np.testing.assert_allclose(np.asarray(fn(jnp.asarray(x))),
+                               np.cumsum(x), rtol=1e-4, atol=1e-4)
+
+
+def test_pipeline_is_composable():
+    """Dropping FuseHops' patterns must still yield a runnable program —
+    every node lowers on its own (the pipeline stages are independent)."""
+    from repro.core.compiler import (DEFAULT_PIPELINE, Emit, FuseHops,
+                                     Legalize, SelectSchedule,
+                                     compile_rank_local)
+
+    unfused = (Legalize(), FuseHops(patterns=()), SelectSchedule(), Emit())
+    prog = SwitchProgram([AllGather(), Scan(), AllGather()], "fig5")
+    compiled = compile_rank_local(prog, "data", pipeline=unfused)
+    assert compiled.stage_kinds() == ["allgather", "scan", "allgather"]
+    assert [type(p).__name__ for p in DEFAULT_PIPELINE] == \
+        ["Legalize", "FuseHops", "SelectSchedule", "Emit"]
+
+
+def test_compile_program_reports_schedules(mesh8):
+    from repro import core as acis
+
+    eng = acis.make_engine("acis", latency_optimal_below=1 << 30)
+    fn = eng.compile(acis.trace(lambda x: acis.reduce(x)), mesh8,
+                     P("data", None), P("data", None),
+                     in_avals=(jax.ShapeDtypeStruct((1, 8), jnp.float32),))
+    assert fn.stages == ["allreduce"]
+    assert fn.schedules == ["latency"]
+
+
 def test_compiled_bcast_scan_chain(mesh8, rng):
     """A chain the paper can't do in one switch pass still compiles to a
     single SPMD program (one XLA computation, no host round trips)."""

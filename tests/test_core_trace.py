@@ -1,0 +1,453 @@
+"""Traced-DAG frontend + pass pipeline: tracer round-trip, golden fusion
+patterns, multi-output correctness vs the XLA baseline, chain-shim
+backward-compat, and the SelectSchedule latency/bandwidth crossover."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro import core as acis
+from repro.core import MAX, SwitchProgram, compile_rank_local
+from repro.core.compiler import CompileContext, Legalize
+from repro.core.program import OpKind
+from repro.core.wire import BF16
+
+N = 8
+
+
+# ---------------------------------------------------------------------------
+# tracer round-trip
+# ---------------------------------------------------------------------------
+
+def test_trace_roundtrip_labels_and_arity():
+    def fem(x):
+        return acis.all_gather(acis.scan(acis.all_gather(x)))
+
+    prog = acis.trace(fem)
+    assert prog.num_inputs == 1
+    assert prog.labels() == ["allgather", "scan:add", "allgather"]
+    assert len(prog.outputs) == 1
+
+    compiled = compile_rank_local(prog, "data")
+    assert compiled.stage_kinds() == ["scan+allgather"]
+
+
+def test_trace_multi_input_multi_output():
+    def two(a, b):
+        return acis.reduce(a), acis.all_to_all(b)
+
+    prog = acis.trace(two)
+    assert prog.num_inputs == 2
+    assert len(prog.outputs) == 2
+
+
+def test_trace_rejects_untraced_and_foreign_values():
+    with pytest.raises(RuntimeError):
+        acis.reduce(jnp.ones(3))
+
+    other = acis.trace(lambda x: acis.reduce(x))
+    del other
+
+    def bad(x):
+        leak = acis.trace(lambda y: acis.reduce(y))
+        return x  # returning the input is fine; mixing values is not
+
+    acis.trace(bad)  # nested trace is isolated — must not blow up
+
+    with pytest.raises(TypeError):
+        acis.trace(lambda x: 42)  # non-Value output
+
+
+def test_stale_value_from_finished_trace_is_rejected():
+    stash = {}
+    acis.trace(lambda x: stash.setdefault("v", acis.reduce(x)))
+    # unary op on the stale handle inside a fresh trace must not silently
+    # append to the dead graph
+    with pytest.raises(ValueError):
+        acis.trace(lambda y: acis.all_gather(stash["v"]))
+    # ... and outside any trace it's the plain outside-trace error
+    with pytest.raises(RuntimeError):
+        acis.reduce(stash["v"])
+
+
+def test_trace_ignores_defaulted_params():
+    def fn(x, exclusive=False):
+        return acis.scan(x, exclusive=exclusive)
+
+    prog = acis.trace(fn)
+    assert prog.num_inputs == 1
+    assert prog.labels() == ["scan:add"]
+    assert prog.nodes[0].op.exclusive is False
+
+
+def test_trace_dce_drops_unused_branch():
+    def fn(x):
+        acis.all_gather(x)          # dead: result unused
+        return acis.reduce(x)
+
+    compiled = compile_rank_local(acis.trace(fn), "data")
+    assert compiled.stage_kinds() == ["allreduce"]
+
+
+# ---------------------------------------------------------------------------
+# golden stage lists per fusion pattern
+# ---------------------------------------------------------------------------
+
+def test_golden_ag_scan_ag():
+    prog = acis.trace(lambda x: acis.all_gather(acis.scan(acis.all_gather(x))))
+    assert compile_rank_local(prog, "data").stage_kinds() == ["scan+allgather"]
+
+
+def test_golden_ar_plus_a2a():
+    prog = acis.trace(lambda h, k: (acis.reduce(h), acis.all_to_all(k)))
+    assert compile_rank_local(prog, "data").stage_kinds() == \
+        ["allreduce+alltoall"]
+
+
+def test_golden_ar_a2a_not_fused_when_dependent():
+    # a2a(reduce(x)) is a dependency chain, not the independent pair
+    prog = acis.trace(lambda x: acis.all_to_all(acis.reduce(x)))
+    assert compile_rank_local(prog, "data").stage_kinds() == \
+        ["allreduce", "alltoall"]
+
+
+def test_golden_ar_a2a_not_fused_for_non_add():
+    # the shared-schedule kernel only implements the add combine
+    prog = acis.trace(lambda h, k: (acis.reduce(h, MAX), acis.all_to_all(k)))
+    kinds = compile_rank_local(prog, "data").stage_kinds()
+    assert "allreduce+alltoall" not in kinds
+
+
+def test_golden_map_into_rs():
+    prog = acis.trace(lambda x: acis.reduce_scatter(acis.map(jnp.square, x)))
+    assert compile_rank_local(prog, "data").stage_kinds() == \
+        ["map+reduce_scatter"]
+
+
+def test_golden_rs_ag():
+    prog = acis.trace(lambda x: acis.all_gather(acis.reduce_scatter(x)))
+    assert compile_rank_local(prog, "data").stage_kinds() == ["allreduce"]
+
+
+def test_golden_wire_sinks_through_pipeline():
+    prog = acis.trace(
+        lambda x: acis.all_gather(acis.reduce_scatter(acis.wire(BF16, x))))
+    compiled = compile_rank_local(prog, "data")
+    assert compiled.stage_kinds() == ["allreduce"]
+    # the codec must have been attached to the fused all-reduce node
+    rs_op = compiled.source.nodes[0].op
+    assert rs_op.codec is BF16
+
+
+def test_wire_codec_travels_through_map():
+    """Old chain semantics: a pending codec survives an intervening MAP
+    and lands on the reduce it ultimately feeds."""
+    prog = acis.trace(
+        lambda x: acis.reduce(acis.map(jnp.square, acis.wire(BF16, x))))
+    compiled = compile_rank_local(prog, "data")
+    assert compiled.stage_kinds() == ["map+allreduce"]
+    red_op = next(nd.op for nd in compiled.source.nodes
+                  if nd.op.kind == OpKind.REDUCE)
+    assert red_op.codec is BF16
+
+    # same through the chain shim spelling
+    chain = SwitchProgram([acis.Wire(BF16), acis.Map(jnp.square, "sq"),
+                           acis.Reduce()])
+    c2 = compile_rank_local(chain, "data")
+    assert c2.stage_kinds() == ["map+allreduce"]
+    red_op2 = next(nd.op for nd in c2.source.nodes
+                   if nd.op.kind == OpKind.REDUCE)
+    assert red_op2.codec is BF16
+
+
+def test_fusion_not_applied_when_intermediate_is_output():
+    # the AG result escapes as a program output → Fig. 5 fusion is illegal
+    def fn(x):
+        g = acis.all_gather(x)
+        return g, acis.all_gather(acis.scan(g))
+
+    kinds = compile_rank_local(acis.trace(fn), "data").stage_kinds()
+    assert "scan+allgather" not in kinds
+
+
+def test_legalize_wire_dropped_on_non_codec_consumer():
+    prog = acis.trace(lambda x: acis.all_gather(acis.wire(BF16, x)))
+    dag = Legalize().run(prog, CompileContext(axis_name="data"))
+    assert [nd.op.kind for nd in dag.nodes] == [OpKind.ALLGATHER]
+
+
+# ---------------------------------------------------------------------------
+# chain-shim backward compat
+# ---------------------------------------------------------------------------
+
+def test_chain_shim_matches_traced_stage_list():
+    chain = SwitchProgram([acis.Map(jnp.square, "sq"), acis.Reduce(),
+                           acis.AllToAll()])
+    traced = acis.trace(
+        lambda h, k: (acis.reduce(acis.map(jnp.square, h)),
+                      acis.all_to_all(k)))
+    assert compile_rank_local(chain, "data").stage_kinds() == \
+        compile_rank_local(traced, "data").stage_kinds() == \
+        ["map+allreduce", "alltoall"]
+
+
+def test_chain_shim_tuple_hack_becomes_two_input_dag():
+    dag = SwitchProgram([acis.Reduce(), acis.AllToAll()]).to_dag()
+    assert dag.num_inputs == 2 and len(dag.outputs) == 2
+    assert compile_rank_local(dag, "data").stage_kinds() == \
+        ["allreduce+alltoall"]
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: multi-output program vs XLA baseline on the 8-device mesh
+# ---------------------------------------------------------------------------
+
+def test_two_input_program_matches_xla_baseline(mesh8, rng):
+    eng = acis.make_engine("acis")
+
+    def histshuf(hist, keys):
+        h = acis.reduce(acis.map(jnp.square, hist, name="sq"))
+        k = acis.all_to_all(keys)
+        return h, k
+
+    fn = eng.compile(histshuf, mesh8, (P("data", None), P("data")),
+                     (P("data", None), P("data")))
+    assert fn.stages == ["map+allreduce", "alltoall"]
+
+    hist = rng.standard_normal((N, 16)).astype(np.float32)
+    keys = rng.standard_normal((N * 8,)).astype(np.float32)
+    h, k = fn(jnp.asarray(hist), jnp.asarray(keys))
+
+    # XLA baseline: endpoint compute + built-in collectives
+    def base(hl, kl):
+        hb = jax.lax.psum(jnp.square(hl), "data")
+        ks = kl.reshape(N, -1)
+        kb = jax.lax.all_to_all(ks, "data", 0, 0, tiled=False).reshape(-1)
+        return hb, kb
+
+    bfn = jax.jit(jax.shard_map(base, mesh=mesh8,
+                                in_specs=(P("data", None), P("data")),
+                                out_specs=(P("data", None), P("data")),
+                                check_vma=False))
+    hb, kb = bfn(jnp.asarray(hist), jnp.asarray(keys))
+    np.testing.assert_allclose(np.asarray(h), np.asarray(hb),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(k), np.asarray(kb),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_fused_pair_program_matches_xla_baseline(mesh8, rng):
+    eng = acis.make_engine("acis")
+    fn = eng.compile(
+        acis.trace(lambda h, k: (acis.reduce(h), acis.all_to_all(k)),
+                   name="nas_is"),
+        mesh8, (P("data", None), P("data")), (P("data", None), P("data")))
+    assert fn.stages == ["allreduce+alltoall"]
+
+    hist = rng.standard_normal((N, 32)).astype(np.float32)
+    keys = rng.standard_normal((N * 16,)).astype(np.float32)
+    h, k = fn(jnp.asarray(hist), jnp.asarray(keys))
+    np.testing.assert_allclose(np.asarray(h)[0], hist.sum(0),
+                               rtol=1e-4, atol=1e-4)
+
+    def base(kl):
+        ks = kl.reshape(N, -1)
+        return jax.lax.all_to_all(ks, "data", 0, 0, tiled=False).reshape(-1)
+
+    bfn = jax.jit(jax.shard_map(base, mesh=mesh8, in_specs=P("data"),
+                                out_specs=P("data"), check_vma=False))
+    np.testing.assert_allclose(np.asarray(k),
+                               np.asarray(bfn(jnp.asarray(keys))), rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# SelectSchedule: the latency_optimal_below crossover
+# ---------------------------------------------------------------------------
+
+def _compiled_ar(eng, nelems):
+    return eng.compile(acis.trace(lambda x: acis.reduce(x)), axis_size=N,
+                       in_avals=(jax.ShapeDtypeStruct((nelems,),
+                                                      jnp.float32),))
+
+
+def test_select_schedule_flips_at_threshold():
+    eng = acis.make_engine("acis", latency_optimal_below=16384)
+    small = _compiled_ar(eng, 64)          # 256 B  << 16 KiB
+    big = _compiled_ar(eng, 1 << 20)       # 4 MiB  >> 16 KiB
+    assert small.stage_schedules() == ["latency"]
+    assert big.stage_schedules() == ["bandwidth"]
+    # right at the boundary: payload == threshold is NOT below it
+    edge = _compiled_ar(eng, 16384 // 4)
+    assert edge.stage_schedules() == ["bandwidth"]
+
+
+def test_select_schedule_threshold_is_config_driven():
+    tiny_thresh = acis.make_engine("acis", latency_optimal_below=8)
+    huge_thresh = acis.make_engine("acis", latency_optimal_below=1 << 30)
+    assert _compiled_ar(tiny_thresh, 1024).stage_schedules() == ["bandwidth"]
+    assert _compiled_ar(huge_thresh, 1024).stage_schedules() == ["latency"]
+
+
+def test_select_schedule_honest_about_encoded_codecs():
+    """A structured codec only exists as the RS∘AG walk — the annotation
+    must say bandwidth even when the threshold would pick latency."""
+    from repro.core.wire import int8_codec
+
+    eng = acis.make_engine("acis", latency_optimal_below=1 << 30)
+    c = eng.compile(
+        acis.trace(lambda x: acis.reduce(acis.wire(int8_codec(), x))),
+        axis_size=N,
+        in_avals=(jax.ShapeDtypeStruct((64,), jnp.float32),))
+    assert c.stage_schedules() == ["bandwidth"]
+    assert "encoded-domain" in c.stages[0].desc
+
+
+def test_dag_rejects_zero_input_map():
+    from repro.core import DagNode, DagProgram, Map
+
+    with pytest.raises(ValueError, match="at least one input"):
+        DagProgram(1, (DagNode(Map(lambda: None), (), 1),), (1,))
+
+
+def test_select_schedule_default_without_shapes():
+    eng = acis.make_engine("acis")
+    c = eng.compile(acis.trace(lambda x: acis.reduce(x)))
+    assert c.stage_schedules() == ["bandwidth"]
+
+
+def test_both_schedules_compute_identical_allreduce(mesh8, rng):
+    x = rng.standard_normal((N, 24)).astype(np.float32)
+    want = np.broadcast_to(x.sum(0), (N, 24))
+    for thresh in (1, 1 << 30):            # forces bandwidth / latency
+        eng = acis.make_engine("acis", latency_optimal_below=thresh)
+        fn = eng.compile(
+            acis.trace(lambda v: acis.reduce(v)), mesh8,
+            P("data", None), P("data", None),
+            in_avals=(jax.ShapeDtypeStruct((1, 24), jnp.float32),))
+        out = np.asarray(fn(jnp.asarray(x)))
+        np.testing.assert_allclose(out, want, rtol=1e-4, atol=1e-4)
+
+
+def test_claimed_reduce_is_not_grouped_twice(mesh8, rng):
+    """An a2a that pairs with a later reduce must not leave that reduce
+    free to be re-grouped by the map-fusion pattern."""
+    def fn(keys, hist):
+        return acis.all_to_all(keys), acis.reduce(acis.map(jnp.square, hist))
+
+    compiled = compile_rank_local(acis.trace(fn), "data")
+    # every value consumed by a stage must be produced exactly once
+    produced = [v for s in compiled.stages for v in s.out_vids]
+    assert len(produced) == len(set(produced))
+
+    keys = rng.standard_normal((N * 8,)).astype(np.float32)
+    hist = rng.standard_normal((N, 16)).astype(np.float32)
+    f = jax.jit(jax.shard_map(
+        lambda k, h: compiled(k, h), mesh=mesh8,
+        in_specs=(P("data"), P("data", None)),
+        out_specs=(P("data"), P("data", None)), check_vma=False))
+    k, h = f(jnp.asarray(keys), jnp.asarray(hist))
+    np.testing.assert_allclose(np.asarray(h)[0], np.square(hist).sum(0),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_wire_codec_on_plain_reduce_scatter(mesh8, rng):
+    """A cast codec on a standalone RS runs the hops in the wire dtype; a
+    structured codec is rejected loudly instead of silently dropped."""
+    from repro.core.wire import int8_codec
+
+    prog = acis.trace(lambda x: acis.reduce_scatter(acis.wire(BF16, x)))
+    compiled = compile_rank_local(prog, "data")
+    assert compiled.stage_kinds() == ["reduce_scatter"]
+
+    x = rng.standard_normal((N, N * 4)).astype(np.float32)
+    f = jax.jit(jax.shard_map(
+        lambda v: compiled(v[0])[None], mesh=mesh8,
+        in_specs=P("data", None), out_specs=P("data", None),
+        check_vma=False))
+    out = np.asarray(f(jnp.asarray(x)))
+    want = x.sum(0).reshape(N, 4)
+    for i in range(N):
+        np.testing.assert_allclose(out[i], want[i], rtol=2e-2, atol=2e-2)
+
+    bad = acis.trace(lambda x: acis.reduce_scatter(acis.wire(int8_codec(), x)))
+    cbad = compile_rank_local(bad, "data")
+    with pytest.raises(ValueError, match="standalone reduce-scatter"):
+        jax.jit(jax.shard_map(
+            lambda v: cbad(v[0])[None], mesh=mesh8,
+            in_specs=P("data", None), out_specs=P("data", None),
+            check_vma=False))(jnp.asarray(x))
+
+
+def test_two_parallel_reduce_a2a_chains_do_not_deadlock(mesh8, rng):
+    """Cross-branch AR+A2A pairing must not create a cycle between two
+    fused groups (each consuming the other's output)."""
+    def fn(x, y):
+        return acis.all_to_all(acis.reduce(x)), acis.all_to_all(acis.reduce(y))
+
+    compiled = compile_rank_local(acis.trace(fn), "data")
+    kinds = compiled.stage_kinds()
+    assert len(kinds) == 4 or "allreduce+alltoall" in kinds
+
+    x = rng.standard_normal((N * 8,)).astype(np.float32)
+    y = rng.standard_normal((N * 8,)).astype(np.float32)
+    f = jax.jit(jax.shard_map(
+        lambda a, b: compiled(a, b), mesh=mesh8,
+        in_specs=(P("data"), P("data")), out_specs=(P("data"), P("data")),
+        check_vma=False))
+    xa, ya = f(jnp.asarray(x), jnp.asarray(y))
+
+    def base(a, b):
+        def a2a(v):
+            return jax.lax.all_to_all(v.reshape(N, -1), "data", 0, 0,
+                                      tiled=False).reshape(-1)
+        return a2a(jax.lax.psum(a, "data")), a2a(jax.lax.psum(b, "data"))
+
+    bf = jax.jit(jax.shard_map(base, mesh=mesh8,
+                               in_specs=(P("data"), P("data")),
+                               out_specs=(P("data"), P("data")),
+                               check_vma=False))
+    bx, by = bf(jnp.asarray(x), jnp.asarray(y))
+    np.testing.assert_allclose(np.asarray(xa), np.asarray(bx), rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(ya), np.asarray(by), rtol=1e-4)
+
+
+def test_wire_coded_reduce_is_not_pair_fused():
+    """A reduce carrying a sunk wire codec must stay unfused — the shared
+    AR+A2A schedule cannot apply codecs, and dropping one silently would
+    change numerics between fused and unfused compiles."""
+    def fn(h, k):
+        return acis.reduce(acis.wire(BF16, h)), acis.all_to_all(k)
+
+    compiled = compile_rank_local(acis.trace(fn), "data")
+    assert sorted(compiled.stage_kinds()) == ["allreduce", "alltoall"]
+    red_op = next(nd.op for nd in compiled.source.nodes
+                  if nd.op.kind == OpKind.REDUCE)
+    assert red_op.codec is BF16
+
+
+def test_select_schedule_counts_wire_bytes():
+    """The crossover must be judged on what travels, not the decoded size:
+    a bf16 codec halves the payload and can flip the ring choice."""
+    eng = acis.make_engine("acis", latency_optimal_below=16384)
+    nelems = 5000                        # f32: 20000B > 16K; bf16 wire: 10000B
+    avals = (jax.ShapeDtypeStruct((nelems,), jnp.float32),)
+    plain = eng.compile(acis.trace(lambda x: acis.reduce(x)),
+                        axis_size=N, in_avals=avals)
+    coded = eng.compile(acis.trace(lambda x: acis.reduce(acis.wire(BF16, x))),
+                        axis_size=N, in_avals=avals)
+    assert plain.stage_schedules() == ["bandwidth"]
+    assert coded.stage_schedules() == ["latency"]
+
+
+# ---------------------------------------------------------------------------
+# engine surface
+# ---------------------------------------------------------------------------
+
+def test_engine_init_state_empty_for_uncompressed():
+    grads = {"w": jnp.ones((4,))}
+    assert acis.make_engine("acis").init_state(grads) is None
+    assert acis.make_engine("xla").init_state(grads) is None
+    res = acis.make_engine("acis_compressed").init_state(grads)
+    assert res is not None and jax.tree.leaves(res)[0].shape == (4,)
