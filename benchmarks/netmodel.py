@@ -14,4 +14,6 @@ from repro.core.netmodel import (  # noqa: F401
     mpi4py_allgather_op_allgather, acis_allgather_op_allgather,
     mpi_allreduce_then_alltoall, acis_fused_allreduce_alltoall,
     ring_allreduce_time, ring_crossover_bytes,
+    ICI, DCI, TIERS, ring_reduce_scatter_time, ring_all_gather_time,
+    hierarchical_allreduce_time,
 )

@@ -1,0 +1,75 @@
+"""Topology-aware compilation on a pod mesh.
+
+Run with:
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+    PYTHONPATH=src python examples/hierarchical_sync.py
+
+One reduce over ``axis="auto"`` is all the program says; the compiler's
+LowerTopology pass knows the mesh has a fast intra-pod axis ("data") and
+a ~10x thinner inter-pod axis ("pod"), lowers the reduce to the
+hierarchical RS(data) -> AR(pod) -> AG(data) schedule, and places the
+engine's wire codec on the thin inter-pod hop only.
+"""
+
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+from jax.sharding import PartitionSpec as P  # noqa: E402
+
+from repro import core as acis  # noqa: E402
+
+
+def main():
+    mesh = jax.make_mesh((2, 4), ("pod", "data"))
+    print(f"mesh: pod=2 x data=4 ({len(jax.devices())} host devices)\n")
+
+    for backend in ("acis_hierarchical", "acis_hierarchical_compressed"):
+        eng = acis.make_engine(backend, inner_axis="data", outer_axis="pod")
+        compiled = eng.compile(
+            lambda g: acis.reduce(g, axis="auto"),
+            in_avals=(jax.ShapeDtypeStruct((1 << 16,), jnp.float32),),
+            axis_size={"data": 4, "pod": 2})
+
+        print(f"== {backend} ==")
+        print("program: reduce(g, axis='auto')")
+        for st in compiled.stages:
+            axis = f"@{st.axis}" if st.axis else ""
+            sched = f" [{st.schedule}]" if st.schedule else ""
+            print(f"  {st.kind}{axis}{sched}  {st.desc}")
+        red = next(nd.op for nd in compiled.source.nodes
+                   if nd.op.kind.value == "reduce")
+        print(f"  -> wire codec on the inter-pod hop: {red.codec.name}\n")
+
+    # and the whole gradient-sync path, end to end on the mesh
+    eng = acis.make_engine("acis_hierarchical", inner_axis="data",
+                           outer_axis="pod")
+    rng = np.random.default_rng(0)
+    g = rng.standard_normal((8, 1000)).astype(np.float32)
+
+    def sync(gl):
+        synced, _ = eng.gradient_sync({"g": gl[0, 0]}, None)
+        return synced["g"][None, None]
+
+    fn = jax.jit(jax.shard_map(sync, mesh=mesh,
+                               in_specs=P("pod", "data", None),
+                               out_specs=P("pod", "data", None),
+                               check_vma=False))
+    out = np.asarray(fn(jnp.asarray(g.reshape(2, 4, 1000))))
+    err = np.abs(out[0, 0] - g.mean(0)).max()
+    print(f"gradient_sync vs flat mean: max err {err:.2e}")
+
+    prog = eng._sync_program(
+        jax.tree_util.tree_structure({"g": 0}),
+        (jax.ShapeDtypeStruct((1000,), jnp.float32),))
+    print("compiled sync stages:",
+          [f"{k}@{a}" if a else k
+           for k, a in zip(prog.stage_kinds(), prog.stage_axes())])
+
+
+if __name__ == "__main__":
+    main()

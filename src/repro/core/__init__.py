@@ -8,20 +8,33 @@ Layering:
   compression top-k / int8 / low-rank wire datatypes
   lookaside   Type 3 stateful ops (error feedback, PowerSGD, scan, GCN)
   fused       Type 4 fused collectives (+ collective matmul)
-  program     DAG IR (DagProgram) + the legacy SwitchProgram chain shim
+  program     DAG IR (DagProgram) + the legacy SwitchProgram chain shim;
+              every collective op carries an ``axis`` (None = engine
+              default, "auto" = all DP axes, tuple = compound)
   tracing     traced frontend: write programs as plain Python functions
-              over symbolic Values (trace / map / reduce / all_gather / …)
-  compiler    pass pipeline — Legalize (DCE, wire sinking) → FuseHops
-              (first-class fusion patterns) → SelectSchedule (latency- vs
-              bandwidth-optimal rings via CollectiveConfig.
-              latency_optimal_below + the netmodel cost model) → Emit
-              (one shard_map program, the "CGRA binary")
-  netmodel    analytic network emulator (paper Table II) — feeds both the
-              benchmark figures and the SelectSchedule cost model
-  topology    hierarchical multi-pod schedules + straggler masking
+              over symbolic Values (trace / map / reduce(axis=…) /
+              all_gather / ef_reduce / …)
+  compiler    pass pipeline — Legalize (DCE, wire sinking) →
+              LowerTopology (resolve axes against the compile Topology;
+              rewrite a compound/"auto" reduce into RS(inner) →
+              AR(outer, coded) → AG(inner), the codec on the thin outer
+              hop only) → FuseHops (first-class same-axis fusion
+              patterns) → SelectSchedule (latency- vs bandwidth-optimal
+              rings via CollectiveConfig.latency_optimal_below + the
+              netmodel cost model, per the link tier each stage actually
+              traverses) → Emit (one shard_map program, the "CGRA
+              binary"; each stage runs over its own axis)
+  netmodel    analytic network emulator (paper Table II), two link tiers
+              (fast intra-pod ICI, ~10× thinner inter-pod DCI) — feeds
+              both the benchmark figures and the SelectSchedule cost model
+  topology    hierarchical multi-pod sync (thin wrapper over the compiled
+              pipeline) + straggler masking
   switchops   SPU instruction registry (jnp refs + Pallas kernels)
   api         CollectiveEngine — the MPI-transparency layer;
-              engine.compile(fn_or_program, ...) is the one entry point
+              engine.compile(fn_or_program, ...) is the one entry point;
+              gradient_sync is itself a compiled switch program
+              (reduce over axis="auto" + error-feedback state), cached
+              per pytree structure
 
 Quick taste of the traced API (usually imported as ``acis``)::
 
@@ -31,6 +44,11 @@ Quick taste of the traced API (usually imported as ``acis``)::
         return acis.all_gather(acis.scan(acis.all_gather(x)))
 
     fn = acis.make_engine("acis").compile(fem, mesh, P("data"), P(None))
+
+    # multi-pod: one reduce over every DP axis — the compiler emits the
+    # hierarchical schedule and compresses only the thin inter-pod hop
+    eng = acis.make_engine("acis_hierarchical_compressed", outer_axis="pod")
+    sync = eng.compile(lambda g: acis.reduce(g, axis="auto"), ...)
 """
 
 from repro.core.types import (ADD, MAX, MIN, PROD, AcisType, Monoid,
@@ -38,12 +56,13 @@ from repro.core.types import (ADD, MAX, MIN, PROD, AcisType, Monoid,
 from repro.core.api import (BACKENDS, CollectiveConfig, CollectiveEngine,
                             make_engine)
 from repro.core.program import (AllGather, AllToAll, Bcast, DagNode,
-                                DagProgram, Map, Node, Reduce, ReduceScatter,
-                                Scan, SwitchProgram, Wire)
-from repro.core.compiler import (CompiledProgram, Stage,
+                                DagProgram, ErrorFeedback, Map, Node, Reduce,
+                                ReduceScatter, Scan, SwitchProgram, Wire)
+from repro.core.compiler import (AxisSpec, CompiledProgram, Stage, Topology,
                                  compile_program, compile_rank_local)
 from repro.core.tracing import (Value, all_gather, all_to_all, bcast,
-                                reduce, reduce_scatter, scan, trace, wire)
+                                ef_reduce, reduce, reduce_scatter, scan,
+                                trace, wire)
 from repro.core.tracing import map  # noqa: A004  (traced op, by design)
 
 __all__ = [
@@ -51,7 +70,8 @@ __all__ = [
     "tree_monoid", "BACKENDS", "CollectiveConfig", "CollectiveEngine",
     "make_engine", "AllGather", "AllToAll", "Bcast", "Map", "Node", "Reduce",
     "ReduceScatter", "Scan", "SwitchProgram", "Wire", "DagNode", "DagProgram",
+    "ErrorFeedback", "AxisSpec", "Topology",
     "CompiledProgram", "Stage", "compile_program", "compile_rank_local",
     "Value", "trace", "map", "reduce", "reduce_scatter", "all_gather",
-    "all_to_all", "scan", "bcast", "wire",
+    "all_to_all", "scan", "bcast", "wire", "ef_reduce",
 ]

@@ -14,6 +14,14 @@ which transport actually runs.  Engines:
 `gradient_sync` operates on *pytrees of gradients* inside a shard_map-manual
 region over the DP axes; everything else in the step (model-parallel math)
 stays in GSPMD-auto land.  See train/step.py for the integration.
+
+All ``acis*`` gradient syncs are one traced switch program — per leaf a
+``reduce(axis="auto")`` (plus error-feedback target/residual maps on the
+compressed backends) — compiled once through the Legalize → LowerTopology
+→ FuseHops → SelectSchedule → Emit pipeline against the engine's
+:class:`~repro.core.compiler.Topology` and cached per pytree structure.
+The hierarchical RS/AR/AG schedule is no longer a call-site convention:
+it is what LowerTopology emits for a multi-axis reduce.
 """
 
 from __future__ import annotations
@@ -25,10 +33,9 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from repro.core import collectives, topology
-from repro.core.lookaside import error_feedback_all_reduce, init_residual
+from repro.core import collectives, compiler, tracing
+from repro.core.lookaside import init_residual
 from repro.core.types import ADD
-from repro.core.wire import CODECS, IDENTITY, int8_codec
 
 PyTree = Any
 
@@ -61,6 +68,7 @@ class CollectiveEngine:
         self.config = config
         self.inner_axis = inner_axis
         self.outer_axis = outer_axis
+        self._sync_cache: dict = {}   # pytree structure → CompiledProgram
 
     # -- properties ---------------------------------------------------------
 
@@ -89,6 +97,33 @@ class CollectiveEngine:
             return init_residual(grads_like, jnp.float32)
         return None
 
+    # -- topology (the compiler's view of this engine's DP axes) -------------
+
+    def topology(self, mesh: Optional[jax.sharding.Mesh] = None, *,
+                 axis_size=None) -> compiler.Topology:
+        """The engine's DP axes as a compile :class:`~repro.core.compiler.
+        Topology`: inner axis on the fast intra-pod tier, outer axis (when
+        configured and present on the mesh) on the thin inter-pod tier.
+
+        ``axis_size`` may be an int (the inner axis) or an {axis: size}
+        mapping — pass the outer size too so SelectSchedule can cost the
+        inter-pod stage against the thin DCI tier on mesh-less compiles.
+        """
+        sizes: dict = {}
+        if isinstance(axis_size, dict):
+            sizes.update(axis_size)
+        elif axis_size is not None:
+            sizes[self.inner_axis] = axis_size
+        if mesh is not None:         # the mesh is authoritative
+            sizes.update(zip(mesh.axis_names, mesh.devices.shape))
+        axes = [compiler.AxisSpec(self.inner_axis,
+                                  sizes.get(self.inner_axis), "ici")]
+        if self.outer_axis is not None and \
+                (mesh is None or self.outer_axis in mesh.axis_names):
+            axes.append(compiler.AxisSpec(self.outer_axis,
+                                          sizes.get(self.outer_axis), "dci"))
+        return compiler.Topology(tuple(axes))
+
     # -- the gradient-sync transport -----------------------------------------
 
     def gradient_sync(self, grads: PyTree, state: PyTree,
@@ -97,50 +132,111 @@ class CollectiveEngine:
 
         Returns (synced_grads, new_state).  Must run inside a shard_map
         region that is manual over `inner_axis` (and `outer_axis` if set).
+
+        Every ``acis*`` backend routes through one compiled switch
+        program (cached per pytree structure): per leaf, a mean-reduce
+        over ``axis="auto"`` — with an error-feedback target/residual
+        around it on the compressed backends.  The LowerTopology pass
+        turns the multi-axis reduce into the hierarchical RS/AR/AG
+        schedule when an outer axis exists.
         """
-        inner, outer = self.inner_axis, self.outer_axis
-        n = lax.axis_size(inner)
-        if outer is not None:
-            n = n * lax.axis_size(outer)
-
         if self.config.backend == "xla":
+            inner, outer = self.inner_axis, self.outer_axis
             axes = (inner,) if outer is None else (inner, outer)
-            synced = jax.tree.map(
-                lambda g: lax.pmean(g, axes), grads)
+            if n_total is None:
+                synced = jax.tree.map(
+                    lambda g: lax.pmean(g, axes), grads)
+            else:   # same divisor override the acis paths honor
+                synced = jax.tree.map(
+                    lambda g: lax.psum(g, axes) / n_total, grads)
             return synced, state
 
+        leaves, treedef = jax.tree_util.tree_flatten(grads)
+        if not leaves:                 # nothing to sync (e.g. frozen subtree)
+            return grads, state
+        avals = tuple(jax.ShapeDtypeStruct(l.shape, l.dtype) for l in leaves)
+        compiled = self._sync_program(treedef, avals, n_total)
         if self.compressed:
-            def sync_leaf(g, r):
-                red, new_r = error_feedback_all_reduce(
-                    g, r, inner,
-                    compressor=self.config.compressor,
-                    topk_ratio=self.config.topk_ratio, mean=False)
-                if outer is not None:
-                    red = collectives.all_reduce(red, outer, ADD)
-                return red / n, new_r
-
-            pairs = jax.tree.map(sync_leaf, grads, state)
-            synced = jax.tree.map(lambda p: p[0], pairs,
-                                  is_leaf=lambda p: isinstance(p, tuple))
-            new_state = jax.tree.map(lambda p: p[1], pairs,
-                                     is_leaf=lambda p: isinstance(p, tuple))
+            res = treedef.flatten_up_to(state)
+            outs = compiled(*leaves, *res)
+            synced = jax.tree_util.tree_unflatten(
+                treedef, outs[:len(leaves)])
+            new_state = jax.tree_util.tree_unflatten(
+                treedef, outs[len(leaves):])
             return synced, new_state
+        outs = compiled(*leaves)
+        if len(leaves) == 1:
+            outs = (outs,)
+        return jax.tree_util.tree_unflatten(treedef, outs), state
 
-        if self.hierarchical:
-            synced = jax.tree.map(
-                lambda g: topology.hierarchical_all_reduce(
-                    g, inner_axis=inner, outer_axis=outer, mean=True),
-                grads)
-            return synced, state
+    def _sync_program(self, treedef, avals: tuple,
+                      n_total: Optional[int] = None):
+        """Build (or fetch) the compiled gradient-sync switch program for
+        one pytree structure.
 
-        # plain acis ring all-reduce (Type 1 on the explicit schedule)
-        def sync_leaf(g):
-            red = collectives.all_reduce(g, inner, ADD)
-            if outer is not None:
-                red = collectives.all_reduce(red, outer, ADD)
-            return red / n
+        ``avals`` (one per leaf) give SelectSchedule per-leaf payload
+        sizes; axis sizes are read live via ``lax.axis_size`` — we are
+        inside the caller's shard_map region at trace time — so the
+        per-tier ring crossover is reachable without a mesh in hand.
+        """
+        cfg = self.config
+        inner, outer = self.inner_axis, self.outer_axis
+        compressed = self.compressed
+        n_leaves = len(avals)
+        sizes = {}
+        for ax in (inner,) + ((outer,) if outer is not None else ()):
+            try:
+                sizes[ax] = lax.axis_size(ax)
+            except Exception:        # not under shard_map over this axis
+                pass
+        # the sizes are part of the key: the same engine may serve meshes
+        # of different DP size, and the schedule choice depends on them
+        key = (treedef, avals, n_total, tuple(sorted(sizes.items())))
+        hit = self._sync_cache.get(key)
+        if hit is not None:
+            return hit
 
-        return jax.tree.map(sync_leaf, grads), state
+        def _mean(y):
+            n = n_total
+            if n is None:
+                n = lax.axis_size(inner)
+                if outer is not None:
+                    n = n * lax.axis_size(outer)
+            return y / n
+
+        def _ef_target(g, r):
+            return g + r.astype(g.dtype)
+
+        def _ef_residual(t, delivered, r):
+            return (t.astype(jnp.float32) - delivered).astype(r.dtype)
+
+        def sync(*args):
+            gs, rs = args[:n_leaves], args[n_leaves:]
+            outs, news = [], []
+            for i in range(n_leaves):
+                if compressed:
+                    t = tracing.map(_ef_target, gs[i], rs[i],
+                                    name="ef_target")
+                    red, dlv = tracing.ef_reduce(
+                        t, compressor=cfg.compressor,
+                        topk_ratio=cfg.topk_ratio, axis="auto")
+                    outs.append(tracing.map(_mean, red, name="mean"))
+                    news.append(tracing.map(_ef_residual, t, dlv, rs[i],
+                                            name="ef_residual"))
+                else:
+                    red = tracing.reduce(gs[i], ADD, axis="auto")
+                    outs.append(tracing.map(_mean, red, name="mean"))
+            return tuple(outs) + tuple(news)
+
+        prog = tracing.trace(
+            sync, name=f"gradient_sync[{cfg.backend}x{n_leaves}]",
+            num_inputs=n_leaves * (2 if compressed else 1))
+        in_avals = avals + (avals if compressed else ())
+        compiled = compiler.compile_rank_local(
+            prog, inner, axis_size=sizes.get(inner), config=cfg,
+            in_avals=in_avals, topology=self.topology(axis_size=sizes))
+        self._sync_cache[key] = compiled
+        return compiled
 
     # -- generic ops (used by MoE dispatch, GCN, examples) -------------------
 
@@ -166,7 +262,7 @@ class CollectiveEngine:
 
     def compile(self, prog, mesh=None, in_specs=None, out_specs=None, *,
                 axis_name: Optional[str] = None, in_avals=None,
-                axis_size: Optional[int] = None, jit: bool = True):
+                axis_size=None, jit: bool = True):
         """Compile a switch program through the pass pipeline.
 
         ``prog`` may be a plain Python function over traced values (see
@@ -178,19 +274,23 @@ class CollectiveEngine:
         :class:`CollectiveConfig` drives the SelectSchedule pass
         (``latency_optimal_below`` ring crossover); pass ``in_avals``
         (rank-local ShapeDtypeStructs or arrays, one per program input) to
-        give the scheduler payload sizes.
+        give the scheduler payload sizes.  The engine's DP axes form the
+        compile :class:`~repro.core.compiler.Topology`, so ops written
+        with ``axis="auto"`` lower hierarchically across inner and outer.
         """
-        from repro.core import compiler
         ax = axis_name or self.inner_axis
+        topo = self.topology(mesh, axis_size=axis_size)
+        if isinstance(axis_size, dict):
+            axis_size = axis_size.get(ax)
         if mesh is None:
             return compiler.compile_rank_local(
                 prog, ax, axis_size=axis_size, config=self.config,
-                in_avals=in_avals)
+                in_avals=in_avals, topology=topo)
         if in_specs is None or out_specs is None:
             raise ValueError("mesh compilation needs in_specs and out_specs")
         return compiler.compile_program(
             prog, mesh, ax, in_specs, out_specs, jit=jit,
-            config=self.config, in_avals=in_avals)
+            config=self.config, in_avals=in_avals, topology=topo)
 
 
 def make_engine(backend: str = "xla", *, inner_axis: str = "data",

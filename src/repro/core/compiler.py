@@ -1,30 +1,40 @@
 """SwitchProgram compiler — a pass pipeline over the DAG IR.
 
 Mirrors the paper's back-end steps (parse IR → DFG → optimizations → code
-generation → scheduling) as four composable passes:
+generation → scheduling) as five composable passes:
 
   1. :class:`Legalize`   — dead-code-eliminate unused nodes and sink WIRE
      nodes onto the collective they feed (the codec becomes a node
      attribute; non-codec-capable consumers drop it, mirroring a
      fixed-function wire).
-  2. :class:`FuseHops`   — pattern-match fusion opportunities.  Each rule
+  2. :class:`LowerTopology` — resolve every collective's ``axis`` against
+     the compile :class:`Topology` ({axis: size} plus per-axis link tier)
+     and rewrite a REDUCE over a compound/``"auto"`` axis into the
+     hierarchical RS(inner) → REDUCE(outer) → AG(inner) schedule, with
+     any sunk wire codec riding the *outer* (thin inter-pod) hop only —
+     ACiS processing placed exactly where the flows converge.
+  3. :class:`FuseHops`   — pattern-match fusion opportunities.  Each rule
      is a first-class :class:`FusionPattern` over the DAG (paper Fig. 5
      AG∘scan∘AG, the NAS-IS AR+A2A pair, map-into-hop fusion, RS∘AG →
-     one all-reduce schedule); matched nodes are grouped into
-     :class:`StageIR` units and topologically ordered.
-  3. :class:`SelectSchedule` — pick the latency- vs bandwidth-optimal ring
+     one all-reduce schedule, the error-feedback REDUCE+DELIVERED pair);
+     matched nodes are grouped into :class:`StageIR` units — same-axis
+     only — and topologically ordered.
+  4. :class:`SelectSchedule` — pick the latency- vs bandwidth-optimal ring
      for every all-reduce stage by propagating per-rank payload bytes
      through the DAG and consulting ``CollectiveConfig.
      latency_optimal_below`` plus the analytic cost model in
-     :mod:`repro.core.netmodel`.
-  4. :class:`Emit`       — lower every stage to a rank-local callable; the
+     :mod:`repro.core.netmodel` — evaluated against the link tier of the
+     axis the stage actually traverses (fast ICI vs thin DCI).
+  5. :class:`Emit`       — lower every stage to a rank-local callable; the
      emitted :class:`CompiledProgram` executes them over a value
-     environment (multi-input / multi-output programs are native).
+     environment (multi-input / multi-output programs are native), each
+     stage over its own axis.
 
 `compile_program` wraps the result in `jax.shard_map` + `jax.jit` — the
-"CGRA binary".  The emitted program records its fused stage list and the
-chosen schedules so tests (and the roofline accounting) can verify what
-was fused, exactly like inspecting the paper's generated schedule.
+"CGRA binary".  The emitted program records its fused stage list, the
+chosen schedules, and the per-stage axes so tests (and the roofline
+accounting) can verify what was fused, exactly like inspecting the
+paper's generated schedule.
 """
 
 from __future__ import annotations
@@ -35,13 +45,14 @@ from typing import Any, Callable, Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
+from jax import lax
 
-from repro.core import collectives, fused, netmodel, ring
-from repro.core.program import (COLLECTIVE_KINDS, DagNode, DagProgram, Node,
-                                OpKind, SwitchProgram)
+from repro.core import collectives, fused, lookaside, netmodel, ring
+from repro.core.program import (AUTO_AXIS, COLLECTIVE_KINDS, DagNode,
+                                DagProgram, Node, OpKind, SwitchProgram)
 from repro.core.tracing import trace
 from repro.core.types import ADD
-from repro.core.wire import IDENTITY
+from repro.core.wire import IDENTITY, resolve_codec
 
 PyTree = Any
 ProgramLike = Union[DagProgram, SwitchProgram, Callable]
@@ -58,18 +69,82 @@ def _as_dag(prog: ProgramLike) -> DagProgram:
 
 
 # ---------------------------------------------------------------------------
-# Compile context & stage forms
+# Topology, compile context & stage forms
 # ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class AxisSpec:
+    """One data-parallel mesh axis of the compile topology.
+
+    ``tier`` keys into :data:`repro.core.netmodel.TIERS` and tells
+    SelectSchedule which link parameters a stage on this axis traverses
+    (``"ici"`` fast intra-pod, ``"dci"`` thin inter-pod).  ``size`` may be
+    None — collectives then read it at run time via ``lax.axis_size`` and
+    the cost model falls back to its bandwidth-optimal default.
+    """
+
+    name: str
+    size: Optional[int] = None
+    tier: str = "ici"
+
+
+@dataclasses.dataclass(frozen=True)
+class Topology:
+    """The data-parallel axes a program may communicate over, innermost
+    (fastest links) first — the compiler's description of where the
+    network is fat and where it is thin."""
+
+    axes: tuple[AxisSpec, ...]
+
+    @classmethod
+    def single(cls, name: str, size: Optional[int] = None,
+               tier: str = "ici") -> "Topology":
+        return cls((AxisSpec(name, size, tier),))
+
+    def names(self) -> tuple[str, ...]:
+        return tuple(a.name for a in self.axes)
+
+    def spec(self, name: str) -> Optional[AxisSpec]:
+        for a in self.axes:
+            if a.name == name:
+                return a
+        return None
+
+    def size(self, name: str) -> Optional[int]:
+        a = self.spec(name)
+        return a.size if a is not None else None
+
+    def net(self, name: str) -> netmodel.NetParams:
+        a = self.spec(name)
+        if a is None:
+            return netmodel.PAPER
+        return netmodel.TIERS.get(a.tier, netmodel.PAPER)
+
+    @property
+    def inner(self) -> AxisSpec:
+        return self.axes[0]
+
+    @property
+    def outer(self) -> Optional[AxisSpec]:
+        return self.axes[-1] if len(self.axes) > 1 else None
+
+    def with_sizes(self, sizes: dict) -> "Topology":
+        """Fill (or correct) axis sizes from a mesh's {name: size} map."""
+        return Topology(tuple(
+            dataclasses.replace(a, size=sizes.get(a.name, a.size))
+            for a in self.axes))
+
 
 @dataclasses.dataclass
 class CompileContext:
     """Everything the passes may consult.
 
     ``config`` duck-types :class:`repro.core.api.CollectiveConfig` (only
-    ``latency_optimal_below`` is read) to avoid an api↔compiler import
-    cycle.  ``in_avals`` are rank-local shape/dtype structs for the program
-    inputs — optional; without them SelectSchedule keeps the
-    bandwidth-optimal default.
+    ``latency_optimal_below``, ``backend`` and ``codec`` are read) to avoid
+    an api↔compiler import cycle.  ``in_avals`` are rank-local shape/dtype
+    structs for the program inputs — optional; without them SelectSchedule
+    keeps the bandwidth-optimal default.  ``topology`` defaults to the
+    single ``axis_name`` axis on the fast tier.
     """
 
     axis_name: str
@@ -78,12 +153,35 @@ class CompileContext:
     in_avals: Optional[Sequence[Any]] = None
     net: netmodel.NetParams = netmodel.PAPER
     dag: Optional[DagProgram] = None    # current form, updated per pass
+    topology: Optional[Topology] = None
 
     @property
     def latency_optimal_below(self) -> Optional[int]:
         if self.config is None:
             return None
         return getattr(self.config, "latency_optimal_below", None)
+
+    def size_of(self, axis: str) -> Optional[int]:
+        if self.topology is not None:
+            s = self.topology.size(axis)
+            if s is not None:
+                return s
+        return self.axis_size if axis == self.axis_name else None
+
+    def net_of(self, axis: str) -> netmodel.NetParams:
+        if self.topology is not None and self.topology.spec(axis) is not None:
+            return self.topology.net(axis)
+        return self.net
+
+    def default_wire_codec(self):
+        """The codec a compressed engine applies at the thin outer hop when
+        the program didn't declare one — compression exactly where the
+        wire is thin is a compiler decision, not a call-site convention."""
+        if self.config is None:
+            return IDENTITY
+        if "compressed" not in getattr(self.config, "backend", ""):
+            return IDENTITY
+        return resolve_codec(getattr(self.config, "codec", "identity"))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -97,6 +195,7 @@ class StageIR:
     schedule: str = ""             # "latency" | "bandwidth" | "" (fixed)
     bytes_in: Optional[int] = None
     desc: str = ""
+    axis: str = ""                 # mesh axis the stage communicates over
 
 
 @dataclasses.dataclass(frozen=True)
@@ -109,24 +208,41 @@ class Stage:
     in_vids: tuple[int, ...] = ()
     out_vids: tuple[int, ...] = ()
     schedule: str = ""
+    axis: str = ""
 
     def __repr__(self):  # pragma: no cover
-        return f"Stage({self.kind})"
+        return f"Stage({self.kind}@{self.axis})" if self.axis \
+            else f"Stage({self.kind})"
 
 
 @dataclasses.dataclass
 class CompiledProgram:
-    """Rank-local executable: stages run in order over a value environment."""
+    """Rank-local executable: stages run in order over a value environment.
+
+    Every stage carries its own communication axis (stamped by
+    LowerTopology), so one program may span several mesh axes — there is
+    no single program-wide axis any more.
+    """
 
     stages: Sequence[Stage]
     source: DagProgram
-    axis_name: str
 
     def stage_kinds(self) -> list[str]:
         return [s.kind for s in self.stages]
 
     def stage_schedules(self) -> list[str]:
         return [s.schedule for s in self.stages]
+
+    def stage_axes(self) -> list[str]:
+        return [s.axis for s in self.stages]
+
+    def axes(self) -> list[str]:
+        """Distinct communication axes, in first-use order."""
+        seen: list[str] = []
+        for s in self.stages:
+            if s.axis and s.axis not in seen:
+                seen.append(s.axis)
+        return seen
 
     def __call__(self, *xs: PyTree) -> PyTree:
         n_in = self.source.num_inputs
@@ -138,7 +254,7 @@ class CompiledProgram:
                 f"got {len(xs)}")
         env: dict[int, PyTree] = dict(enumerate(xs))
         for st in self.stages:
-            outs = st.run(tuple(env[v] for v in st.in_vids), self.axis_name)
+            outs = st.run(tuple(env[v] for v in st.in_vids), st.axis)
             for vid, o in zip(st.out_vids, outs):
                 env[vid] = o
         outs = tuple(env[v] for v in self.source.outputs)
@@ -206,7 +322,10 @@ class Legalize:
             ins = tuple(resolve(v) for v in nd.inputs)
             codecs = [carried[v] for v in nd.inputs if v in carried]
             if codecs:
-                if op.kind in _CODEC_SINKS:
+                # an error-feedback reduce is not codec-capable — its wire
+                # format is the compressor's, so a WIRE reaching it drops
+                # like on any fixed-function link
+                if op.kind in _CODEC_SINKS and op.ef is None:
                     op = dataclasses.replace(op, codec=codecs[-1])
                 elif op.kind == OpKind.MAP and len(nd.inputs) == 1:
                     carried[nd.out] = codecs[-1]
@@ -216,7 +335,124 @@ class Legalize:
 
 
 # ---------------------------------------------------------------------------
-# Pass 2: FuseHops — first-class fusion patterns
+# Pass 2: LowerTopology — resolve axes, lower compound reductions
+# ---------------------------------------------------------------------------
+
+def _flatten_pad(inner_axes: tuple[str, ...]) -> Callable:
+    """Flatten to 1-D and pad to a multiple of the product of the inner
+    axis sizes, so the reduce-scatter chain can chunk evenly.  Runs inside
+    shard_map, where ``lax.axis_size`` is concrete — no static size needed
+    at compile time."""
+    def fn(x):
+        n = 1
+        for ax in inner_axes:
+            n *= lax.axis_size(ax)
+        return ring.pad_to_multiple(x.reshape(-1), n)[0]
+    return fn
+
+
+def _unpad_like(y, orig):
+    """Undo :func:`_flatten_pad` using the original operand for shape."""
+    return y[:orig.size].reshape(orig.shape)
+
+
+class LowerTopology:
+    """Make topology a compiler concern.
+
+    Every collective's ``axis`` is resolved against ``ctx.topology``:
+    ``None`` → the engine default axis, ``"auto"`` → all DP axes of the
+    topology, a tuple → that compound axis (innermost first).  A REDUCE
+    over a compound axis is rewritten into the hierarchical schedule
+
+        pad → RS(inner…) → REDUCE(outer, codec) → AG(…inner) → unpad
+
+    so the later passes fuse/schedule/emit *per axis*.  A sunk wire codec
+    (or a compressed engine's default codec) rides the outer hop only —
+    the payload crossing the thin inter-pod links is already 1/|inner| of
+    the gradient, and it is the only place compression pays.  An
+    error-feedback REDUCE instead compresses at the innermost tier (where
+    its DELIVERED sibling lives) and reduces the outer tiers exactly.
+    """
+
+    name = "lower_topology"
+
+    def run(self, dag: DagProgram, ctx: CompileContext) -> DagProgram:
+        nodes: list[DagNode] = []
+        vmap: dict[int, int] = {i: i for i in range(dag.num_inputs)}
+        next_vid = dag.num_inputs
+
+        def emit(op: Node, ins: Sequence[int]) -> int:
+            nonlocal next_vid
+            vid = next_vid
+            next_vid += 1
+            nodes.append(DagNode(op, tuple(ins), vid))
+            return vid
+
+        for nd in dag.nodes:
+            ins = tuple(vmap[v] for v in nd.inputs)
+            op = nd.op
+            if op.kind not in COLLECTIVE_KINDS:
+                vmap[nd.out] = emit(op, ins)
+                continue
+            axes = self._resolve(op.axis, ctx)
+            if len(axes) == 1 or op.kind == OpKind.DELIVERED:
+                # DELIVERED is rank-local feedback of the innermost-tier
+                # compression — it never spans tiers
+                vmap[nd.out] = emit(
+                    dataclasses.replace(op, axis=axes[0]), ins)
+            elif op.kind == OpKind.REDUCE:
+                vmap[nd.out] = self._lower_reduce(op, ins[0], axes, ctx,
+                                                  emit)
+            else:
+                raise NotImplementedError(
+                    f"{op.kind.value} over compound axis {axes} has no "
+                    "hierarchical lowering (only reduce does)")
+        return DagProgram(dag.num_inputs, tuple(nodes),
+                          tuple(vmap[v] for v in dag.outputs), dag.name)
+
+    @staticmethod
+    def _resolve(axis, ctx: CompileContext) -> tuple[str, ...]:
+        if axis is None:
+            return (ctx.axis_name,)
+        if axis == AUTO_AXIS:
+            if ctx.topology is None:
+                return (ctx.axis_name,)
+            return ctx.topology.names()
+        if isinstance(axis, str):
+            return (axis,)
+        return tuple(axis)
+
+    def _lower_reduce(self, op: Node, vin: int, axes: tuple[str, ...],
+                      ctx: CompileContext, emit) -> int:
+        if op.ef is not None:
+            # error feedback applies at the innermost tier; the outer
+            # tiers reduce the (already compressed) partials exactly
+            v = emit(dataclasses.replace(op, axis=axes[0]), (vin,))
+            for ax in axes[1:]:
+                v = emit(Node(OpKind.REDUCE, monoid=op.monoid, axis=ax),
+                         (v,))
+            return v
+        inner, outer = axes[:-1], axes[-1]
+        codec = op.codec
+        if codec is IDENTITY:
+            codec = ctx.default_wire_codec()
+        # pad/unpad are shape bookkeeping, not chunk-local compute — they
+        # must not be hop-fused into the ring schedules
+        p = emit(Node(OpKind.MAP, fn=_flatten_pad(inner), name="hier_pad",
+                      fusable=False), (vin,))
+        for ax in inner:
+            p = emit(Node(OpKind.REDUCE_SCATTER, monoid=op.monoid, axis=ax),
+                     (p,))
+        p = emit(Node(OpKind.REDUCE, monoid=op.monoid, codec=codec,
+                      axis=outer), (p,))
+        for ax in reversed(inner):
+            p = emit(Node(OpKind.ALLGATHER, axis=ax), (p,))
+        return emit(Node(OpKind.MAP, fn=_unpad_like, name="hier_unpad",
+                         fusable=False), (p, vin))
+
+
+# ---------------------------------------------------------------------------
+# Pass 3: FuseHops — first-class fusion patterns
 # ---------------------------------------------------------------------------
 
 @dataclasses.dataclass
@@ -265,6 +501,23 @@ class FusionPattern:
         raise NotImplementedError
 
 
+def _stage_axis(*nds: DagNode) -> str:
+    """The (shared) communication axis of a fused group — the first
+    collective node's axis; MAP nodes are axis-less."""
+    for nd in nds:
+        if nd.op.kind in COLLECTIVE_KINDS and isinstance(nd.op.axis, str) \
+                and nd.op.axis != AUTO_AXIS:
+            return nd.op.axis
+    return ""
+
+
+def _same_axis(*nds: DagNode) -> bool:
+    """Collectives may only fuse onto one schedule if they traverse the
+    same mesh axis (a pod-local ring cannot carry inter-pod hops)."""
+    axes = {nd.op.axis for nd in nds if nd.op.kind in COLLECTIVE_KINDS}
+    return len(axes) <= 1
+
+
 class ScanGatherPattern(FusionPattern):
     """AG ∘ SCAN ∘ AG → fused scan+gather (paper Fig. 5)."""
 
@@ -277,11 +530,13 @@ class ScanGatherPattern(FusionPattern):
         if scan is None or scan.op.kind != OpKind.SCAN:
             return None
         ag2 = st.sole_user(scan.out)
-        if ag2 is None or ag2.op.kind != OpKind.ALLGATHER:
+        if ag2 is None or ag2.op.kind != OpKind.ALLGATHER \
+                or not _same_axis(nd, scan, ag2):
             return None
         mono = scan.op.monoid
         return StageIR("scan+allgather", (nd, scan, ag2),
                        nd.inputs, (ag2.out,),
+                       axis=_stage_axis(nd),
                        desc=f"fused allgather_op_allgather "
                             f"(in-network {mono.name}-scan)")
 
@@ -292,17 +547,21 @@ class MapIntoReducePattern(FusionPattern):
     name = "map+reduce"
 
     def match(self, nd, st):
-        if nd.op.kind != OpKind.MAP or len(nd.inputs) != 1:
+        if nd.op.kind != OpKind.MAP or len(nd.inputs) != 1 \
+                or not nd.op.fusable:
             return None
         red = st.sole_user(nd.out)
         if red is None or red.op.kind not in (OpKind.REDUCE,
-                                              OpKind.REDUCE_SCATTER):
+                                              OpKind.REDUCE_SCATTER) \
+                or red.op.ef is not None:
             return None
         if red.op.kind == OpKind.REDUCE:
             return StageIR("map+allreduce", (nd, red), nd.inputs, (red.out,),
+                           axis=_stage_axis(red),
                            desc="map fused ahead of AR schedule")
         return StageIR("map+reduce_scatter", (nd, red), nd.inputs,
                        (red.out,),
+                       axis=_stage_axis(red),
                        desc=f"map({nd.op.name or 'fn'}) fused into RS hops")
 
 
@@ -315,9 +574,11 @@ class GatherMapPattern(FusionPattern):
         if nd.op.kind != OpKind.ALLGATHER:
             return None
         mp = st.sole_user(nd.out)
-        if mp is None or mp.op.kind != OpKind.MAP or len(mp.inputs) != 1:
+        if mp is None or mp.op.kind != OpKind.MAP or len(mp.inputs) != 1 \
+                or not mp.op.fusable:
             return None
         return StageIR("allgather+map", (nd, mp), nd.inputs, (mp.out,),
+                       axis=_stage_axis(nd),
                        desc="map applied in-flight at forwarding hop")
 
 
@@ -341,15 +602,18 @@ class ReduceAlltoallPattern(FusionPattern):
                        (red.inputs[0], a2a.inputs[0]),
                        (red.out, a2a.out),
                        schedule="latency",
+                       axis=_stage_axis(red),
                        desc="fused AR+A2A on one ring traversal")
 
     @staticmethod
     def _fusable_reduce(nd: DagNode) -> bool:
         # the shared-schedule kernel implements the add combine on the
-        # identity wire only — a sunk codec must go to the unfused AR
+        # identity wire only — a sunk codec must go to the unfused AR,
+        # and an error-feedback reduce is a look-aside stage of its own
         return (nd.op.kind == OpKind.REDUCE
                 and nd.op.monoid.name == "add"
-                and nd.op.codec is IDENTITY)
+                and nd.op.codec is IDENTITY
+                and nd.op.ef is None)
 
     def _find(self, nd: DagNode, kind: OpKind,
               st: _MatchState) -> Optional[DagNode]:
@@ -357,6 +621,7 @@ class ReduceAlltoallPattern(FusionPattern):
             if (cand.op.kind == kind and cand.out not in st.claimed
                     and (kind != OpKind.REDUCE
                          or self._fusable_reduce(cand))
+                    and _same_axis(nd, cand)
                     and st.independent(nd, cand)):
                 return cand
         return None
@@ -371,13 +636,41 @@ class RsAgPattern(FusionPattern):
         if nd.op.kind != OpKind.REDUCE_SCATTER:
             return None
         ag = st.sole_user(nd.out)
-        if ag is None or ag.op.kind != OpKind.ALLGATHER:
+        if ag is None or ag.op.kind != OpKind.ALLGATHER \
+                or not _same_axis(nd, ag):
             return None
         return StageIR("allreduce", (nd, ag), nd.inputs, (ag.out,),
+                       axis=_stage_axis(nd),
                        desc="RS∘AG → ring AR")
 
 
+class EfPairPattern(FusionPattern):
+    """Error-feedback REDUCE + its DELIVERED sibling → one look-aside
+    stage: the compression runs once and yields both the lossy total and
+    the locally-delivered contribution (the residual's other half)."""
+
+    name = "ef_allreduce"
+
+    def match(self, nd, st):
+        if nd.op.kind != OpKind.REDUCE or nd.op.ef is None:
+            return None
+        for cand in st.dag.nodes:
+            if (cand.op.kind == OpKind.DELIVERED
+                    and cand.out not in st.claimed
+                    and cand.inputs == nd.inputs
+                    and cand.op.axis == nd.op.axis
+                    and cand.op.ef == nd.op.ef):
+                return StageIR("ef_allreduce", (nd, cand), nd.inputs,
+                               (nd.out, cand.out),
+                               axis=_stage_axis(nd),
+                               desc=f"error-feedback "
+                                    f"{nd.op.ef.compressor} all-reduce "
+                                    "(Type 3 look-aside)")
+        return None     # residual DCE'd — _single emits the lone reduce
+
+
 DEFAULT_PATTERNS: tuple[FusionPattern, ...] = (
+    EfPairPattern(),
     ScanGatherPattern(),
     MapIntoReducePattern(),
     GatherMapPattern(),
@@ -394,6 +687,7 @@ _SINGLE_KINDS = {
     OpKind.ALLTOALL: "alltoall",
     OpKind.SCAN: "scan",
     OpKind.BCAST: "bcast",
+    OpKind.DELIVERED: "delivered",
 }
 
 
@@ -465,10 +759,15 @@ class FuseHops:
 
     @staticmethod
     def _single(nd: DagNode) -> StageIR:
+        if nd.op.kind == OpKind.REDUCE and nd.op.ef is not None:
+            # lone error-feedback reduce (its DELIVERED sibling was DCE'd)
+            return StageIR("ef_allreduce", (nd,), nd.inputs, (nd.out,),
+                           axis=_stage_axis(nd))
         kind = _SINGLE_KINDS.get(nd.op.kind)
         if kind is None:
             raise ValueError(f"cannot lower node {nd.op}")
-        return StageIR(kind, (nd,), nd.inputs, (nd.out,))
+        return StageIR(kind, (nd,), nd.inputs, (nd.out,),
+                       axis=_stage_axis(nd))
 
     @staticmethod
     def _topo(groups: list[StageIR]) -> list[StageIR]:
@@ -495,7 +794,7 @@ class FuseHops:
 
 
 # ---------------------------------------------------------------------------
-# Pass 3: SelectSchedule — latency- vs bandwidth-optimal rings
+# Pass 4: SelectSchedule — latency- vs bandwidth-optimal rings
 # ---------------------------------------------------------------------------
 
 _RESCHEDULABLE = {"allreduce", "map+allreduce"}
@@ -509,7 +808,10 @@ class SelectSchedule:
     latency_optimal_below`` gets the (n-1)-hop full-message latency ring,
     larger ones the chunked RS∘AG bandwidth ring.  The analytic model in
     :mod:`repro.core.netmodel` supplies predicted times (recorded in the
-    stage desc) and the crossover when no explicit threshold is configured.
+    stage desc) and the crossover when no explicit threshold is
+    configured — both evaluated against the link tier of the *stage's own
+    axis* (fast intra-pod ICI vs thin inter-pod DCI), so an outer-axis
+    stage is costed on the wire it actually traverses.
     """
 
     name = "select_schedule"
@@ -538,26 +840,35 @@ class SelectSchedule:
                 # what actually travels: the sunk codec shrinks the wire
                 b = int(b * red.op.codec.wire_ratio)
             out.append(dataclasses.replace(
-                g, bytes_in=b, **self._decide(b, ctx)))
+                g, bytes_in=b,
+                **self._decide(b, ctx, g.axis or ctx.axis_name)))
         return out
 
-    def _decide(self, payload: Optional[int], ctx: CompileContext) -> dict:
+    def _decide(self, payload: Optional[int], ctx: CompileContext,
+                axis: str) -> dict:
         if payload is None:
             return {"schedule": "bandwidth",
                     "desc": "RS∘AG ring (payload unknown; "
                             "bandwidth-optimal default)"}
-        n = ctx.axis_size or 2
+        n = ctx.size_of(axis)
+        if n is None:
+            # never cost one axis with another's ring size — without this
+            # axis's size the model has nothing to say
+            return {"schedule": "bandwidth",
+                    "desc": f"[{axis}] RS∘AG ring (axis size unknown; "
+                            "bandwidth-optimal default)"}
+        net = ctx.net_of(axis)
         threshold = ctx.latency_optimal_below
         if threshold is None:
-            threshold = netmodel.ring_crossover_bytes(n, ctx.net)
-        t_lat = netmodel.ring_allreduce_time(n, payload, ctx.net,
+            threshold = netmodel.ring_crossover_bytes(n, net)
+        t_lat = netmodel.ring_allreduce_time(n, payload, net,
                                              latency_optimal=True)
-        t_bw = netmodel.ring_allreduce_time(n, payload, ctx.net,
+        t_bw = netmodel.ring_allreduce_time(n, payload, net,
                                             latency_optimal=False)
         sched = "latency" if payload < threshold else "bandwidth"
         return {"schedule": sched,
-                "desc": f"{payload}B/rank vs threshold {threshold}B → "
-                        f"{sched}-optimal ring "
+                "desc": f"[{axis}] {payload}B/rank vs threshold "
+                        f"{threshold}B → {sched}-optimal ring "
                         f"(model: lat {t_lat * 1e6:.1f}us, "
                         f"bw {t_bw * 1e6:.1f}us)"}
 
@@ -565,32 +876,54 @@ class SelectSchedule:
     def _value_bytes(ctx: CompileContext) -> Optional[dict[int, int]]:
         """Per-rank payload bytes for every DAG value, or None if unknown.
 
-        Maps preserve their (first) input's size — the standard
-        size-preserving assumption for hop-fusable maps.
+        A multi-input MAP is sized as the max over its *known* input
+        sizes, and stays unknown when none are known — sizing it from
+        ``inputs[0]`` alone would let a small first operand mis-drive the
+        latency/bandwidth decision downstream.  AG/RS scale by the size of
+        their own axis (unknown axis size → unknown output).
         """
-        if ctx.in_avals is None or ctx.axis_size is None:
+        if ctx.in_avals is None:
             return None
-        n = ctx.axis_size
         nbytes: dict[int, int] = {}
         for i, aval in enumerate(ctx.in_avals):
             size = int(math.prod(aval.shape)) if aval.shape else 1
             nbytes[i] = size * jnp.dtype(aval.dtype).itemsize
         for nd in ctx.dag.nodes:
+            k = nd.op.kind
+            if k == OpKind.MAP:
+                known = [nbytes[v] for v in nd.inputs if v in nbytes]
+                if known:
+                    nbytes[nd.out] = max(known)
+                continue
             src = nbytes.get(nd.inputs[0])
             if src is None:
                 continue
-            k = nd.op.kind
             if k == OpKind.ALLGATHER:
-                nbytes[nd.out] = src * n
+                n = SelectSchedule._axis_size(nd, ctx)
+                if n is not None:
+                    nbytes[nd.out] = src * n
             elif k == OpKind.REDUCE_SCATTER:
-                nbytes[nd.out] = max(src // n, 1)
-            else:                       # MAP/REDUCE/A2A/SCAN/BCAST preserve
+                n = SelectSchedule._axis_size(nd, ctx)
+                if n is not None:
+                    nbytes[nd.out] = max(src // n, 1)
+            else:                       # REDUCE/A2A/SCAN/BCAST/DELIVERED
                 nbytes[nd.out] = src    # (WIRE nodes are gone by Legalize)
         return nbytes
 
+    @staticmethod
+    def _axis_size(nd: DagNode, ctx: CompileContext) -> Optional[int]:
+        """Size of the axis this node communicates over; axis=None means
+        the program default (a pipeline without LowerTopology)."""
+        ax = nd.op.axis
+        if ax is None:
+            ax = ctx.axis_name
+        if not isinstance(ax, str) or ax == AUTO_AXIS:
+            return None
+        return ctx.size_of(ax)
+
 
 # ---------------------------------------------------------------------------
-# Pass 4: Emit
+# Pass 5: Emit
 # ---------------------------------------------------------------------------
 
 class Emit:
@@ -599,11 +932,28 @@ class Emit:
     name = "emit"
 
     def run(self, groups: list[StageIR], ctx: CompileContext) -> list[Stage]:
-        return [self._emit(g) for g in groups]
+        return [self._emit(g, ctx) for g in groups]
 
-    def _emit(self, g: StageIR) -> Stage:
+    def _emit(self, g: StageIR, ctx: CompileContext) -> Stage:
         run = getattr(self, "_" + g.kind.replace("+", "_"))(g)
-        return Stage(g.kind, run, g.desc, g.in_vids, g.out_vids, g.schedule)
+        axis = g.axis
+        if not axis:
+            coll = [nd.op for nd in g.nodes
+                    if nd.op.kind in COLLECTIVE_KINDS]
+            if any(op.axis is not None for op in coll):
+                # "auto"/tuple survived to Emit — running it over the
+                # default axis would silently compute the wrong reduction
+                raise ValueError(
+                    f"stage {g.kind} has an unresolved compound axis "
+                    f"{[op.axis for op in coll]}; include LowerTopology "
+                    "in the pipeline")
+            if coll:
+                # a custom pipeline without LowerTopology leaves axis=None
+                # ops unresolved — fall back to the program-wide default
+                # axis (pure-map stages legitimately stay axis-less)
+                axis = ctx.axis_name
+        return Stage(g.kind, run, g.desc, g.in_vids, g.out_vids, g.schedule,
+                     axis)
 
     # -- fused stages --------------------------------------------------------
 
@@ -652,6 +1002,33 @@ class Emit:
         def run(args, ax, _f=mp.fn):
             (x,) = args
             return (fused.allgather_map(x, ax, _f),)
+        return run
+
+    @staticmethod
+    def _ef_allreduce(g: StageIR):
+        """Error-feedback compressed all-reduce (Type 3 look-aside): one
+        compression yields both the lossy total and, when the DELIVERED
+        sibling survived DCE, this rank's delivered contribution."""
+        ef = g.nodes[0].op.ef
+        both = len(g.out_vids) == 2
+
+        def run(args, ax, _c=ef.compressor, _k=ef.topk_ratio, _b=both):
+            (t,) = args
+            total, delivered = lookaside.compressed_all_reduce(
+                t, ax, compressor=_c, topk_ratio=_k)
+            return (total, delivered) if _b else (total,)
+        return run
+
+    @staticmethod
+    def _delivered(g: StageIR):
+        # standalone DELIVERED (its reduce was DCE'd) — rare; reuse the
+        # full look-aside op and keep only the local-feedback half
+        ef = g.nodes[0].op.ef
+
+        def run(args, ax, _c=ef.compressor, _k=ef.topk_ratio):
+            (t,) = args
+            return (lookaside.compressed_all_reduce(
+                t, ax, compressor=_c, topk_ratio=_k)[1],)
         return run
 
     # -- single-node lowerings ----------------------------------------------
@@ -722,7 +1099,8 @@ class Emit:
 # The pipeline & public entry points
 # ---------------------------------------------------------------------------
 
-DEFAULT_PIPELINE = (Legalize(), FuseHops(), SelectSchedule(), Emit())
+DEFAULT_PIPELINE = (Legalize(), LowerTopology(), FuseHops(),
+                    SelectSchedule(), Emit())
 
 
 def run_pipeline(dag: DagProgram, ctx: CompileContext,
@@ -743,6 +1121,7 @@ def compile_rank_local(
     axis_size: Optional[int] = None,
     config: Any = None,
     in_avals: Optional[Sequence[Any]] = None,
+    topology: Optional[Topology] = None,
     pipeline=DEFAULT_PIPELINE,
 ) -> CompiledProgram:
     """Compile to a rank-local callable (for use inside an existing
@@ -750,12 +1129,18 @@ def compile_rank_local(
 
     ``prog`` may be a traced :class:`DagProgram`, a legacy chain
     :class:`SwitchProgram`, or a plain function (traced on the fly).
+    ``axis_name`` is the default axis for ops that don't name one;
+    ``topology`` describes all DP axes (it defaults to the single
+    ``axis_name`` axis) and drives the LowerTopology pass.
     """
     dag = _as_dag(prog)
+    if topology is None:
+        topology = Topology.single(axis_name, axis_size)
     ctx = CompileContext(axis_name=axis_name, axis_size=axis_size,
-                         config=config, in_avals=in_avals)
+                         config=config, in_avals=in_avals,
+                         topology=topology)
     stages, final_dag = run_pipeline(dag, ctx, pipeline)
-    return CompiledProgram(stages, final_dag, axis_name)
+    return CompiledProgram(stages, final_dag)
 
 
 def compile_program(
@@ -768,12 +1153,18 @@ def compile_program(
     jit: bool = True,
     config: Any = None,
     in_avals: Optional[Sequence[Any]] = None,
+    topology: Optional[Topology] = None,
 ) -> Callable:
     """Emit the full "CGRA binary": one shard_map-wrapped, jitted callable
-    executing every fused stage in a single SPMD program."""
-    axis_size = dict(zip(mesh.axis_names, mesh.devices.shape))[axis_name]
+    executing every fused stage in a single SPMD program (stages may span
+    several mesh axes — each runs over its own)."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    axis_size = sizes[axis_name]
+    if topology is not None:
+        topology = topology.with_sizes(sizes)
     compiled = compile_rank_local(prog, axis_name, axis_size=axis_size,
-                                  config=config, in_avals=in_avals)
+                                  config=config, in_avals=in_avals,
+                                  topology=topology)
 
     def run(*xs):
         return compiled(*xs)
@@ -783,5 +1174,6 @@ def compile_program(
     out = jax.jit(fn) if jit else fn
     out.stages = compiled.stage_kinds()        # type: ignore[attr-defined]
     out.schedules = compiled.stage_schedules()  # type: ignore[attr-defined]
+    out.axes = compiled.stage_axes()           # type: ignore[attr-defined]
     out.compiled = compiled                    # type: ignore[attr-defined]
     return out

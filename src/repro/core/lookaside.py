@@ -74,6 +74,53 @@ def shared_scale_quant_all_reduce(
     return total.reshape(x.shape), delivered_self.reshape(x.shape)
 
 
+def compressed_all_reduce(
+    target: jax.Array,
+    axis_name: str,
+    *,
+    compressor: str = "int8",
+    topk_ratio: float = 0.01,
+) -> tuple[jax.Array, jax.Array]:
+    """One lossy all-reduce: returns ``(total, delivered)``.
+
+    ``total`` is the (sum, not mean) reduction in ``target``'s dtype;
+    ``delivered`` is what the lossy wire delivered of *this rank's*
+    contribution, in f32 and ``target``'s shape — the caller forms the
+    error-feedback residual as ``target - delivered``.  This is the
+    primitive behind both :func:`error_feedback_all_reduce` and the
+    compiler's ``ef_allreduce`` stage (the REDUCE+DELIVERED pair).
+
+    Compressors:
+      * ``int8``          — shared-scale exact-integer accumulation (default;
+                            EF identity exact; wire ≈ 0.5x of f32)
+      * ``int8_hopquant`` — per-hop dequant-add-requant (wire ≈ 0.25x; adds
+                            bounded, EF-invisible hop noise)
+      * ``topk``          — sparse (idx, val) payloads, in-network
+                            scatter-accumulate
+    """
+    tf = target.astype(jnp.float32)
+    if compressor == "int8":
+        total, delivered = shared_scale_quant_all_reduce(tf, axis_name)
+    elif compressor == "int8_hopquant":
+        codec = int8_codec()
+        total = collectives.all_reduce(tf, axis_name, ADD, codec=codec)
+        # what the wire actually delivered for *our* contribution:
+        delivered = codec.decode(codec.encode(tf))
+    elif compressor == "topk":
+        flat = tf.reshape(-1)
+        k = max(1, int(flat.shape[0] * topk_ratio))
+        tk = TopK(k)
+        idx, vals = tk.compress(flat)
+        total = sparse_all_reduce_payloads(
+            idx, vals, axis_name, flat.shape[0],
+            dtype=jnp.float32).reshape(target.shape)
+        delivered = tk.decompress((idx, vals), flat.shape,
+                                  jnp.float32).reshape(target.shape)
+    else:
+        raise ValueError(f"unknown compressor {compressor!r}")
+    return total.astype(target.dtype), delivered
+
+
 def error_feedback_all_reduce(
     x: jax.Array,
     residual: jax.Array,
@@ -87,47 +134,15 @@ def error_feedback_all_reduce(
 
     Returns ``(reduced, new_residual)``.  The residual is the Type 3
     look-aside memory: it must be carried by the caller across invocations
-    (the training loop stores it next to the optimizer state).
-
-    Compressors:
-      * ``int8``          — shared-scale exact-integer accumulation (default;
-                            EF identity exact; wire ≈ 0.5x of f32)
-      * ``int8_hopquant`` — per-hop dequant-add-requant (wire ≈ 0.25x; adds
-                            bounded, EF-invisible hop noise)
-      * ``topk``          — sparse (idx, val) payloads, in-network
-                            scatter-accumulate
+    (the training loop stores it next to the optimizer state).  Thin
+    wrapper over :func:`compressed_all_reduce`.
     """
     n = lax.axis_size(axis_name)
     target = x + residual.astype(x.dtype)
-
-    if compressor == "int8":
-        total, delivered = shared_scale_quant_all_reduce(
-            target.astype(jnp.float32), axis_name)
-        reduced = total.astype(x.dtype)
-        new_residual = (target.astype(jnp.float32) - delivered).astype(
-            residual.dtype)
-    elif compressor == "int8_hopquant":
-        codec = int8_codec()
-        reduced = collectives.all_reduce(
-            target.astype(jnp.float32), axis_name, ADD, codec=codec)
-        reduced = reduced.astype(x.dtype)
-        # what the wire actually delivered for *our* contribution:
-        delivered = codec.decode(codec.encode(target.astype(jnp.float32)))
-        new_residual = (target.astype(jnp.float32) - delivered).astype(residual.dtype)
-    elif compressor == "topk":
-        flat = target.reshape(-1)
-        k = max(1, int(flat.shape[0] * topk_ratio))
-        tk = TopK(k)
-        idx, vals = tk.compress(flat)
-        reduced = sparse_all_reduce_payloads(
-            idx, vals, axis_name, flat.shape[0], dtype=jnp.float32)
-        reduced = reduced.reshape(x.shape).astype(x.dtype)
-        delivered = tk.decompress((idx, vals), flat.shape, jnp.float32)
-        new_residual = (flat.astype(jnp.float32) - delivered).reshape(
-            x.shape).astype(residual.dtype)
-    else:
-        raise ValueError(f"unknown compressor {compressor!r}")
-
+    reduced, delivered = compressed_all_reduce(
+        target, axis_name, compressor=compressor, topk_ratio=topk_ratio)
+    new_residual = (target.astype(jnp.float32) - delivered).astype(
+        residual.dtype)
     if mean:
         reduced = reduced / n
     return reduced, new_residual

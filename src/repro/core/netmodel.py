@@ -37,6 +37,30 @@ class NetParams:
 
 PAPER = NetParams()
 
+# ---------------------------------------------------------------------------
+# Two-tier link parameters (multi-pod topologies).
+#
+# The intra-pod tier ("ici") is the paper's testbed fabric.  The inter-pod
+# tier ("dci") models the thin links where a multi-pod system's flows
+# converge: ~10× less bandwidth than ICI (the usual DCI/ICI provisioning
+# ratio on pod-scale systems) and longer-reach links with ~5× the per-hop
+# latency.  SelectSchedule costs each compiled stage against the tier of
+# the axis it traverses; LowerTopology places wire compression on the DCI
+# hop only, where those bytes are the bottleneck.
+# ---------------------------------------------------------------------------
+
+DCI_BW_RATIO = 0.1        # inter-pod bandwidth as a fraction of intra-pod
+DCI_HOP_RATIO = 5.0       # inter-pod per-hop latency multiplier
+
+ICI = PAPER
+DCI = dataclasses.replace(
+    PAPER,
+    bw=PAPER.bw * DCI_BW_RATIO,
+    fpga_link=PAPER.fpga_link * DCI_HOP_RATIO,
+)
+
+TIERS = {"ici": ICI, "dci": DCI}
+
 
 def torus_hops(n: int) -> int:
     """Average hop count of a 3D-torus of n nodes (paper emulates 3D torus)."""
@@ -173,11 +197,53 @@ def ring_crossover_bytes(n: int, p: NetParams = PAPER) -> float:
     dominates); above it, the chunked RS∘AG ring wins (wire bytes dominate).
     Derived from :func:`ring_allreduce_time` with the combine term dropped:
     t_lat < t_bw  ⇔  m (1 - 2/n) / bw < hop  for n > 2.
+
+    Pass the link tier actually traversed (``ICI`` vs ``DCI``): a thin
+    inter-pod wire pushes the crossover an order of magnitude lower.
     """
     if n <= 2:
         return float("inf")  # schedules move identical bytes; latency ties
     hop = p.fpga_link + p.port
     return hop * p.bw / (1.0 - 2.0 / n)
+
+
+def ring_reduce_scatter_time(n: int, m: int, p: NetParams = PAPER) -> float:
+    """Chunked ring RS: n-1 hops of m/n bytes, one combine per hop."""
+    if n <= 1:
+        return 0.0
+    hop = p.fpga_link + p.port
+    return (n - 1) * ((m / n) / p.bw + hop) \
+        + (n - 1) * (m / n) / (p.accel_clock * p.accel_width)
+
+
+def ring_all_gather_time(n: int, m: int, p: NetParams = PAPER) -> float:
+    """Chunked ring AG: n-1 hops of m/n bytes, no combine."""
+    if n <= 1:
+        return 0.0
+    hop = p.fpga_link + p.port
+    return (n - 1) * ((m / n) / p.bw + hop)
+
+
+def hierarchical_allreduce_time(d: int, pods: int, m: int, *,
+                                inner: NetParams = ICI,
+                                outer: NetParams = DCI) -> float:
+    """RS(inner, d ranks) → AR(outer, pods ranks, m/d shard) → AG(inner).
+
+    The compiled LowerTopology schedule: the thin inter-pod tier only ever
+    carries 1/d of the payload, vs a flat AR over d·pods ranks pushing
+    2·(dp-1)/dp of every byte through the DCI links too.
+    """
+    shard = m / max(d, 1)
+    return ring_reduce_scatter_time(d, m, inner) \
+        + ring_allreduce_time(pods, shard, outer) \
+        + ring_all_gather_time(d, m, inner)
+
+
+# Fraction of the histogram reduction left exposed past the key exchange
+# in the fused AR+A2A schedule: the shared ring cannot start combining
+# until the first key chunk lands (pipeline fill), which the emulation
+# charges as a 10% un-overlapped remainder of the reduction time.
+FUSED_EXPOSED_FRACTION = 0.1
 
 
 def acis_fused_allreduce_alltoall(n: int, m_hist: int, m_keys: int,
@@ -186,5 +252,5 @@ def acis_fused_allreduce_alltoall(n: int, m_hist: int, m_keys: int,
     reduction is free behind the (larger) key traffic."""
     keys = acis_alltoall(n, m_keys, p)
     hist_exposed = max(0.0, acis_allreduce(n, m_hist, p) - keys)
-    return keys + 0.1 * hist_exposed + _acis_base(n, p) * 0.0 + \
-        (m_hist / (p.accel_clock * p.accel_width))
+    return keys + FUSED_EXPOSED_FRACTION * hist_exposed \
+        + m_hist / (p.accel_clock * p.accel_width)

@@ -21,20 +21,29 @@ degenerate single-input chain DAG.
 
 Node vocabulary (the "SPU instruction set" at graph granularity):
   MAP(fn)              — elementwise/user map, fusable into adjacent hops
-  REDUCE(monoid)       — all-reduce
+  REDUCE(monoid)       — all-reduce (``ef`` set: error-feedback compressed)
   REDUCE_SCATTER(m)    — reduce-scatter
   ALLGATHER            — all-gather
   ALLTOALL             — all-to-all
   SCAN(monoid)         — cross-rank prefix scan (Type 3)
   BCAST(root)          — broadcast
   WIRE(codec)          — wire-format change for downstream links (Type 0/2)
+  DELIVERED            — what the lossy wire delivered of *this rank's*
+                         contribution (the error-feedback sibling of an
+                         ``ef`` REDUCE; pairs into one look-aside stage)
+
+Every collective op additionally carries an ``axis``: ``None`` means "the
+engine's default axis", ``"auto"`` means "all data-parallel axes of the
+compile topology", a string names one mesh axis, and a tuple names a
+compound axis (innermost first).  Compound/auto axes are resolved by the
+compiler's LowerTopology pass — see :mod:`repro.core.compiler`.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import enum
-from typing import Any, Callable, Optional, Sequence
+from typing import Any, Callable, Optional, Sequence, Union
 
 from repro.core.types import ADD, Monoid
 from repro.core.wire import IDENTITY, WireCodec
@@ -49,12 +58,31 @@ class OpKind(enum.Enum):
     SCAN = "scan"
     BCAST = "bcast"
     WIRE = "wire"
+    DELIVERED = "delivered"
 
 
 COLLECTIVE_KINDS = {
     OpKind.REDUCE, OpKind.REDUCE_SCATTER, OpKind.ALLGATHER,
-    OpKind.ALLTOALL, OpKind.SCAN, OpKind.BCAST,
+    OpKind.ALLTOALL, OpKind.SCAN, OpKind.BCAST, OpKind.DELIVERED,
 }
+
+# axis field: None (engine default), "auto" (all DP axes of the topology),
+# one mesh-axis name, or a tuple of names (compound axis, innermost first)
+Axis = Union[None, str, tuple]
+
+AUTO_AXIS = "auto"
+
+
+@dataclasses.dataclass(frozen=True)
+class ErrorFeedback:
+    """Error-feedback compression spec riding on a REDUCE/DELIVERED pair.
+
+    ``compressor`` selects the Type 3 look-aside implementation
+    (see :func:`repro.core.lookaside.compressed_all_reduce`).
+    """
+
+    compressor: str = "int8"
+    topk_ratio: float = 0.01
 
 
 @dataclasses.dataclass(frozen=True)
@@ -65,16 +93,29 @@ class Node:
     codec: WireCodec = IDENTITY            # WIRE payload
     root: int = 0                          # BCAST payload
     exclusive: bool = False                # SCAN payload
+    axis: Axis = None                      # collective axis (see module doc)
+    ef: Optional[ErrorFeedback] = None     # REDUCE/DELIVERED payload
+    fusable: bool = True                   # MAP: may be hop-fused (must be
+    #                                        chunk-local; shape transforms
+    #                                        such as the compiler's pad/unpad
+    #                                        bookkeeping maps are not)
     name: str = ""
 
     def label(self) -> str:
         base = self.kind.value
         if self.kind == OpKind.MAP and self.name:
-            return f"map:{self.name}"
-        if self.kind in (OpKind.REDUCE, OpKind.REDUCE_SCATTER, OpKind.SCAN):
-            return f"{base}:{self.monoid.name}"
-        if self.kind == OpKind.WIRE:
-            return f"wire:{self.codec.name}"
+            base = f"map:{self.name}"
+        elif self.kind in (OpKind.REDUCE, OpKind.REDUCE_SCATTER, OpKind.SCAN):
+            base = f"{base}:{self.monoid.name}"
+            if self.ef is not None:
+                base += f"+ef[{self.ef.compressor}]"
+        elif self.kind == OpKind.WIRE:
+            base = f"wire:{self.codec.name}"
+        elif self.kind == OpKind.DELIVERED and self.ef is not None:
+            base = f"delivered[{self.ef.compressor}]"
+        if self.axis is not None and self.kind not in (OpKind.MAP,
+                                                       OpKind.WIRE):
+            base += f"@{self.axis}"
         return base
 
 
@@ -84,28 +125,29 @@ def Map(fn: Callable, name: str = "") -> Node:
     return Node(OpKind.MAP, fn=fn, name=name)
 
 
-def Reduce(monoid: Monoid = ADD) -> Node:
-    return Node(OpKind.REDUCE, monoid=monoid)
+def Reduce(monoid: Monoid = ADD, axis: Axis = None) -> Node:
+    return Node(OpKind.REDUCE, monoid=monoid, axis=axis)
 
 
-def ReduceScatter(monoid: Monoid = ADD) -> Node:
-    return Node(OpKind.REDUCE_SCATTER, monoid=monoid)
+def ReduceScatter(monoid: Monoid = ADD, axis: Axis = None) -> Node:
+    return Node(OpKind.REDUCE_SCATTER, monoid=monoid, axis=axis)
 
 
-def AllGather() -> Node:
-    return Node(OpKind.ALLGATHER)
+def AllGather(axis: Axis = None) -> Node:
+    return Node(OpKind.ALLGATHER, axis=axis)
 
 
-def AllToAll() -> Node:
-    return Node(OpKind.ALLTOALL)
+def AllToAll(axis: Axis = None) -> Node:
+    return Node(OpKind.ALLTOALL, axis=axis)
 
 
-def Scan(monoid: Monoid = ADD, exclusive: bool = False) -> Node:
-    return Node(OpKind.SCAN, monoid=monoid, exclusive=exclusive)
+def Scan(monoid: Monoid = ADD, exclusive: bool = False,
+         axis: Axis = None) -> Node:
+    return Node(OpKind.SCAN, monoid=monoid, exclusive=exclusive, axis=axis)
 
 
-def Bcast(root: int = 0) -> Node:
-    return Node(OpKind.BCAST, root=root)
+def Bcast(root: int = 0, axis: Axis = None) -> Node:
+    return Node(OpKind.BCAST, root=root, axis=axis)
 
 
 def Wire(codec: WireCodec) -> Node:

@@ -15,6 +15,12 @@ asymmetry:
 This is also where straggler tolerance is implemented: the inter-pod stage
 can mask out contributions that miss the deadline (bounded staleness) and
 renormalize — see `masked_all_reduce`.
+
+Since the compiler grew the LowerTopology pass, the hierarchical schedule
+is no longer hand-written here: :func:`hierarchical_all_reduce` is a thin
+wrapper that traces ``reduce(x, axis="auto")`` and compiles it through
+``engine.compile`` — the RS/AR/AG triple (with the codec riding the outer
+hop) is what the pass pipeline emits for a multi-axis reduce.
 """
 
 from __future__ import annotations
@@ -25,11 +31,20 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from repro.core import collectives, ring
+from repro.core import collectives
 from repro.core.types import ADD, Monoid
 from repro.core.wire import IDENTITY, WireCodec
 
 PyTree = Any
+
+# (inner, outer, monoid.name, codec.name, mean) → CompiledProgram.
+# Compiling is trace-time-only Python, but a train step may call this per
+# gradient leaf on every retrace — don't re-run the 5-pass pipeline each
+# time.  Keyed by *names* so per-call codec instances (int8_codec() is
+# deliberately fresh per call) still hit; two distinct codecs sharing a
+# name would collide, which no current codec constructor allows for
+# different behaviour.
+_COMPILE_CACHE: dict = {}
 
 
 def hierarchical_all_reduce(
@@ -42,28 +57,41 @@ def hierarchical_all_reduce(
     backend: str = "acis",
     mean: bool = False,
 ) -> jax.Array:
-    """RS(inner) → AR(outer, coded) → AG(inner).
+    """RS(inner) → AR(outer, coded) → AG(inner), via the compiled pipeline.
 
     Wire accounting per element: 2·(d-1)/d intra-pod + 2·(p-1)/p·ratio/d
     inter-pod, vs a flat AR over d·p ranks pushing 2·(dp-1)/dp through the
     *thin* links too.  The inter-pod bytes drop by d× (and by codec ratio).
+
+    ``backend`` is kept for signature compatibility; the emitted stages
+    always run the explicit acis ring schedules (the xla baseline has no
+    per-hop compute to place).
     """
-    shape = x.shape
-    flat = x.reshape(-1)
-    padded, size = ring.pad_to_multiple(flat, lax.axis_size(inner_axis))
-    shard = collectives.reduce_scatter(padded, inner_axis, monoid,
-                                       backend=backend)
-    if outer_axis is not None:
-        shard = collectives.all_reduce(shard, outer_axis, monoid,
-                                       backend=backend, codec=outer_codec)
-    full = collectives.all_gather(shard, inner_axis, backend=backend)
-    out = full[:size].reshape(shape)
-    if mean:
-        n = lax.axis_size(inner_axis)
-        if outer_axis is not None:
-            n = n * lax.axis_size(outer_axis)
-        out = out / n
-    return out
+    from repro.core import api, tracing
+
+    del backend
+    key = (inner_axis, outer_axis, monoid.name, outer_codec.name, mean)
+    compiled = _COMPILE_CACHE.get(key)
+    if compiled is None:
+        engine = api.make_engine("acis", inner_axis=inner_axis,
+                                 outer_axis=outer_axis)
+
+        def _mean(y):
+            n = lax.axis_size(inner_axis)
+            if outer_axis is not None:
+                n = n * lax.axis_size(outer_axis)
+            return y / n
+
+        def prog(v):
+            if outer_codec is not IDENTITY and outer_axis is not None:
+                # the codec rides the thin outer hop only (and there is no
+                # outer hop to compress on a single-pod topology)
+                v = tracing.wire(outer_codec, v)
+            r = tracing.reduce(v, monoid, axis="auto")
+            return tracing.map(_mean, r, name="mean") if mean else r
+
+        compiled = _COMPILE_CACHE[key] = engine.compile(prog)
+    return compiled(x)
 
 
 def masked_all_reduce(

@@ -26,7 +26,8 @@ import builtins
 import inspect
 from typing import Callable, Optional, Union
 
-from repro.core.program import DagNode, DagProgram, Node, OpKind
+from repro.core.program import (Axis, DagNode, DagProgram, ErrorFeedback,
+                                Node, OpKind)
 from repro.core.types import ADD, Monoid
 from repro.core.wire import WireCodec
 
@@ -144,30 +145,56 @@ def _unary(op_name: str, op: Node, x: Value) -> Value:
     return _current(op_name).emit(op, (x,))
 
 
-def reduce(x: Value, monoid: Monoid = ADD) -> Value:  # noqa: A001
-    return _unary("reduce", Node(OpKind.REDUCE, monoid=monoid), x)
+def reduce(x: Value, monoid: Monoid = ADD, *,  # noqa: A001
+           axis: Axis = None) -> Value:
+    """All-reduce over ``axis`` — ``None`` = the engine default axis,
+    ``"auto"`` = every data-parallel axis of the compile topology (the
+    LowerTopology pass then emits the hierarchical RS/AR/AG schedule)."""
+    return _unary("reduce", Node(OpKind.REDUCE, monoid=monoid, axis=axis), x)
 
 
-def reduce_scatter(x: Value, monoid: Monoid = ADD) -> Value:
+def reduce_scatter(x: Value, monoid: Monoid = ADD, *,
+                   axis: Axis = None) -> Value:
     return _unary("reduce_scatter",
-                  Node(OpKind.REDUCE_SCATTER, monoid=monoid), x)
+                  Node(OpKind.REDUCE_SCATTER, monoid=monoid, axis=axis), x)
 
 
-def all_gather(x: Value) -> Value:
-    return _unary("all_gather", Node(OpKind.ALLGATHER), x)
+def all_gather(x: Value, *, axis: Axis = None) -> Value:
+    return _unary("all_gather", Node(OpKind.ALLGATHER, axis=axis), x)
 
 
-def all_to_all(x: Value) -> Value:
-    return _unary("all_to_all", Node(OpKind.ALLTOALL), x)
+def all_to_all(x: Value, *, axis: Axis = None) -> Value:
+    return _unary("all_to_all", Node(OpKind.ALLTOALL, axis=axis), x)
 
 
-def scan(x: Value, monoid: Monoid = ADD, *, exclusive: bool = False) -> Value:
+def scan(x: Value, monoid: Monoid = ADD, *, exclusive: bool = False,
+         axis: Axis = None) -> Value:
     return _unary("scan",
-                  Node(OpKind.SCAN, monoid=monoid, exclusive=exclusive), x)
+                  Node(OpKind.SCAN, monoid=monoid, exclusive=exclusive,
+                       axis=axis), x)
 
 
-def bcast(x: Value, root: int = 0) -> Value:
-    return _unary("bcast", Node(OpKind.BCAST, root=root), x)
+def bcast(x: Value, root: int = 0, *, axis: Axis = None) -> Value:
+    return _unary("bcast", Node(OpKind.BCAST, root=root, axis=axis), x)
+
+
+def ef_reduce(x: Value, *, compressor: str = "int8",
+              topk_ratio: float = 0.01,
+              axis: Axis = None) -> tuple[Value, Value]:
+    """Error-feedback compressed all-reduce (Type 3 look-aside).
+
+    Returns ``(reduced, delivered)``: the lossily-reduced total, and what
+    the lossy wire delivered of *this rank's* contribution — the caller
+    forms the residual as ``target - delivered``.  The two values are
+    sibling DAG nodes sharing one input; the compiler pairs them back into
+    a single look-aside stage so the compression runs once.  If the
+    program drops ``delivered``, DCE removes the sibling and only the
+    reduction is emitted.
+    """
+    ef = ErrorFeedback(compressor=compressor, topk_ratio=topk_ratio)
+    red = _unary("ef_reduce", Node(OpKind.REDUCE, ef=ef, axis=axis), x)
+    dlv = _unary("ef_reduce", Node(OpKind.DELIVERED, ef=ef, axis=axis), x)
+    return red, dlv
 
 
 def wire(codec: WireCodec, x: Value) -> Value:

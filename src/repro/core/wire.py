@@ -160,3 +160,15 @@ CODECS = {
     "bf16": BF16,
     "fp8": FP8,
 }
+
+
+def resolve_codec(name: str) -> WireCodec:
+    """Codec by config name.  ``"int8"`` builds a *fresh* instance — its
+    encode/decode pair carries per-call-site shape state and must not be
+    shared between compiled programs."""
+    if name in CODECS:
+        return CODECS[name]
+    if name == "int8":
+        return int8_codec()
+    raise ValueError(f"unknown wire codec {name!r}; "
+                     f"expected one of {sorted(CODECS) + ['int8']}")

@@ -109,12 +109,15 @@ def test_pipeline_is_composable():
                                      Legalize, SelectSchedule,
                                      compile_rank_local)
 
-    unfused = (Legalize(), FuseHops(patterns=()), SelectSchedule(), Emit())
+    from repro.core.compiler import LowerTopology
+
+    unfused = (Legalize(), LowerTopology(), FuseHops(patterns=()),
+               SelectSchedule(), Emit())
     prog = SwitchProgram([AllGather(), Scan(), AllGather()], "fig5")
     compiled = compile_rank_local(prog, "data", pipeline=unfused)
     assert compiled.stage_kinds() == ["allgather", "scan", "allgather"]
     assert [type(p).__name__ for p in DEFAULT_PIPELINE] == \
-        ["Legalize", "FuseHops", "SelectSchedule", "Emit"]
+        ["Legalize", "LowerTopology", "FuseHops", "SelectSchedule", "Emit"]
 
 
 def test_compile_program_reports_schedules(mesh8):

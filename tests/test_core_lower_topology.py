@@ -1,0 +1,295 @@
+"""LowerTopology: multi-axis reduces lower to the hierarchical RS/AR/AG
+schedule, the codec rides the thin outer hop only, gradient_sync routes
+every acis backend through the compiled pipeline, and flat vs hierarchical
+numerics agree on a {data: 2, pod: 2} host mesh."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro import core as acis
+from repro.core import make_engine
+from repro.core.program import OpKind
+from repro.core.wire import BF16, IDENTITY
+
+
+@pytest.fixture(scope="module")
+def mesh22():
+    """{data: 2, pod: 2} host mesh for flat-vs-hierarchical equivalence."""
+    return jax.make_mesh((2, 2), ("pod", "data"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+def smap(fn, mesh, in_specs, out_specs):
+    return jax.jit(jax.shard_map(fn, mesh=mesh, in_specs=in_specs,
+                                 out_specs=out_specs, check_vma=False))
+
+
+# ---------------------------------------------------------------------------
+# stage inspection: what LowerTopology emits
+# ---------------------------------------------------------------------------
+
+def test_auto_reduce_emits_rs_ar_ag_triple_with_codec_on_outer():
+    """The acceptance shape: a reduce over axis="auto" on a two-tier
+    engine lowers to RS(inner) → AR(outer) → AG(inner) with the engine's
+    wire codec on the outer (thin) stage only."""
+    eng = make_engine("acis_hierarchical_compressed", outer_axis="pod")
+    c = eng.compile(lambda x: acis.reduce(x, axis="auto"))
+
+    assert c.stage_kinds() == ["map", "reduce_scatter", "allreduce",
+                               "allgather", "map"]
+    assert c.stage_axes() == ["", "data", "pod", "data", ""]
+    assert c.axes() == ["data", "pod"]
+
+    kinds = [nd.op.kind for nd in c.source.nodes]
+    assert kinds == [OpKind.MAP, OpKind.REDUCE_SCATTER, OpKind.REDUCE,
+                     OpKind.ALLGATHER, OpKind.MAP]
+    by_kind = {nd.op.kind: nd.op for nd in c.source.nodes}
+    # compression exactly at the thin link — and nowhere else
+    assert by_kind[OpKind.REDUCE].codec.name.startswith("int8")
+    assert by_kind[OpKind.REDUCE_SCATTER].codec is IDENTITY
+    assert by_kind[OpKind.REDUCE].axis == "pod"
+    assert by_kind[OpKind.REDUCE_SCATTER].axis == "data"
+    assert by_kind[OpKind.ALLGATHER].axis == "data"
+
+
+def test_uncompressed_auto_reduce_keeps_identity_wire():
+    eng = make_engine("acis_hierarchical", outer_axis="pod")
+    c = eng.compile(lambda x: acis.reduce(x, axis="auto"))
+    assert c.stage_kinds() == ["map", "reduce_scatter", "allreduce",
+                               "allgather", "map"]
+    for nd in c.source.nodes:
+        assert nd.op.codec is IDENTITY
+
+
+def test_explicit_wire_rides_outer_hop():
+    """A user-declared wire codec sinks through Legalize and then rides
+    the outer stage of the lowered triple."""
+    eng = make_engine("acis", outer_axis="pod")
+    c = eng.compile(lambda x: acis.reduce(acis.wire(BF16, x), axis="auto"))
+    red = next(nd.op for nd in c.source.nodes if nd.op.kind == OpKind.REDUCE)
+    rs = next(nd.op for nd in c.source.nodes
+              if nd.op.kind == OpKind.REDUCE_SCATTER)
+    assert red.axis == "pod" and red.codec is BF16
+    assert rs.codec is IDENTITY
+
+
+def test_auto_on_single_axis_topology_is_a_plain_reduce():
+    eng = make_engine("acis")            # no outer axis configured
+    c = eng.compile(lambda x: acis.reduce(x, axis="auto"))
+    assert c.stage_kinds() == ["allreduce"]
+    assert c.stage_axes() == ["data"]
+
+
+def test_compound_axis_tuple_spelling():
+    eng = make_engine("acis", outer_axis="pod")
+    c = eng.compile(lambda x: acis.reduce(x, axis=("data", "pod")))
+    assert c.stage_kinds() == ["map", "reduce_scatter", "allreduce",
+                               "allgather", "map"]
+
+
+def test_non_reduce_over_compound_axis_is_rejected():
+    eng = make_engine("acis", outer_axis="pod")
+    with pytest.raises(NotImplementedError, match="compound axis"):
+        eng.compile(lambda x: acis.all_gather(x, axis="auto"))
+
+
+def test_cross_axis_rs_ag_does_not_fuse():
+    """RS and AG on different mesh axes must not collapse into one
+    all-reduce schedule (a pod-local ring cannot carry inter-pod hops)."""
+    eng = make_engine("acis", outer_axis="pod")
+    c = eng.compile(lambda x: acis.all_gather(
+        acis.reduce_scatter(x, axis="data"), axis="pod"))
+    assert c.stage_kinds() == ["reduce_scatter", "allgather"]
+    assert c.stage_axes() == ["data", "pod"]
+
+
+def test_select_schedule_costs_outer_stage_on_dci_tier():
+    """The outer stage is costed against the thin DCI link: with no
+    explicit threshold, the per-axis crossover differs between tiers."""
+    from repro.core import netmodel
+
+    ici = netmodel.ring_crossover_bytes(4, netmodel.ICI)
+    dci = netmodel.ring_crossover_bytes(4, netmodel.DCI)
+    assert dci < ici           # thin wire → latency ring pays off earlier
+
+    eng = make_engine("acis_hierarchical", outer_axis="pod")
+    c = eng.compile(
+        lambda x: acis.reduce(x, axis="auto"),
+        axis_size=2,
+        in_avals=(jax.ShapeDtypeStruct((1 << 16,), jnp.float32),))
+    descs = {s.axis: s.desc for s in c.stages if s.kind == "allreduce"}
+    assert "[pod]" in descs["pod"]
+
+
+# ---------------------------------------------------------------------------
+# flat vs hierarchical numerical equivalence on {data: 2, pod: 2}
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ["acis", "acis_compressed",
+                                     "acis_hierarchical",
+                                     "acis_hierarchical_compressed"])
+def test_gradient_sync_matches_flat_mean_on_2x2(mesh22, rng, backend):
+    """All four acis backends (incl. codec + error feedback) sync through
+    the compiled pipeline and match the flat mean."""
+    g = {"w": rng.standard_normal((4, 33)).astype(np.float32),
+         "b": rng.standard_normal((4, 5)).astype(np.float32)}
+    eng = make_engine(backend, inner_axis="data", outer_axis="pod")
+
+    def f(wl, bl):
+        grads = {"w": wl[0, 0], "b": bl[0, 0]}
+        state = eng.init_state(grads)
+        synced, new_state = eng.gradient_sync(grads, state)
+        return synced["w"][None, None], synced["b"][None, None]
+
+    spec = P("pod", "data", None)
+    w, b = smap(f, mesh22, (spec, spec), (spec, spec))(
+        jnp.asarray(g["w"].reshape(2, 2, 33)),
+        jnp.asarray(g["b"].reshape(2, 2, 5)))
+    atol = 5e-2 if "compressed" in backend else 1e-4
+    for p in range(2):
+        for d in range(2):
+            np.testing.assert_allclose(np.asarray(w)[p, d],
+                                       g["w"].mean(0), atol=atol)
+            np.testing.assert_allclose(np.asarray(b)[p, d],
+                                       g["b"].mean(0), atol=atol)
+
+
+def test_compressed_sync_error_feedback_state_updates(mesh22, rng):
+    """The compiled EF program must return a real residual: target minus
+    what the lossy wire delivered (nonzero, and exact for zero grads)."""
+    g = {"w": rng.standard_normal((4, 64)).astype(np.float32)}
+    eng = make_engine("acis_hierarchical_compressed", inner_axis="data",
+                      outer_axis="pod")
+
+    def f(wl):
+        grads = {"w": wl[0, 0]}
+        state = eng.init_state(grads)
+        synced, new_state = eng.gradient_sync(grads, state)
+        return synced["w"][None, None], new_state["w"][None, None]
+
+    spec = P("pod", "data", None)
+    w, r = smap(f, mesh22, spec, (spec, spec))(
+        jnp.asarray(g["w"].reshape(2, 2, 64)))
+    r = np.asarray(r)
+    assert r.shape == (2, 2, 64)
+    assert np.all(np.isfinite(r))
+    # int8 shared-scale rounding leaves a small but nonzero residual
+    assert 0 < np.abs(r).max() < 0.1
+
+
+def test_hierarchical_all_reduce_matches_flat_on_2x2(mesh22, rng):
+    """The thin topology.hierarchical_all_reduce wrapper (now a compiled
+    switch program) still equals the flat mean, with and without a codec."""
+    from repro.core import topology
+
+    x = rng.standard_normal((4, 33)).astype(np.float32)
+
+    for codec, atol in ((IDENTITY, 1e-4), (BF16, 5e-3)):
+        def f(xl):
+            return topology.hierarchical_all_reduce(
+                xl[0, 0], inner_axis="data", outer_axis="pod",
+                outer_codec=codec, mean=True)[None, None]
+
+        out = np.asarray(smap(f, mesh22, P("pod", "data", None),
+                              P("pod", "data", None))(
+            jnp.asarray(x.reshape(2, 2, 33))))
+        np.testing.assert_allclose(out[0, 0], x.mean(0), atol=atol)
+
+
+def test_ef_reduce_traced_standalone(mesh22, rng):
+    """ef_reduce is a first-class traced op: reduced + delivered pair to
+    one look-aside stage; dropping `delivered` DCEs the sibling."""
+    def both(x):
+        red, dlv = acis.ef_reduce(x, axis="data")
+        return red, dlv
+
+    eng = make_engine("acis", outer_axis="pod")
+    c = eng.compile(both)
+    assert c.stage_kinds() == ["ef_allreduce"]
+    assert len(c.stages[0].out_vids) == 2
+
+    c_lone = eng.compile(lambda x: acis.ef_reduce(x, axis="data")[0])
+    assert c_lone.stage_kinds() == ["ef_allreduce"]
+    assert len(c_lone.stages[0].out_vids) == 1
+
+    x = rng.standard_normal((4, 32)).astype(np.float32)
+
+    def f(xl):
+        red, dlv = c(xl[0, 0])
+        return red[None, None], dlv[None, None]
+
+    spec = P("pod", "data", None)
+    red, dlv = smap(f, mesh22, spec, (spec, spec))(
+        jnp.asarray(x.reshape(2, 2, 32)))
+    # per-pod sum over the two data ranks, quantization-lossy
+    want = x.reshape(2, 2, 32)[0].sum(0)
+    np.testing.assert_allclose(np.asarray(red)[0, 0], want, atol=5e-2)
+
+
+def test_custom_pipeline_without_lowertopology_still_runs(mesh22, rng):
+    """Omitting LowerTopology (the documented composable-pipeline form)
+    must fall back to the program-wide default axis, not crash with an
+    unresolved axis at run time."""
+    from repro.core import SwitchProgram, Reduce, compile_rank_local
+    from repro.core.compiler import (Emit, FuseHops, Legalize,
+                                     SelectSchedule)
+
+    pipeline = (Legalize(), FuseHops(), SelectSchedule(), Emit())
+    c = compile_rank_local(SwitchProgram([Reduce()]), "data",
+                           pipeline=pipeline)
+    assert c.stage_axes() == ["data"]
+
+    # …and SelectSchedule still decides from ctx.axis_size, as before
+    c_sched = compile_rank_local(
+        SwitchProgram([Reduce()]), "data", axis_size=8,
+        in_avals=(jax.ShapeDtypeStruct((4,), jnp.float32),),
+        config=acis.CollectiveConfig(backend="acis",
+                                     latency_optimal_below=16384),
+        pipeline=pipeline)
+    assert c_sched.stage_schedules() == ["latency"]
+
+    # an unresolved compound axis must error loudly, not silently reduce
+    # over the default axis only
+    with pytest.raises(ValueError, match="LowerTopology"):
+        compile_rank_local(
+            SwitchProgram([Reduce(axis=("data", "pod"))]), "data",
+            pipeline=pipeline)
+
+    x = rng.standard_normal((4, 8)).astype(np.float32)
+    out = np.asarray(smap(lambda v: c(v[0, 0])[None, None], mesh22,
+                          P("pod", "data", None), P("pod", "data", None))(
+        jnp.asarray(x.reshape(2, 2, 8))))
+    # per-pod sum over the inner "data" axis only
+    np.testing.assert_allclose(out[0, 0], x.reshape(2, 2, 8)[0].sum(0),
+                               rtol=1e-5)
+
+
+def test_wire_on_ef_reduce_is_dropped_not_silently_kept():
+    """An EF reduce's wire format is the compressor's own — a user WIRE
+    reaching it drops (fixed-function link semantics), it must not linger
+    as an ignored codec attribute."""
+    eng = make_engine("acis")
+    c = eng.compile(lambda x: acis.ef_reduce(acis.wire(BF16, x),
+                                             axis="data")[0])
+    red = next(nd.op for nd in c.source.nodes
+               if nd.op.kind == OpKind.REDUCE)
+    assert red.codec is IDENTITY
+
+
+def test_sync_program_is_cached_per_structure(mesh22):
+    eng = make_engine("acis", inner_axis="data", outer_axis="pod")
+    g = {"w": jnp.ones((4,)), "b": jnp.ones((3,))}
+
+    def f(wl, bl):
+        grads = {"w": wl[0, 0], "b": bl[0, 0]}
+        s1, _ = eng.gradient_sync(grads, None)
+        s2, _ = eng.gradient_sync(grads, None)
+        return s1["w"][None, None], s2["b"][None, None]
+
+    spec = P("pod", "data", None)
+    smap(f, mesh22, (spec, spec), (spec, spec))(
+        jnp.ones((2, 2, 4)), jnp.ones((2, 2, 3)))
+    assert len(eng._sync_cache) == 1   # same treedef → one compile
