@@ -1,0 +1,110 @@
+"""Simulated vs analytic switch latency (BENCH_cgra.json).
+
+Each point compiles a representative switch program through the full
+pass pipeline (so every stage carries a CGRA placement or an explicit
+host fallback), executes it on the dataplane simulator
+(:mod:`repro.cgra.simulate` — no mesh, no shard_map, pure in-process),
+and records the simulated end-to-end latency next to the
+:mod:`repro.core.netmodel` analytic prediction.  CI uploads the JSON so
+the two models can be tracked against each other over time.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def _points():
+    """Yield (name, compiled, topology_sizes, inputs)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro import core as acis
+    from repro.core import make_engine
+
+    AV = jax.ShapeDtypeStruct
+    rng = np.random.default_rng(0)
+
+    # Fig. 5 fused AG∘scan∘AG — one in-network traversal, 8 ranks, 8 KB
+    eng = make_engine("acis")
+    c = eng.compile(
+        lambda x: acis.all_gather(acis.scan(acis.all_gather(x))),
+        in_avals=(AV((2048,), jnp.float32),), axis_size=8,
+        axis_name="data")
+    yield ("fig5_fused_scanAG_8r_8KB", c, eng.topology(axis_size=8),
+           (rng.standard_normal((8, 2048)).astype(np.float32),))
+
+    # MapReduce: square fused ahead of the AR schedule — 64 KB
+    c = eng.compile(
+        lambda x: acis.reduce(acis.map(jnp.square, x, name="sq")),
+        in_avals=(AV((16384,), jnp.float32),), axis_size=8)
+    yield ("mapreduce_sq_8r_64KB", c, eng.topology(axis_size=8),
+           (rng.standard_normal((8, 16384)).astype(np.float32),))
+
+    # NAS-IS: AR + A2A pair fused onto one ring traversal
+    c = eng.compile(
+        lambda h, k: (acis.reduce(h), acis.all_to_all(k)),
+        in_avals=(AV((1024,), jnp.float32), AV((8192,), jnp.float32)),
+        axis_size=8)
+    yield ("nas_is_fusedARA2A_8r", c, eng.topology(axis_size=8),
+           (rng.standard_normal((8, 1024)).astype(np.float32),
+            rng.standard_normal((8, 8192)).astype(np.float32)))
+
+    # Hierarchical compressed sync: int8 codec on the thin inter-pod hop
+    engh = make_engine("acis_hierarchical_compressed", inner_axis="data",
+                       outer_axis="pod")
+    sizes = {"data": 4, "pod": 2}
+    c = engh.compile(lambda x: acis.reduce(x, axis="auto"),
+                     in_avals=(AV((16384,), jnp.float32),),
+                     axis_size=sizes)
+    yield ("hier_sync_int8_2x4_64KB", c, engh.topology(axis_size=sizes),
+           (rng.standard_normal((4, 2, 16384)).astype(np.float32),))
+
+    # Error-feedback look-aside sync (shared-scale int8 compressor)
+    engc = make_engine("acis_compressed")
+    c = engc.compile(lambda x: acis.ef_reduce(x, axis="data")[0],
+                     in_avals=(AV((16384,), jnp.float32),), axis_size=8)
+    yield ("ef_sync_int8_8r_64KB", c, engc.topology(axis_size=8),
+           (rng.standard_normal((8, 16384)).astype(np.float32),))
+
+    # Host-fallback path: top-k sparsifier does not fit the CGRA
+    c = engc.compile(
+        lambda x: acis.ef_reduce(x, axis="data", compressor="topk",
+                                 topk_ratio=0.01)[0],
+        in_avals=(AV((16384,), jnp.float32),), axis_size=8)
+    yield ("ef_sync_topk_fallback_8r_64KB", c, engc.topology(axis_size=8),
+           (rng.standard_normal((8, 16384)).astype(np.float32),))
+
+
+def rows() -> list[tuple]:
+    """CSV rows: (name, simulated_us, 'analytic_us=…,fallbacks=…')."""
+    from repro.cgra.simulate import SwitchSim
+
+    out = []
+    for name, compiled, topo, inputs in _points():
+        sim = SwitchSim(topo)
+        _, report = sim.run(compiled, *inputs)
+        n_fb = sum(1 for s in compiled.stages
+                   if s.placement is not None and not s.placement.fits)
+        out.append((f"cgra_{name}", report.t_sim * 1e6,
+                    f"analytic_us={report.t_model * 1e6:.2f}"
+                    f",stages={len(report.stages)}"
+                    f",fallbacks={n_fb}"))
+    return out
+
+
+def record(computed_rows: list | None = None) -> dict:
+    """BENCH_cgra.json payload: simulated vs analytic per benchmark.
+
+    Pass rows already computed by :func:`rows` to avoid recompiling and
+    re-simulating the whole benchmark set.
+    """
+    out: dict = {}
+    for name, sim_us, derived in (computed_rows if computed_rows
+                                  is not None else rows()):
+        out[f"{name}.simulated_us"] = round(sim_us, 3)
+        for part in derived.split(","):
+            k, _, v = part.partition("=")
+            if k == "analytic_us":
+                out[f"{name}.analytic_us"] = round(float(v), 3)
+    return out

@@ -11,13 +11,16 @@ Prints ``name,us_per_call,derived`` CSV.  Default mode prints the summary
 rows (per-figure means + the real-JAX engine measurements); ``--full``
 additionally dumps every (collective × nodes × size) emulator point.
 ``--json`` additionally writes ``BENCH_netmodel.json`` (name →
-us_per_call) so CI can record the perf trajectory as an artifact.
+us_per_call) and ``BENCH_cgra.json`` (per-benchmark simulated vs
+analytic switch latency from the dataplane simulator) so CI can record
+both trajectories as artifacts.
 """
 
 import json
 import sys
 
 JSON_PATH = "BENCH_netmodel.json"
+CGRA_JSON_PATH = "BENCH_cgra.json"
 
 
 def main() -> None:
@@ -52,6 +55,11 @@ def main() -> None:
     # real engine measurements (8 host devices)
     rows += figures.jax_measurements()
 
+    # dataplane simulator vs analytic model, per compiled benchmark
+    from benchmarks import cgra
+    cgra_rows = cgra.rows()
+    rows += cgra_rows
+
     print("name,us_per_call,derived")
     for name, us, derived in rows:
         print(f"{name},{us:.2f},{derived}")
@@ -82,6 +90,11 @@ def main() -> None:
             json.dump(record, f, indent=2, sort_keys=True)
             f.write("\n")
         print(f"wrote {JSON_PATH}", file=sys.stderr)
+
+        with open(CGRA_JSON_PATH, "w") as f:
+            json.dump(cgra.record(cgra_rows), f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"wrote {CGRA_JSON_PATH}", file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -37,10 +37,9 @@ def main():
 
         print(f"== {backend} ==")
         print("program: reduce(g, axis='auto')")
-        for st in compiled.stages:
-            axis = f"@{st.axis}" if st.axis else ""
-            sched = f" [{st.schedule}]" if st.schedule else ""
-            print(f"  {st.kind}{axis}{sched}  {st.desc}")
+        # the compiled program explains itself: kind/axis/schedule/codec
+        # and the CGRA placement (or host fallback) per stage
+        print(compiled.explain())
         red = next(nd.op for nd in compiled.source.nodes
                    if nd.op.kind.value == "reduce")
         print(f"  -> wire codec on the inter-pod hop: {red.codec.name}\n")

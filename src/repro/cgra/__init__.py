@@ -1,0 +1,47 @@
+"""repro.cgra — the switch hardware half of the reproduction.
+
+Three layers (paper §IV + §VI):
+
+  * :mod:`repro.cgra.device`   — the parameterized CGRA grid model
+    (PEs, op slots, routing/register budgets, line rate).
+  * :mod:`repro.cgra.mapper`   — stage compute body → jaxpr → op-graph →
+    place-and-route; the :class:`PlaceCGRA` compiler pass attaching a
+    :class:`Placement` or explicit :class:`HostFallback` to every stage.
+  * :mod:`repro.cgra.simulate` — a discrete-event, multi-port switch
+    dataplane simulator executing a :class:`CompiledProgram` across N
+    simulated ranks in one process, reporting simulated latency next to
+    the :mod:`repro.core.netmodel` analytic prediction.
+
+Only :mod:`.device` is imported eagerly: :mod:`repro.core.netmodel`
+derives its accelerator rates from it, so this package ``__init__`` must
+stay import-light (mapper/simulate pull in the compiler, which pulls in
+netmodel — eager imports here would cycle).
+"""
+
+from repro.cgra.device import (CGRADevice, HostFallback, PAPER_CGRA,
+                               Placement, placement_rate, route_through)
+
+__all__ = [
+    "CGRADevice", "HostFallback", "PAPER_CGRA", "Placement",
+    "placement_rate", "route_through",
+    # lazy (PEP 562):
+    "PlaceCGRA", "place_stage", "SwitchSim", "SimReport",
+]
+
+_LAZY = {
+    "PlaceCGRA": "repro.cgra.mapper",
+    "place_stage": "repro.cgra.mapper",
+    "lower_jaxpr": "repro.cgra.mapper",
+    "trace_body": "repro.cgra.mapper",
+    "SwitchSim": "repro.cgra.simulate",
+    "SimReport": "repro.cgra.simulate",
+}
+
+
+def __getattr__(name):
+    mod = _LAZY.get(name)
+    if mod is None:
+        raise AttributeError(f"module 'repro.cgra' has no attribute {name!r}")
+    import importlib
+
+    return getattr(importlib.import_module(mod), name)

@@ -1,0 +1,491 @@
+"""CGRA mapper — lower a stage's compute body onto the switch grid.
+
+The paper's §VI toolchain: user source → dataflow graph → schedule /
+place onto the CGRA → binary.  Here the "user source" is whatever
+compute a compiled stage carries — fused MAP bodies, the collective's
+monoid combine, a wire codec's encoded-domain combine, a look-aside
+compressor — traced to a jaxpr, lowered to a small op-graph, and
+list-scheduled onto the :class:`~repro.cgra.device.CGRADevice` grid:
+
+  * ASAP levels give the pipeline stages; level *l* places on grid row
+    ``l % rows``, greedily left to right (spill rows fold into II).
+  * ALU primitives take one PE slot; accumulator primitives take one PE
+    plus ``log2(extent)`` pipeline depth (a balanced combine tree);
+    steering primitives are absorbed by the interconnect.
+  * Anything else — ``gather``/``scatter`` (random access), ``sort`` /
+    ``top_k`` (no sort network), ``dot_general`` (no MAC array),
+    ``scan``/``while`` (no sequential controller) — does not fit, and
+    the stage gets an explicit :class:`HostFallback`.
+
+Tracing runs under nested ``jax.vmap(..., axis_name=...)`` frames, one
+per topology axis, so compute bodies may legitimately query
+``lax.axis_size`` (the compiler's own pad/unpad bookkeeping maps do).
+A body that performs *communication* (``ppermute`` et al.) batches into
+gathers under those frames and is therefore caught by the same
+unsupported-primitive check — a collective inside a MAP body is endpoint
+code, not something one switch's array can run.
+
+:class:`PlaceCGRA` is the compiler pass (pipeline position: after
+SelectSchedule, before Emit) that attaches a placement — or fallback —
+to every stage.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.cgra.device import (ACCUM_PRIMS, ALU_PRIMS, CALL_PRIMS,
+                               CGRADevice, HostFallback, PAPER_CGRA,
+                               Placement, ROUTE_PRIMS, route_through)
+from repro.core import netmodel
+from repro.core.program import COLLECTIVE_KINDS, OpKind
+from repro.core.wire import IDENTITY
+
+Aval = jax.ShapeDtypeStruct
+
+# Dummy rank-local shape used when no avals were provided to the
+# compiler: elementwise op-graphs are shape-independent, so a small
+# stand-in is enough to recover the graph structure.
+_FALLBACK_AVAL = Aval((64,), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# jaxpr → op-graph
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class OpGraph:
+    """Flattened compute body: primitive names with ASAP levels."""
+
+    ops: tuple            # (prim_name, level) for ALU/accumulator ops
+    n_route: int
+    depth: int            # pipeline depth incl. accumulator trees
+
+    @property
+    def n_ops(self) -> int:
+        return len(self.ops)
+
+
+def _reduced_extent(eqn) -> int:
+    """Elements folded by an accumulator primitive (for tree depth)."""
+    try:
+        (invar,) = eqn.invars[:1]
+        size = int(max(
+            (d for d in getattr(invar.aval, "shape", (1,)) or (1,)),
+            default=1))
+        return max(size, 2)
+    except Exception:
+        return 2
+
+
+def _walk(jaxpr, levels: dict, ops: list, route: list,
+          supported: frozenset) -> None:
+    def level_of(v) -> int:
+        return levels.get(id(v), 0)
+
+    for eqn in jaxpr.eqns:
+        name = eqn.primitive.name
+        sub = [v for v in eqn.params.values() if hasattr(v, "jaxpr")]
+        if name in CALL_PRIMS:
+            # recurse through call-like wrappers only; inner vars start
+            # at the call site's input level
+            base = max((level_of(v) for v in eqn.invars), default=0)
+            for closed in sub:
+                inner = closed.jaxpr
+                for iv, ov in zip(eqn.invars, inner.invars):
+                    levels[id(ov)] = level_of(iv)
+                _walk(inner, levels, ops, route, supported)
+                for iv, ov in zip(inner.outvars, eqn.outvars):
+                    levels[id(ov)] = levels.get(id(iv), base)
+            continue
+        if sub:
+            # scan/while/cond and friends: a sequential controller the
+            # spatial pipeline does not have — never place these silently
+            raise _Unsupported(name)
+        lvl = max((level_of(v) for v in eqn.invars), default=0)
+        if name in ROUTE_PRIMS:
+            route.append(name)
+            out_lvl = lvl
+        elif name in ACCUM_PRIMS:
+            tree = int(math.ceil(math.log2(_reduced_extent(eqn))))
+            ops.append((name, lvl))
+            out_lvl = lvl + tree
+        elif name in supported:
+            ops.append((name, lvl))
+            out_lvl = lvl + 1
+        else:
+            raise _Unsupported(name)
+        for ov in eqn.outvars:
+            levels[id(ov)] = out_lvl
+
+
+class _Unsupported(Exception):
+    def __init__(self, prim: str):
+        super().__init__(prim)
+        self.prim = prim
+
+
+def lower_jaxpr(closed_jaxpr,
+                supported: frozenset = ALU_PRIMS) -> OpGraph:
+    """Lower a (closed) jaxpr to an :class:`OpGraph`.
+
+    ``supported`` is the target device's ALU vocabulary
+    (:attr:`CGRADevice.supported`) — raises :class:`_Unsupported` on the
+    first primitive outside it (or outside the structural
+    accumulator/steering classes).
+    """
+    levels: dict = {}
+    ops: list = []
+    route: list = []
+    _walk(closed_jaxpr.jaxpr, levels, ops, route, supported)
+    depth = max([lvl + 1 for _, lvl in ops], default=0)
+    return OpGraph(tuple(ops), len(route), depth)
+
+
+def trace_body(fn: Callable, avals: Sequence[Aval],
+               axis_env: Optional[dict] = None):
+    """``jax.make_jaxpr`` of a stage body with topology axes bound.
+
+    ``axis_env`` maps axis name → size; the body is wrapped in one
+    ``vmap(axis_name=...)`` frame per axis (sizes default to 2) so
+    rank-local bookkeeping such as ``lax.axis_size`` traces.  The batch
+    dims are an artifact of the binding — the op-graph reader only looks
+    at primitive structure, which vmap preserves for elementwise work.
+    """
+    axis_env = axis_env or {}
+    wrapped = fn
+    sizes = []
+    for ax, n in reversed(list(axis_env.items())):
+        wrapped = jax.vmap(wrapped, axis_name=ax)
+        sizes.insert(0, int(n) if n else 2)
+    lead = tuple(sizes)
+    args = [Aval(lead + tuple(a.shape), a.dtype) for a in avals]
+    return jax.make_jaxpr(wrapped)(*args)
+
+
+# ---------------------------------------------------------------------------
+# placement (list scheduling + greedy grid assignment)
+# ---------------------------------------------------------------------------
+
+def place_opgraph(graph: OpGraph, device: CGRADevice
+                  ) -> "Placement | HostFallback":
+    """Place a lowered op-graph onto the grid; the doesn't-fit outcomes
+    are explicit so callers can cost the host detour."""
+    if graph.n_ops == 0:
+        if graph.n_route > device.route_budget:
+            return HostFallback(
+                f"{graph.n_route} steering ops exceed the routing budget "
+                f"({device.route_budget})")
+        return route_through(device, graph.n_route)
+    if graph.n_ops > device.op_slots:
+        return HostFallback(
+            f"op graph needs {graph.n_ops} ALU slots, device has "
+            f"{device.op_slots} ({device.n_pes} PEs x "
+            f"{device.ops_per_pe} slots)")
+    if graph.n_route > device.route_budget:
+        return HostFallback(
+            f"{graph.n_route} steering ops exceed the routing budget "
+            f"({device.route_budget})")
+    if graph.depth > device.max_depth:
+        return HostFallback(
+            f"pipeline depth {graph.depth} exceeds the register budget "
+            f"({device.max_depth})")
+
+    # Greedy level-major placement: level l starts on row l % rows and
+    # claims columns left to right; a level wider than the row wraps to
+    # the next row (still one spatial wave as long as PEs remain).
+    occupied: list = []
+    slot_use: dict = {}
+    r = c = 0
+    for prim, lvl in sorted(graph.ops, key=lambda o: o[1]):
+        placed = False
+        for _ in range(device.n_pes * device.ops_per_pe):
+            pe = (r, c)
+            if slot_use.get(pe, 0) < device.ops_per_pe:
+                slot_use[pe] = slot_use.get(pe, 0) + 1
+                if pe not in occupied:
+                    occupied.append(pe)
+                placed = True
+                break
+            c += 1
+            if c == device.cols:
+                c, r = 0, (r + 1) % device.rows
+        if not placed:                             # pragma: no cover
+            return HostFallback("placement overflow")
+    ii = max(1, math.ceil(graph.n_ops / device.n_pes))
+    return Placement(device=device, n_ops=graph.n_ops,
+                     n_route=graph.n_route, depth=graph.depth, ii=ii,
+                     pes=tuple(occupied),
+                     ops=tuple(p for p, _ in sorted(graph.ops,
+                                                    key=lambda o: o[1])))
+
+
+# ---------------------------------------------------------------------------
+# stage compute bodies
+# ---------------------------------------------------------------------------
+
+def _codec_combine_body(monoid, codec, aval) -> tuple[Callable, tuple]:
+    """What one hop's aggregation unit actually computes for a reduce.
+
+    For an encoded-domain codec, both operands arrive *already encoded*
+    (the payload is coded once at injection, not per hop), so the hop
+    body is ``combine_encoded`` alone over the encoded leaves.
+    """
+    if codec is IDENTITY:
+        return monoid.combine, (aval, aval)
+    if codec.combine_encoded is not None:
+        enc = jax.eval_shape(codec.encode, aval)
+        leaves, tree = jax.tree_util.tree_flatten(enc)
+        k = len(leaves)
+
+        def body(*flat):
+            a = jax.tree_util.tree_unflatten(tree, flat[:k])
+            b = jax.tree_util.tree_unflatten(tree, flat[k:])
+            return codec.combine_encoded(a, b)
+
+        avals = tuple(Aval(tuple(l.shape), l.dtype) for l in leaves)
+        return body, avals + avals
+    # cast-style codec: hops combine in the wire dtype
+    return (lambda a, b: monoid.combine(codec.encode(a), codec.encode(b)),
+            (aval, aval))
+
+
+def _monoid_combine(monoid) -> Callable:
+    return monoid.combine
+
+
+def _int8_local_body(t):
+    """Rank-local half of the shared-scale int8 compressor (the part the
+    switch pipeline runs per payload block): blockwise absmax → scale →
+    quantize → dequantize.  The tiny scale max-allreduce is network, not
+    PE work."""
+    block = 256
+    flat = t.reshape(-1).astype(jnp.float32)
+    pad = (-flat.shape[0]) % block
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros((pad,), jnp.float32)])
+    blocks = flat.reshape(-1, block)
+    absmax = jnp.max(jnp.abs(blocks), axis=1, keepdims=True)
+    scale = jnp.where(absmax > 0, absmax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int16)
+    return (q.astype(jnp.float32) * scale).reshape(flat.shape)
+
+
+def _topk_local_body(t, ratio):
+    flat = t.reshape(-1)
+    k = max(1, int(flat.shape[0] * ratio))
+    vals, idx = jax.lax.top_k(jnp.abs(flat), k)
+    return vals, idx
+
+
+def _ef_body(ef) -> tuple[Callable, str]:
+    if ef.compressor in ("int8", "int8_hopquant"):
+        return _int8_local_body, f"{ef.compressor} quantize pipeline"
+    if ef.compressor == "topk":
+        return (lambda t: _topk_local_body(t, ef.topk_ratio),
+                "top-k sparsifier")
+    return (lambda t: t), ef.compressor
+
+
+_MOVEMENT_KINDS = {OpKind.ALLGATHER, OpKind.ALLTOALL, OpKind.BCAST}
+
+
+def stage_bodies(stage_ir, aval_of: Callable[[int], Aval]
+                 ) -> list[tuple[Callable, tuple, str]]:
+    """The compute bodies one stage streams through the array.
+
+    Returns ``[(fn, avals, label), ...]`` — fused stages contribute one
+    body per compute-carrying node (a map fused into a reduce means the
+    pipe runs map *then* combine on every word-group).
+    """
+    bodies: list = []
+    for nd in stage_ir.nodes:
+        op = nd.op
+        if op.kind == OpKind.MAP:
+            avals = tuple(aval_of(v) for v in nd.inputs)
+            bodies.append((op.fn, avals, f"map:{op.name or 'fn'}"))
+        elif op.kind in (OpKind.REDUCE, OpKind.REDUCE_SCATTER, OpKind.SCAN):
+            aval = aval_of(nd.inputs[0])
+            if op.ef is not None:
+                fn, label = _ef_body(op.ef)
+                bodies.append((fn, (aval,), label))
+            else:
+                label = f"{op.monoid.name}-combine"
+                if op.codec is not IDENTITY:
+                    label += f"@{op.codec.name}"
+                try:
+                    fn, avals = _codec_combine_body(op.monoid, op.codec,
+                                                    aval)
+                except Exception as e:
+                    return [((lambda: None), (), f"{label}: uncodable "
+                             f"({type(e).__name__})")]
+                bodies.append((fn, avals, label))
+        elif op.kind == OpKind.DELIVERED and op.ef is not None:
+            # in a fused REDUCE+DELIVERED pair the compression runs once
+            # and yields both outputs — don't double-count the pipeline
+            paired = any(o.op.kind == OpKind.REDUCE and o.op.ef == op.ef
+                         for o in stage_ir.nodes)
+            if not paired:
+                fn, label = _ef_body(op.ef)
+                bodies.append((fn, (aval_of(nd.inputs[0]),), label))
+        # movement kinds carry no ALU body
+    return bodies
+
+
+def place_stage(stage_ir, device: CGRADevice,
+                aval_of: Callable[[int], Aval],
+                axis_env: Optional[dict] = None
+                ) -> "Placement | HostFallback":
+    """Map one fused stage's full compute body onto the device.
+
+    Multiple bodies (map ∘ combine) chain in the pipe: op slots add,
+    depths add.  No body at all is pure movement — a route-through.
+    """
+    bodies = stage_bodies(stage_ir, aval_of)
+    if not bodies:
+        return route_through(device,
+                             note="forwarding/replication, no PE compute")
+    ops: list = []
+    n_route = 0
+    depth = 0
+    for fn, avals, label in bodies:
+        try:
+            jaxpr = trace_body(fn, avals, axis_env)
+        except _Unsupported as e:                  # pragma: no cover
+            return HostFallback(f"{label}: primitive {e.prim!r} "
+                                "not implemented by the switch CGRA")
+        except Exception as e:
+            return HostFallback(
+                f"{label}: body is not a rank-local dataflow graph "
+                f"({type(e).__name__}: {e})"[:300])
+        try:
+            g = lower_jaxpr(jaxpr, device.supported)
+        except _Unsupported as e:
+            return HostFallback(f"{label}: primitive {e.prim!r} "
+                                "not implemented by the switch CGRA")
+        ops.extend((p, lvl + depth) for p, lvl in g.ops)
+        n_route += g.n_route
+        depth += g.depth
+    return place_opgraph(OpGraph(tuple(ops), n_route, depth), device)
+
+
+# ---------------------------------------------------------------------------
+# place_groups — the body of the compiler's PlaceCGRA pass
+# ---------------------------------------------------------------------------
+
+def place_groups(groups: list, ctx,
+                 device: Optional[CGRADevice] = None) -> list:
+    """Attach a CGRA placement (or host fallback) to every stage group.
+
+    Called by :class:`repro.core.compiler.PlaceCGRA` (which defers the
+    import of this module so the two packages stay import-acyclic).
+    """
+    device = device \
+        or getattr(ctx.config, "cgra_device", None) or PAPER_CGRA
+    avals = _value_avals(ctx)
+
+    def aval_of(vid: int) -> Aval:
+        return avals.get(vid, _FALLBACK_AVAL)
+
+    axis_env = _axis_env(ctx)
+    out = []
+    for g in groups:
+        pl = place_stage(g, device, aval_of, axis_env)
+        desc = g.desc
+        t = _stage_model_time(g, pl, ctx, avals)
+        note = pl.describe() + (f"; model {t * 1e6:.1f}us"
+                                if t is not None else "")
+        desc = f"{desc} | {note}" if desc else note
+        out.append(dataclasses.replace(g, placement=pl, desc=desc))
+    return out
+
+
+def _axis_env(ctx) -> dict:
+    env: dict = {}
+    topo = getattr(ctx, "topology", None)
+    if topo is not None:
+        for a in topo.axes:
+            env[a.name] = a.size or 2
+    elif getattr(ctx, "axis_name", None):
+        env[ctx.axis_name] = getattr(ctx, "axis_size", None) or 2
+    return env
+
+
+def _value_avals(ctx) -> dict[int, Aval]:
+    """Best-effort rank-local avals for every DAG value (shapes drive
+    body tracing; sizes drive the model re-cost).  Mirrors
+    SelectSchedule's byte propagation, but in shape space."""
+    if ctx.in_avals is None or ctx.dag is None:
+        return {}
+    avals: dict[int, Aval] = {
+        i: Aval(tuple(a.shape), a.dtype)
+        for i, a in enumerate(ctx.in_avals)}
+    axis_env = _axis_env(ctx)
+    for nd in ctx.dag.nodes:
+        k = nd.op.kind
+        ins = [avals.get(v) for v in nd.inputs]
+        if k == OpKind.MAP:
+            if any(a is None for a in ins):
+                continue
+            try:
+                jaxpr = trace_body(nd.op.fn, ins, axis_env)
+                out_aval = jaxpr.out_avals[0]
+                lead = len(axis_env)
+                avals[nd.out] = Aval(tuple(out_aval.shape[lead:]),
+                                     out_aval.dtype)
+            except Exception:
+                pass
+            continue
+        if ins and ins[0] is not None:
+            src = ins[0]
+            ax = nd.op.axis if isinstance(nd.op.axis, str) else None
+            n = axis_env.get(ax or getattr(ctx, "axis_name", ""), None)
+            if k == OpKind.ALLGATHER and n and src.shape:
+                avals[nd.out] = Aval((src.shape[0] * n,) + src.shape[1:],
+                                     src.dtype)
+            elif k == OpKind.REDUCE_SCATTER and n and src.shape:
+                avals[nd.out] = Aval(
+                    (max(src.shape[0] // n, 1),) + src.shape[1:], src.dtype)
+            else:
+                avals[nd.out] = src
+    return avals
+
+
+def _stage_model_time(g, placement, ctx, avals) -> Optional[float]:
+    """Analytic stage time with the placement-derived rate (None when
+    the payload is unknown)."""
+    aval = avals.get(g.in_vids[0]) if g.in_vids else None
+    if aval is None:
+        return None
+    m = int(math.prod(aval.shape or (1,))) * jnp.dtype(aval.dtype).itemsize
+    axis = g.axis or getattr(ctx, "axis_name", "")
+    n = ctx.size_of(axis) if axis else None
+    p = ctx.net_of(axis) if axis else getattr(ctx, "net", netmodel.PAPER)
+    try:
+        return netmodel.stage_time(g.kind, n or 1, m, p,
+                                   placement=placement,
+                                   schedule=g.schedule,
+                                   codec_ratio=_codec_ratio(g))
+    except Exception:
+        return None
+
+
+def _codec_ratio(g) -> float:
+    for nd in g.nodes:
+        if nd.op.kind in COLLECTIVE_KINDS and nd.op.codec is not IDENTITY:
+            return float(nd.op.codec.wire_ratio)
+    return 1.0
+
+
+# Re-export of the compiler pass that drives place_groups, so
+# `from repro.cgra.mapper import PlaceCGRA` keeps working (the class
+# lives in repro.core.compiler to keep module imports acyclic).
+from repro.core.compiler import PlaceCGRA  # noqa: E402
+
+__all__ = ["PlaceCGRA", "place_groups", "place_stage", "place_opgraph",
+           "stage_bodies", "trace_body", "lower_jaxpr", "OpGraph"]

@@ -1,0 +1,693 @@
+"""Cycle-approximate switch dataplane simulator.
+
+Executes a compiled switch program (:class:`repro.core.compiler.
+CompiledProgram`) across N *simulated* ranks in a single process: every
+rank's port buffer is a numpy/jax array, every collective stage is
+interpreted hop by hop with exactly the chunk walk and per-hop combine
+order of the real :mod:`repro.core.ring` schedules, and a discrete-event
+clock per rank advances by link latency + serialization + in-switch (or
+host-detour) compute per hop.
+
+Two outputs per run:
+
+  * the program's results for every rank — bit-comparable (allclose)
+    against executing the same ``CompiledProgram`` under ``jax.shard_map``
+    on a real device mesh, which is how the tests validate the dataplane;
+  * a :class:`SimReport` putting the *simulated* per-stage latency next
+    to the :func:`repro.core.netmodel.stage_time` analytic prediction —
+    the emulator's cross-check, stage by stage, with the CGRA placement
+    (or host fallback) that produced the compute rate.
+
+The simulator needs no mesh and no shard_map: multi-axis programs
+(hierarchical RS/AR/AG) run over a simulated rank *grid*, each stage
+over its own axis, with the stage's link tier (ICI/DCI) taken from the
+compile topology.  MAP bodies execute under nested ``jax.vmap`` frames
+(one per grid axis, names bound) so the compiler's pad/unpad bookkeeping
+— which queries ``lax.axis_size`` — runs unmodified.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.cgra.device import HostFallback, PAPER_CGRA
+from repro.core import netmodel
+from repro.core.program import OpKind
+from repro.core.wire import IDENTITY, int8_codec
+
+Array = np.ndarray
+
+
+# ---------------------------------------------------------------------------
+# report
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class SimStage:
+    kind: str
+    axis: str
+    schedule: str
+    t_sim: float                  # simulated wall time of the stage (s)
+    t_model: Optional[float]      # netmodel.stage_time prediction (s)
+    placement: Any = None
+
+    @property
+    def deviation(self) -> Optional[float]:
+        if not self.t_model:
+            return None
+        return self.t_sim / self.t_model
+
+
+@dataclasses.dataclass
+class SimReport:
+    stages: list[SimStage]
+    axes: dict                    # axis name -> size
+
+    @property
+    def t_sim(self) -> float:
+        return sum(s.t_sim for s in self.stages)
+
+    @property
+    def t_model(self) -> float:
+        return sum(s.t_model or 0.0 for s in self.stages)
+
+    def table(self) -> str:
+        rows = [("kind", "axis", "sched", "sim_us", "model_us", "placement")]
+        for s in self.stages:
+            pl = s.placement.describe() if s.placement is not None else "-"
+            rows.append((s.kind, s.axis or "-", s.schedule or "-",
+                         f"{s.t_sim * 1e6:9.2f}",
+                         f"{(s.t_model or 0.0) * 1e6:9.2f}", pl))
+        rows.append(("TOTAL", "", "", f"{self.t_sim * 1e6:9.2f}",
+                     f"{self.t_model * 1e6:9.2f}", ""))
+        w = [max(len(r[c]) for r in rows) for c in range(5)]
+        return "\n".join(
+            "  ".join(r[c].ljust(w[c]) for c in range(5)) + "  " + r[5]
+            for r in rows)
+
+
+# ---------------------------------------------------------------------------
+# the simulator
+# ---------------------------------------------------------------------------
+
+class SwitchSim:
+    """A multi-port switch fabric simulated at rank granularity.
+
+    ``topology`` is either a :class:`repro.core.compiler.Topology` (axis
+    order = leading-dim order of the inputs; per-axis link tiers are
+    honored) or a ``{axis: size}`` mapping (all axes on the fast tier).
+    """
+
+    def __init__(self, topology, *, device=PAPER_CGRA):
+        if hasattr(topology, "axes"):          # compiler.Topology
+            self.axis_names = [a.name for a in topology.axes]
+            self.sizes = {a.name: int(a.size) for a in topology.axes}
+            self.nets = {a.name: topology.net(a.name)
+                         for a in topology.axes}
+        else:
+            self.axis_names = list(topology)
+            self.sizes = {a: int(n) for a, n in dict(topology).items()}
+            self.nets = {a: netmodel.PAPER for a in self.axis_names}
+        if any(n <= 0 for n in self.sizes.values()):
+            raise ValueError(f"axis sizes must be concrete: {self.sizes}")
+        self.grid = tuple(self.sizes[a] for a in self.axis_names)
+        self.n_ranks = int(np.prod(self.grid))
+        self.device = device
+
+    # -- rank bookkeeping ---------------------------------------------------
+
+    def _rings(self, axis: str) -> list[np.ndarray]:
+        """Flat rank index groups forming independent rings along ``axis``."""
+        ids = np.arange(self.n_ranks).reshape(self.grid)
+        k = self.axis_names.index(axis)
+        moved = np.moveaxis(ids, k, -1)
+        return [g for g in moved.reshape(-1, self.grid[k])]
+
+    def _vmap_all(self, fn: Callable) -> Callable:
+        for ax in reversed(self.axis_names):
+            fn = jax.vmap(fn, axis_name=ax)
+        return fn
+
+    # -- timing -------------------------------------------------------------
+
+    @staticmethod
+    def _hop_time(p, chunk_bytes: float, compute_bytes: float,
+                  placement) -> float:
+        """One ring hop: link + serialization + per-hop compute.
+
+        A fitting placement streams the compute at its sustained rate; a
+        host fallback detours the chunk over PCIe and computes at the
+        endpoint (the per-stage MPI injection is charged separately).
+        """
+        t = p.fpga_link + p.port + chunk_bytes / p.bw
+        if compute_bytes:
+            if placement is not None and not placement.fits:
+                t += 2 * p.pcie + compute_bytes / p.host_bw
+            else:
+                t += compute_bytes / netmodel.accel_rate(p, placement)
+        return t
+
+    def _advance_ring(self, clock: Array, axis: str, steps: int,
+                      t_hop: float) -> None:
+        """Discrete-event update: each step, every rank's clock becomes
+        max(own, upstream neighbour) + hop time, per ring of the axis."""
+        for _ in range(max(steps, 0)):
+            snap = clock.copy()
+            for g in self._rings(axis):
+                prev = np.roll(g, 1)
+                clock[g] = np.maximum(snap[g], snap[prev]) + t_hop
+
+    def _advance_local(self, clock: Array, t: float) -> None:
+        clock += t
+
+    # -- public entry -------------------------------------------------------
+
+    def run(self, compiled, *inputs) -> tuple[Any, SimReport]:
+        """Execute ``compiled`` over per-rank inputs.
+
+        Every input is shaped ``grid + local_shape`` (leading dims in
+        topology-axis order).  Returns ``(outputs, report)`` with outputs
+        in the same convention.
+        """
+        src = compiled.source
+        if len(inputs) != src.num_inputs:
+            raise TypeError(f"program takes {src.num_inputs} inputs, "
+                            f"got {len(inputs)}")
+        env: dict[int, Array] = {}
+        for i, x in enumerate(inputs):
+            x = np.asarray(x)
+            if tuple(x.shape[:len(self.grid)]) != self.grid:
+                raise ValueError(
+                    f"input {i} must lead with the rank grid {self.grid}, "
+                    f"got shape {x.shape}")
+            env[i] = x.reshape((self.n_ranks,) + x.shape[len(self.grid):])
+
+        clock = np.zeros((self.n_ranks,), np.float64)
+        stages: list[SimStage] = []
+        for st in compiled.stages:
+            if st.ir is None:
+                raise ValueError(
+                    f"stage {st.kind!r} carries no StageIR — the program "
+                    "was compiled by a pipeline the simulator cannot "
+                    "interpret (use the default pipeline)")
+            t0 = float(clock.max())
+            args = [env[v] for v in st.in_vids]
+            outs = self._exec(st, args, clock)
+            for vid, o in zip(st.out_vids, outs):
+                env[vid] = np.asarray(o)
+            t_sim = float(clock.max()) - t0
+            stages.append(SimStage(
+                st.kind, st.axis, st.schedule, t_sim,
+                self._model_time(st, args), st.placement))
+
+        outs = tuple(env[v].reshape(self.grid + env[v].shape[1:])
+                     for v in src.outputs)
+        report = SimReport(stages, dict(self.sizes))
+        return (outs[0] if len(outs) == 1 else outs), report
+
+    # -- per-stage analytic prediction --------------------------------------
+
+    def _model_time(self, st, args: list) -> Optional[float]:
+        m = int(args[0].nbytes // self.n_ranks) if args else 0
+        if st.kind == "allreduce+alltoall" and len(args) == 2:
+            m = int((args[0].nbytes + args[1].nbytes) // self.n_ranks)
+        axis = st.axis
+        n = self.sizes.get(axis, 1)
+        p = self.nets.get(axis, netmodel.PAPER)
+        ratio = 1.0
+        for nd in st.ir.nodes:
+            if nd.op.codec is not IDENTITY:
+                ratio = float(nd.op.codec.wire_ratio)
+        try:
+            return netmodel.stage_time(st.kind, n, m, p,
+                                       placement=st.placement,
+                                       schedule=st.schedule,
+                                       codec_ratio=ratio)
+        except ValueError:
+            return None
+
+    # -- stage interpreters --------------------------------------------------
+
+    def _exec(self, st, args: list, clock: Array) -> tuple:
+        kind = st.kind.replace("+", "_")
+        return getattr(self, "_run_" + kind)(st, args, clock)
+
+    # .. local map ..........................................................
+
+    def _apply_map(self, fn: Callable, args: list) -> Array:
+        grid_args = [a.reshape(self.grid + a.shape[1:]) for a in args]
+        out = self._vmap_all(fn)(*[jnp.asarray(a) for a in grid_args])
+        out = np.asarray(out)
+        return out.reshape((self.n_ranks,) + out.shape[len(self.grid):])
+
+    def _run_map(self, st, args, clock):
+        fn = st.ir.nodes[0].op.fn
+        out = self._apply_map(fn, args)
+        p = netmodel.PAPER
+        pl = st.placement
+        if pl is not None and not pl.fits:
+            self._advance_local(clock, netmodel.host_fallback_time(
+                int(args[0].nbytes // self.n_ranks), p))
+        else:
+            self._advance_local(
+                clock, (args[0].nbytes // self.n_ranks)
+                / netmodel.accel_rate(p, pl))
+        return (out,)
+
+    # .. ring all-reduce family .............................................
+
+    def _ring_rs(self, blocks: list, combine: Callable) -> list:
+        """Ring reduce-scatter over one ring, exact hop/fold order of
+        :func:`repro.core.ring.ring_reduce_scatter`; ``blocks[i]`` is
+        rank i's [n*chunk, ...] payload, the result rank i's chunk i."""
+        n = len(blocks)
+        xs = [np.asarray(jnp.asarray(b)) for b in blocks]
+        chunks = [np.split(x, n, axis=0) for x in xs]
+        buf = [chunks[i][(i - 1) % n] for i in range(n)]
+        for s in range(n - 1):
+            incoming = [buf[(i - 1) % n] for i in range(n)]
+            buf = [np.asarray(combine(jnp.asarray(incoming[i]),
+                                      jnp.asarray(chunks[i][(i - 2 - s) % n])))
+                   for i in range(n)]
+        return buf
+
+    @staticmethod
+    def _ring_ag(blocks: list, hop_map: Optional[Callable] = None) -> list:
+        mapped = [np.asarray(hop_map(jnp.asarray(b))) if hop_map else b
+                  for b in blocks]
+        full = np.concatenate(mapped, axis=0)
+        return [full for _ in blocks]
+
+    def _allreduce_ring(self, blocks: list, monoid, codec,
+                        latency: bool) -> list:
+        n = len(blocks)
+        if n == 1:
+            return list(blocks)
+        if codec is not IDENTITY and codec.combine_encoded is not None:
+            return self._allreduce_encoded(blocks, codec)
+        combine = monoid.combine
+        if codec is not IDENTITY:            # cast-style codec
+            enc = [np.asarray(codec.encode(jnp.asarray(b))) for b in blocks]
+            red = self._allreduce_ring(enc, monoid, IDENTITY, latency)
+            return [np.asarray(codec.decode(jnp.asarray(r))
+                               .astype(blocks[i].dtype))
+                    for i, r in enumerate(red)]
+        if latency:
+            acc = [jnp.asarray(b) for b in blocks]
+            for s in range(1, n):
+                acc = [combine(acc[i], jnp.asarray(blocks[(i - s) % n]))
+                       for i in range(n)]
+            return [np.asarray(a) for a in acc]
+        shape = blocks[0].shape
+        flat = [b.reshape(-1) for b in blocks]
+        size = flat[0].shape[0]
+        pad = (-size) % n
+        if pad:
+            flat = [np.concatenate([f, np.zeros((pad,), f.dtype)])
+                    for f in flat]
+        red = self._ring_rs(flat, combine)
+        full = self._ring_ag(red)
+        return [f[:size].reshape(shape) for f in full]
+
+    def _allreduce_encoded(self, blocks: list, codec) -> list:
+        """Mirror of ``collectives._tree_all_reduce_encoded``: encode once,
+        chunked RS walk with the encoded-domain combine, gather, decode."""
+        n = len(blocks)
+        encs = [codec.encode(jnp.asarray(b)) for b in blocks]
+        leaves = [jax.tree_util.tree_flatten(e) for e in encs]
+        treedef = leaves[0][1]
+        nblocks = int(leaves[0][0][0].shape[0])
+        pad = (-nblocks) % n
+
+        def pad_leaf(leaf):
+            leaf = np.asarray(leaf)
+            if pad:
+                fill = np.zeros((pad,) + leaf.shape[1:], leaf.dtype)
+                leaf = np.concatenate([leaf, fill])
+            return leaf
+
+        chunks = [[np.split(pad_leaf(l), n, axis=0) for l in ls]
+                  for ls, _ in leaves]     # chunks[rank][leaf][chunk_idx]
+
+        def combine(a_leaves, b_leaves):
+            a = jax.tree_util.tree_unflatten(
+                treedef, [jnp.asarray(x) for x in a_leaves])
+            b = jax.tree_util.tree_unflatten(
+                treedef, [jnp.asarray(x) for x in b_leaves])
+            return [np.asarray(l) for l in
+                    jax.tree_util.tree_leaves(codec.combine_encoded(a, b))]
+
+        buf = [[chunks[i][l][(i - 1) % n]
+                for l in range(len(chunks[i]))] for i in range(n)]
+        for s in range(n - 1):
+            incoming = [buf[(i - 1) % n] for i in range(n)]
+            buf = [combine(incoming[i],
+                           [chunks[i][l][(i - 2 - s) % n]
+                            for l in range(len(chunks[i]))])
+                   for i in range(n)]
+        # all-gather each leaf: contributor rank r supplies chunk r
+        gathered = [np.concatenate([buf[r][l] for r in range(n)], axis=0)
+                    [:nblocks]
+                    for l in range(len(buf[0]))]
+        full = jax.tree_util.tree_unflatten(
+            treedef, [jnp.asarray(g) for g in gathered])
+        out = np.asarray(codec.decode(full))
+        return [out for _ in range(n)]
+
+    def _per_ring(self, axis: str, args: list,
+                  fn: Callable[[list], list]) -> list:
+        """Apply a ring interpreter along ``axis``; other grid coords are
+        independent switch ports."""
+        results: dict[int, Array] = {}
+        for g in self._rings(axis):
+            blocks = [args[0][r] for r in g]
+            for r, o in zip(g, fn(blocks)):
+                results[int(r)] = o
+        first = results[0]
+        out = np.empty((self.n_ranks,) + first.shape, first.dtype)
+        for r, o in results.items():
+            out[r] = o
+        return [out]
+
+    def _stage_net(self, st):
+        return self.nets.get(st.axis, netmodel.PAPER), \
+            self.sizes.get(st.axis, 1)
+
+    def _charge_ring(self, st, clock, per_rank_bytes: float, *,
+                     steps: Optional[int] = None, chunked: bool = True,
+                     compute: bool = True) -> None:
+        p, n = self._stage_net(st)
+        if n <= 1:
+            return
+        steps = steps if steps is not None else n - 1
+        chunk = per_rank_bytes / n if chunked else per_rank_bytes
+        pl = st.placement
+        if pl is not None and not pl.fits and compute:
+            # one software injection for the stage's host detour — only
+            # on the half that actually computes (an RS∘AG walk must not
+            # charge it twice)
+            self._advance_local(clock, p.mpi_overhead)
+        t_hop = self._hop_time(p, chunk, chunk if compute else 0.0, pl)
+        self._advance_ring(clock, st.axis, steps, t_hop)
+
+    # .. stage handlers ......................................................
+
+    def _wire_ratio(self, st) -> float:
+        for nd in st.ir.nodes:
+            if nd.op.codec is not IDENTITY:
+                return float(nd.op.codec.wire_ratio)
+        return 1.0
+
+    def _run_allreduce(self, st, args, clock):
+        op = next(nd.op for nd in st.ir.nodes
+                  if nd.op.kind in (OpKind.REDUCE, OpKind.REDUCE_SCATTER))
+        latency = st.schedule == "latency"
+        out = self._per_ring(
+            st.axis, args,
+            lambda blocks: self._allreduce_ring(blocks, op.monoid,
+                                                op.codec, latency))
+        m = args[0].nbytes / self.n_ranks * self._wire_ratio(st)
+        if latency:
+            self._charge_ring(st, clock, m, chunked=False)
+        else:
+            self._charge_ring(st, clock, m)                  # RS half
+            self._charge_ring(st, clock, m, compute=False)   # AG half
+        return tuple(out)
+
+    def _run_map_allreduce(self, st, args, clock):
+        mp = st.ir.nodes[0].op
+        mapped = self._apply_map(mp.fn, args)
+        return self._run_allreduce(st, [mapped], clock)
+
+    def _run_reduce_scatter(self, st, args, clock):
+        op = next(nd.op for nd in st.ir.nodes
+                  if nd.op.kind == OpKind.REDUCE_SCATTER)
+
+        def rs(blocks):
+            if len(blocks) == 1:
+                return list(blocks)
+            if op.codec is not IDENTITY:
+                enc = [np.asarray(op.codec.encode(jnp.asarray(b)))
+                       for b in blocks]
+                red = self._ring_rs(enc, op.monoid.combine)
+                return [np.asarray(op.codec.decode(jnp.asarray(r))
+                                   .astype(blocks[i].dtype))
+                        for i, r in enumerate(red)]
+            return self._ring_rs(blocks, op.monoid.combine)
+
+        out = self._per_ring(st.axis, args, rs)
+        self._charge_ring(st, clock,
+                          args[0].nbytes / self.n_ranks
+                          * self._wire_ratio(st))
+        return tuple(out)
+
+    def _run_map_reduce_scatter(self, st, args, clock):
+        mp = st.ir.nodes[0].op
+        mapped = self._apply_map(mp.fn, args)
+        return self._run_reduce_scatter(st, [mapped], clock)
+
+    def _run_allgather(self, st, args, clock):
+        out = self._per_ring(st.axis, args, self._ring_ag)
+        self._charge_ring(st, clock, args[0].nbytes / self.n_ranks
+                          * (self.sizes.get(st.axis, 1)),
+                          compute=False)
+        return tuple(out)
+
+    def _run_allgather_map(self, st, args, clock):
+        mp = st.ir.nodes[1].op
+        out = self._per_ring(
+            st.axis, args, lambda blocks: self._ring_ag(blocks, mp.fn))
+        self._charge_ring(st, clock, args[0].nbytes / self.n_ranks
+                          * (self.sizes.get(st.axis, 1)))
+        return tuple(out)
+
+    def _run_alltoall(self, st, args, clock):
+        def a2a(blocks):
+            n = len(blocks)
+            chunks = [np.split(b, n, axis=0) for b in blocks]
+            return [np.concatenate([chunks[j][r] for j in range(n)], axis=0)
+                    for r in range(n)]
+
+        out = self._per_ring(st.axis, args, a2a)
+        self._charge_ring(st, clock, args[0].nbytes / self.n_ranks,
+                          compute=False)
+        return tuple(out)
+
+    def _run_scan(self, st, args, clock):
+        op = next(nd.op for nd in st.ir.nodes if nd.op.kind == OpKind.SCAN)
+
+        def scan(blocks):
+            acc = None
+            incl = []
+            for b in blocks:
+                acc = b if acc is None \
+                    else np.asarray(op.monoid.combine(jnp.asarray(acc),
+                                                      jnp.asarray(b)))
+                incl.append(acc)
+            if not op.exclusive:
+                return incl
+            ident = np.asarray(op.monoid.identity(
+                jax.ShapeDtypeStruct(blocks[0].shape, blocks[0].dtype)))
+            return [ident] + incl[:-1]
+
+        out = self._per_ring(st.axis, args, scan)
+        p, n = self._stage_net(st)
+        rounds = int(math.ceil(math.log2(max(n, 2)))) if n > 1 else 0
+        m = args[0].nbytes / self.n_ranks
+        self._advance_ring(clock, st.axis, rounds,
+                           self._hop_time(p, m, m, st.placement))
+        return tuple(out)
+
+    def _run_scan_allgather(self, st, args, clock):
+        scan_op = st.ir.nodes[1].op
+
+        def fused(blocks):
+            if scan_op.monoid.name == "add" and not scan_op.exclusive:
+                # allgather_op_allgather: cumsum of the rank-major concat
+                full = np.concatenate(blocks, axis=0)
+                out = np.cumsum(full, axis=0, dtype=full.dtype)
+                return [out for _ in blocks]
+            # scan_then_allgather: blockwise rank-prefix scan (exclusive
+            # shifts in the monoid identity at rank 0), then gather
+            acc = None
+            scanned = []
+            for b in blocks:
+                acc = b if acc is None \
+                    else np.asarray(scan_op.monoid.combine(jnp.asarray(acc),
+                                                           jnp.asarray(b)))
+                scanned.append(acc)
+            if scan_op.exclusive:
+                ident = np.asarray(scan_op.monoid.identity(
+                    jax.ShapeDtypeStruct(blocks[0].shape,
+                                         blocks[0].dtype)))
+                scanned = [ident] + scanned[:-1]
+            full = np.concatenate(scanned, axis=0)
+            return [full for _ in blocks]
+
+        out = self._per_ring(st.axis, args, fused)
+        p, n = self._stage_net(st)
+        m = args[0].nbytes / self.n_ranks
+        rounds = int(math.ceil(math.log2(max(n, 2)))) if n > 1 else 0
+        self._advance_ring(clock, st.axis, rounds,
+                           self._hop_time(p, m, m, st.placement))
+        self._charge_ring(st, clock, m * n, compute=False)   # gather round
+        return tuple(out)
+
+    def _run_bcast(self, st, args, clock):
+        op = next(nd.op for nd in st.ir.nodes if nd.op.kind == OpKind.BCAST)
+
+        def bc(blocks):
+            return [blocks[op.root] for _ in blocks]
+
+        out = self._per_ring(st.axis, args, bc)
+        p, n = self._stage_net(st)
+        rounds = int(math.ceil(math.log2(max(n, 2)))) if n > 1 else 0
+        m = args[0].nbytes / self.n_ranks
+        self._advance_ring(clock, st.axis, rounds,
+                           self._hop_time(p, m, 0.0, st.placement))
+        return tuple(out)
+
+    def _run_allreduce_alltoall(self, st, args, clock):
+        hist_arg, keys_arg = args
+
+        def hist_ring(blocks):
+            n = len(blocks)
+            acc = [jnp.asarray(b) for b in blocks]
+            for s in range(1, n):
+                acc = [acc[i] + jnp.asarray(blocks[(i - s) % n])
+                       for i in range(n)]
+            return [np.asarray(a) for a in acc]
+
+        hist = self._per_ring(st.axis, [hist_arg], hist_ring)[0]
+
+        def a2a(blocks):
+            n = len(blocks)
+            chunks = [np.split(b, n, axis=0) for b in blocks]
+            return [np.concatenate([chunks[j][r] for j in range(n)], axis=0)
+                    for r in range(n)]
+
+        keys = self._per_ring(st.axis, [keys_arg], a2a)[0]
+        p, n = self._stage_net(st)
+        m_keys = keys_arg.nbytes / self.n_ranks
+        m_hist = hist_arg.nbytes / self.n_ranks
+        # one shared traversal: key chunk + full histogram per hop
+        self._advance_ring(
+            clock, st.axis, max(n - 1, 0),
+            self._hop_time(p, m_keys / max(n, 1) + m_hist, m_hist,
+                           st.placement))
+        return hist, keys
+
+    # .. look-aside (error feedback) ........................................
+
+    def _run_ef_allreduce(self, st, args, clock):
+        ef = st.ir.nodes[0].op.ef
+        both = len(st.out_vids) == 2
+        total, delivered = self._ef(st, args[0], ef)
+        m = args[0].nbytes / self.n_ranks
+        p, n = self._stage_net(st)
+        pl = st.placement
+        if pl is not None and not pl.fits:
+            self._advance_local(clock, netmodel.host_fallback_time(m, p))
+            self._charge_ring(st, clock, m)
+        else:
+            # compress locally, tiny scale exchange, half-width RS∘AG walk
+            self._advance_local(clock, m / netmodel.accel_rate(p, pl))
+            self._advance_ring(clock, st.axis, max(n - 1, 0),
+                               self._hop_time(p, max(m / 256, 4), 0.0, pl))
+            self._charge_ring(st, clock, m * 0.5)
+            self._charge_ring(st, clock, m * 0.5, compute=False)
+        return (total, delivered) if both else (total,)
+
+    def _run_delivered(self, st, args, clock):
+        ef = st.ir.nodes[0].op.ef
+        _, delivered = self._ef(st, args[0], ef)
+        p, _ = self._stage_net(st)
+        m = args[0].nbytes / self.n_ranks
+        if st.placement is not None and not st.placement.fits:
+            self._advance_local(clock, netmodel.host_fallback_time(m, p))
+        else:
+            self._advance_local(clock,
+                                m / netmodel.accel_rate(p, st.placement))
+        return (delivered,)
+
+    def _ef(self, st, arg: Array, ef) -> tuple[Array, Array]:
+        """Mirror of :func:`repro.core.lookaside.compressed_all_reduce`."""
+        dtype = arg.dtype
+
+        def per_ring(blocks):
+            tf = [b.astype(np.float32) for b in blocks]
+            if ef.compressor == "int8":
+                tot, dlv = self._ef_int8(tf)
+            elif ef.compressor == "int8_hopquant":
+                codec = int8_codec()
+                tot = self._allreduce_encoded(tf, codec)
+                dlv = [np.asarray(codec.decode(codec.encode(jnp.asarray(t))))
+                       for t in tf]
+            elif ef.compressor == "topk":
+                tot, dlv = self._ef_topk(tf, ef.topk_ratio)
+            else:
+                raise ValueError(f"unknown compressor {ef.compressor!r}")
+            return [(t.astype(dtype), d) for t, d in zip(tot, dlv)]
+
+        results: dict[int, tuple] = {}
+        for g in self._rings(st.axis):
+            blocks = [arg[r] for r in g]
+            for r, o in zip(g, per_ring(blocks)):
+                results[int(r)] = o
+        tot = np.empty((self.n_ranks,) + results[0][0].shape,
+                       results[0][0].dtype)
+        dlv = np.empty((self.n_ranks,) + results[0][1].shape,
+                       results[0][1].dtype)
+        for r, (t, d) in results.items():
+            tot[r], dlv[r] = t, d
+        return tot, dlv
+
+    @staticmethod
+    def _ef_int8(tf: list) -> tuple[list, list]:
+        """Shared-scale exact-integer accumulation (lookaside.QBLOCK)."""
+        block = 256
+        shape = tf[0].shape
+        size = tf[0].size
+        pad = (-size) % block
+
+        def blocks_of(x):
+            flat = x.reshape(-1)
+            if pad:
+                flat = np.concatenate([flat,
+                                       np.zeros((pad,), np.float32)])
+            return flat.reshape(-1, block)
+
+        bl = [blocks_of(x) for x in tf]
+        absmax = np.max(np.stack([np.max(np.abs(b), axis=1) for b in bl]),
+                        axis=0)
+        scale = np.where(absmax > 0, absmax / 127.0, 1.0).astype(np.float32)
+        qs = [np.clip(np.round(b / scale[:, None]), -127, 127)
+              .astype(np.int16) for b in bl]
+        qsum = np.sum(np.stack(qs), axis=0, dtype=np.int32).astype(np.int16)
+        total = (qsum.astype(np.float32) * scale[:, None]) \
+            .reshape(-1)[:size].reshape(shape)
+        delivered = [(q.astype(np.float32) * scale[:, None])
+                     .reshape(-1)[:size].reshape(shape) for q in qs]
+        return [total for _ in tf], delivered
+
+    @staticmethod
+    def _ef_topk(tf: list, ratio: float) -> tuple[list, list]:
+        size = tf[0].size
+        k = max(1, int(size * ratio))
+        dense = np.zeros((size,), np.float32)
+        delivered = []
+        for x in tf:
+            flat = x.reshape(-1)
+            idx = np.argsort(np.abs(flat))[::-1][:k]
+            own = np.zeros((size,), np.float32)
+            np.add.at(own, idx, flat[idx])
+            np.add.at(dense, idx, flat[idx])
+            delivered.append(own.reshape(x.shape))
+        total = dense.reshape(tf[0].shape)
+        return [total for _ in tf], delivered

@@ -52,6 +52,9 @@ class CollectiveConfig:
     compressor: str = "int8"
     topk_ratio: float = 0.01
     latency_optimal_below: int = 16384  # bytes; ring-vs-latency crossover
+    # switch CGRA the PlaceCGRA pass maps stage bodies onto; None = the
+    # paper's Table II device (repro.cgra.device.PAPER_CGRA)
+    cgra_device: Optional[Any] = None
 
     def __post_init__(self):
         if self.backend not in BACKENDS:

@@ -25,7 +25,13 @@ generation → scheduling) as five composable passes:
      latency_optimal_below`` plus the analytic cost model in
      :mod:`repro.core.netmodel` — evaluated against the link tier of the
      axis the stage actually traverses (fast ICI vs thin DCI).
-  5. :class:`Emit`       — lower every stage to a rank-local callable; the
+  5. :class:`PlaceCGRA`  — map every stage's compute body (fused MAPs,
+     monoid/codec combines, look-aside compressors) onto the switch CGRA
+     grid (:mod:`repro.cgra`): trace to a jaxpr, lower to an op-graph,
+     list-schedule + place.  Each stage gets a ``Placement`` (PEs, depth,
+     II → sustained rate) or an explicit host-fallback the cost model
+     charges as a PCIe + MPI detour.
+  6. :class:`Emit`       — lower every stage to a rank-local callable; the
      emitted :class:`CompiledProgram` executes them over a value
      environment (multi-input / multi-output programs are native), each
      stage over its own axis.
@@ -41,6 +47,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import warnings
 from typing import Any, Callable, Optional, Sequence, Union
 
 import jax
@@ -196,11 +203,20 @@ class StageIR:
     bytes_in: Optional[int] = None
     desc: str = ""
     axis: str = ""                 # mesh axis the stage communicates over
+    placement: Optional[Any] = None  # CGRA Placement | HostFallback
 
 
 @dataclasses.dataclass(frozen=True)
 class Stage:
-    """One emitted in-network stage: ``run(args, axis_name) -> outputs``."""
+    """One emitted in-network stage: ``run(args, axis_name) -> outputs``.
+
+    ``placement`` is the CGRA mapping the PlaceCGRA pass attached (a
+    :class:`repro.cgra.device.Placement`, or an explicit
+    :class:`~repro.cgra.device.HostFallback` when the stage's compute
+    body does not fit the switch grid); ``ir`` is the pre-emission
+    :class:`StageIR` the stage was lowered from — the dataplane
+    simulator interprets it instead of the opaque ``run`` closure.
+    """
 
     kind: str
     run: Callable[[tuple, str], tuple]
@@ -209,6 +225,8 @@ class Stage:
     out_vids: tuple[int, ...] = ()
     schedule: str = ""
     axis: str = ""
+    placement: Optional[Any] = None
+    ir: Optional[StageIR] = None
 
     def __repr__(self):  # pragma: no cover
         return f"Stage({self.kind}@{self.axis})" if self.axis \
@@ -235,6 +253,39 @@ class CompiledProgram:
 
     def stage_axes(self) -> list[str]:
         return [s.axis for s in self.stages]
+
+    def stage_placements(self) -> list:
+        return [s.placement for s in self.stages]
+
+    def explain(self) -> str:
+        """Readable per-stage table: what was fused, over which axis, on
+        which ring schedule, with which wire codec, and where the compute
+        body landed (CGRA placement or explicit host fallback)."""
+        rows = [("#", "kind", "axis", "schedule", "codec", "placement")]
+        for i, st in enumerate(self.stages):
+            codec = "-"
+            if st.ir is not None:
+                for nd in st.ir.nodes:
+                    if nd.op.kind in COLLECTIVE_KINDS \
+                            and nd.op.codec is not IDENTITY:
+                        codec = nd.op.codec.name
+                    elif nd.op.ef is not None:
+                        codec = f"ef[{nd.op.ef.compressor}]"
+            pl = st.placement.describe() if st.placement is not None \
+                else "-"
+            rows.append((str(i), st.kind, st.axis or "-",
+                         st.schedule or "-", codec, pl))
+        widths = [max(len(r[c]) for r in rows) for c in range(5)]
+        lines = [f"program {self.source.name!r} "
+                 f"({self.source.num_inputs} in, "
+                 f"{len(self.source.outputs)} out, "
+                 f"{len(self.stages)} stages)"]
+        for j, r in enumerate(rows):
+            lines.append("  " + "  ".join(
+                r[c].ljust(widths[c]) for c in range(5)) + "  " + r[5])
+            if j == 0:
+                lines.append("  " + "-" * (sum(widths) + 8 + len(r[5])))
+        return "\n".join(lines)
 
     def axes(self) -> list[str]:
         """Distinct communication axes, in first-use order."""
@@ -300,7 +351,11 @@ class Legalize:
         the payload hits the wire, so the declaration still applies to the
         collective downstream — the old chain compiler's pending-codec
         behaviour).  A WIRE reaching a non-codec-capable op or a program
-        output is dropped — the wire format of those links is fixed.
+        output is dropped — the wire format of those links is fixed — and
+        the drop is *announced* with a ``UserWarning`` naming the node, so
+        a user who declared compression on a link that cannot apply it
+        learns the codec was ignored instead of silently paying f32 wire
+        bytes they thought they'd saved.
         """
         if not any(nd.op.kind == OpKind.WIRE for nd in dag.nodes):
             return dag
@@ -312,7 +367,15 @@ class Legalize:
                 vid = alias[vid]
             return vid
 
+        def warn_drop(codec, where: str) -> None:
+            warnings.warn(
+                f"[{dag.name}] wire codec {codec.name!r} dropped at "
+                f"{where} — that link's wire format is fixed, the "
+                "declared compression will NOT be applied",
+                UserWarning, stacklevel=3)
+
         nodes: list[DagNode] = []
+        applied: set[int] = set()        # carried vids whose codec sank
         for nd in dag.nodes:
             if nd.op.kind == OpKind.WIRE:
                 alias[nd.out] = nd.inputs[0]
@@ -327,9 +390,22 @@ class Legalize:
                 # like on any fixed-function link
                 if op.kind in _CODEC_SINKS and op.ef is None:
                     op = dataclasses.replace(op, codec=codecs[-1])
+                    applied.update(v for v in nd.inputs if v in carried)
                 elif op.kind == OpKind.MAP and len(nd.inputs) == 1:
                     carried[nd.out] = codecs[-1]
+                elif op.kind in _CODEC_SINKS:
+                    warn_drop(codecs[-1],
+                              f"error-feedback node {op.label()!r} (its "
+                              "wire format is the compressor's)")
+                else:
+                    warn_drop(codecs[-1],
+                              f"non-codec-capable node {op.label()!r}")
             nodes.append(DagNode(op, ins, nd.out))
+        for v in dag.outputs:
+            # a pending codec that reached an output without ever sinking
+            # (directly, or carried through maps) was silently useless
+            if v in carried and v not in applied:
+                warn_drop(carried[v], "a program output")
         outputs = tuple(resolve(v) for v in dag.outputs)
         return DagProgram(dag.num_inputs, tuple(nodes), outputs, dag.name)
 
@@ -923,7 +999,33 @@ class SelectSchedule:
 
 
 # ---------------------------------------------------------------------------
-# Pass 5: Emit
+# Pass 5: PlaceCGRA — map stage compute bodies onto the switch grid
+# ---------------------------------------------------------------------------
+
+class PlaceCGRA:
+    """Attach a CGRA placement (or explicit host fallback) to every stage.
+
+    Runs after SelectSchedule: the ring choice is made, the payloads are
+    known, and this pass decides whether the in-switch rate the model
+    assumed is *earned* — re-costing the stage with the placement-derived
+    throughput (or the PCIe + MPI host detour) in the stage desc.  The
+    heavy lifting lives in :mod:`repro.cgra.mapper`; the import is
+    deferred so neither package needs the other at import time.
+    """
+
+    name = "place_cgra"
+
+    def __init__(self, device=None):
+        self.device = device
+
+    def run(self, groups: list, ctx: "CompileContext") -> list:
+        from repro.cgra import mapper
+
+        return mapper.place_groups(groups, ctx, self.device)
+
+
+# ---------------------------------------------------------------------------
+# Pass 6: Emit
 # ---------------------------------------------------------------------------
 
 class Emit:
@@ -953,7 +1055,7 @@ class Emit:
                 # axis (pure-map stages legitimately stay axis-less)
                 axis = ctx.axis_name
         return Stage(g.kind, run, g.desc, g.in_vids, g.out_vids, g.schedule,
-                     axis)
+                     axis, g.placement, g)
 
     # -- fused stages --------------------------------------------------------
 
@@ -1100,7 +1202,7 @@ class Emit:
 # ---------------------------------------------------------------------------
 
 DEFAULT_PIPELINE = (Legalize(), LowerTopology(), FuseHops(),
-                    SelectSchedule(), Emit())
+                    SelectSchedule(), PlaceCGRA(), Emit())
 
 
 def run_pipeline(dag: DagProgram, ctx: CompileContext,

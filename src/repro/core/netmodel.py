@@ -20,6 +20,9 @@ from __future__ import annotations
 
 import dataclasses
 import math
+from typing import Optional
+
+from repro.cgra.device import CGRADevice, PAPER_CGRA, placement_rate
 
 
 @dataclasses.dataclass(frozen=True)
@@ -31,11 +34,44 @@ class NetParams:
     port: float = 52e-9
     host_bw: float = 6e9 # endpoint compute stream (B/s)
     py_overhead: float = 15e-6        # MPI4py per-collective python cost
-    accel_clock: float = 250e6        # ACiS kernel (Vitis, 250 MHz)
-    accel_width: int = 64             # bytes/cycle through the CGRA pipe
+    # The in-switch accelerator is a *device*, not a rate constant: the
+    # old accel_clock/accel_width pair is now the device's line rate at
+    # II = 1, and a mapped stage's placement (repro.cgra.mapper) derives
+    # the rate it actually sustains.
+    device: CGRADevice = PAPER_CGRA
+
+    @property
+    def accel_clock(self) -> float:   # back-compat spelling
+        return self.device.clock_hz
+
+    @property
+    def accel_width(self) -> int:     # back-compat spelling
+        return self.device.lane_bytes
 
 
 PAPER = NetParams()
+
+
+def accel_rate(p: NetParams, placement=None) -> float:
+    """In-switch compute throughput (bytes/s) for a stage.
+
+    With a :class:`~repro.cgra.device.Placement` this is what the mapped
+    op-graph sustains (``line_rate / II``); without one it is the
+    device's line rate — the bare Type-1 fixed-function combine, the only
+    compute allowed to be costed without a placement.  A host-fallback
+    placement raises (cost the detour via :func:`host_fallback_time`).
+    """
+    return placement_rate(placement, p.device)
+
+
+def host_fallback_time(m: int, p: NetParams = PAPER) -> float:
+    """Cost of bouncing a stage's compute to the host NIC-side CPU.
+
+    The payload detours over PCIe (out and back), pays one software
+    message injection, and streams through the endpoint at ``host_bw`` —
+    what a stage costs when its body does not fit the switch CGRA.
+    """
+    return 2 * p.pcie + p.mpi_overhead + m / p.host_bw
 
 # ---------------------------------------------------------------------------
 # Two-tier link parameters (multi-pod topologies).
@@ -116,10 +152,12 @@ def acis_allgather(n: int, m: int, p: NetParams = PAPER) -> float:
         + (n - 1) * (p.fpga_link + p.port)
 
 
-def acis_allreduce(n: int, m: int, p: NetParams = PAPER) -> float:
+def acis_allreduce(n: int, m: int, p: NetParams = PAPER, *,
+                   placement=None) -> float:
     """In-network reduction: messages merge as they travel — each link
-    carries each byte once; combine runs at line rate in the CGRA."""
-    stream = m / p.bw + m / (p.accel_clock * p.accel_width)
+    carries each byte once; combine runs at the placed rate in the CGRA
+    (line rate when the combine is the bare Type-1 adder)."""
+    stream = m / p.bw + m / accel_rate(p, placement)
     return _acis_base(n, p) + stream + math.ceil(
         math.log2(max(n, 2))) * (p.fpga_link + p.port)
 
@@ -150,15 +188,15 @@ def mpi4py_allgather_op_allgather(n: int, m: int,
     return 2 * ag + op
 
 
-def acis_allgather_op_allgather(n: int, m: int,
-                                p: NetParams = PAPER) -> float:
+def acis_allgather_op_allgather(n: int, m: int, p: NetParams = PAPER, *,
+                                placement=None) -> float:
     """Fused: one traversal; the op streams through the CGRA in-flight.
     The paper's runtime is itself Python-based (§V: "the runtime and MPI
     support are based on Python"), so the fixed software cost appears once
     on this path too."""
     return _acis_base(n, p) + p.py_overhead + 2 * p.mpi_overhead \
         + (n - 1) * m / p.bw \
-        + (n * m) / (p.accel_clock * p.accel_width) \
+        + (n * m) / accel_rate(p, placement) \
         + (n - 1) * (p.fpga_link + p.port)
 
 
@@ -172,22 +210,25 @@ def mpi_allreduce_then_alltoall(n: int, m_hist: int, m_keys: int,
 # ---------------------------------------------------------------------------
 
 def ring_allreduce_time(n: int, m: int, p: NetParams = PAPER, *,
-                        latency_optimal: bool = False) -> float:
+                        latency_optimal: bool = False,
+                        placement=None) -> float:
     """Predicted wall time of one ring all-reduce of ``m`` bytes per rank.
 
     ``latency_optimal=True``: n-1 hops of full-size messages (one combine
     per hop) — few sequential hops, each carrying the whole payload.
     ``latency_optimal=False``: RS∘AG — 2(n-1) hops of m/n bytes each
-    (bandwidth-optimal; right for large payloads).
+    (bandwidth-optimal; right for large payloads).  ``placement`` is the
+    stage's CGRA placement; the per-hop combine runs at its sustained
+    rate (line rate for the bare Type-1 adder).
     """
     if n <= 1:
         return 0.0
     hop = p.fpga_link + p.port
+    rate = accel_rate(p, placement)
     if latency_optimal:
-        return (n - 1) * (m / p.bw + hop) \
-            + (n - 1) * m / (p.accel_clock * p.accel_width)
+        return (n - 1) * (m / p.bw + hop) + (n - 1) * m / rate
     return 2 * (n - 1) * ((m / n) / p.bw + hop) \
-        + (n - 1) * (m / n) / (p.accel_clock * p.accel_width)
+        + (n - 1) * (m / n) / rate
 
 
 def ring_crossover_bytes(n: int, p: NetParams = PAPER) -> float:
@@ -207,13 +248,14 @@ def ring_crossover_bytes(n: int, p: NetParams = PAPER) -> float:
     return hop * p.bw / (1.0 - 2.0 / n)
 
 
-def ring_reduce_scatter_time(n: int, m: int, p: NetParams = PAPER) -> float:
+def ring_reduce_scatter_time(n: int, m: int, p: NetParams = PAPER, *,
+                             placement=None) -> float:
     """Chunked ring RS: n-1 hops of m/n bytes, one combine per hop."""
     if n <= 1:
         return 0.0
     hop = p.fpga_link + p.port
     return (n - 1) * ((m / n) / p.bw + hop) \
-        + (n - 1) * (m / n) / (p.accel_clock * p.accel_width)
+        + (n - 1) * (m / n) / accel_rate(p, placement)
 
 
 def ring_all_gather_time(n: int, m: int, p: NetParams = PAPER) -> float:
@@ -247,10 +289,110 @@ FUSED_EXPOSED_FRACTION = 0.1
 
 
 def acis_fused_allreduce_alltoall(n: int, m_hist: int, m_keys: int,
-                                  p: NetParams = PAPER) -> float:
+                                  p: NetParams = PAPER, *,
+                                  placement=None) -> float:
     """Shared schedule: the histogram hops ride the key exchange; the
     reduction is free behind the (larger) key traffic."""
     keys = acis_alltoall(n, m_keys, p)
-    hist_exposed = max(0.0, acis_allreduce(n, m_hist, p) - keys)
+    hist_exposed = max(0.0, acis_allreduce(n, m_hist, p,
+                                           placement=placement) - keys)
     return keys + FUSED_EXPOSED_FRACTION * hist_exposed \
-        + m_hist / (p.accel_clock * p.accel_width)
+        + m_hist / accel_rate(p, placement)
+
+
+# ---------------------------------------------------------------------------
+# per-stage analytic model (PlaceCGRA / dataplane-simulator comparison)
+# ---------------------------------------------------------------------------
+
+# stage kinds whose pipe runs a fused MAP body: costing them needs a real
+# placement — there is deliberately no constant-rate default for MAP work.
+_MAP_KINDS = {"map", "map+allreduce", "map+reduce_scatter",
+              "allgather+map"}
+
+
+def stage_time(kind: str, n: int, m: int, p: NetParams = PAPER, *,
+               placement=None, schedule: str = "",
+               codec_ratio: float = 1.0) -> float:
+    """Predicted wall time of one emitted stage.
+
+    ``kind`` is a :class:`~repro.core.compiler.Stage` kind, ``n`` the
+    size of the axis it traverses, ``m`` the per-rank payload bytes
+    *before* wire coding (``codec_ratio`` scales what actually travels).
+
+    ``placement`` is the stage's CGRA mapping.  Stages that stream a
+    fused MAP body **require** one — the old flat ``accel_clock *
+    accel_width`` constant is gone, and asking for a MAP-stage time
+    without saying where the map runs raises instead of silently
+    assuming line rate.  A :class:`~repro.cgra.device.HostFallback`
+    placement is costed as the PCIe + MPI host detour.
+    """
+    if kind in _MAP_KINDS and placement is None:
+        raise ValueError(
+            f"stage kind {kind!r} streams a fused map: pass its CGRA "
+            "placement (or HostFallback) — there is no constant-rate "
+            "default for MAP compute")
+    fallback = placement is not None and not getattr(placement, "fits",
+                                                     True)
+    wire = m * codec_ratio
+    hop = p.fpga_link + p.port
+    lat = schedule == "latency"
+    pl = None if fallback else placement
+
+    if kind == "map":
+        return host_fallback_time(m, p) if fallback \
+            else m / accel_rate(p, pl)
+    if kind in ("allreduce", "map+allreduce"):
+        if fallback:
+            return host_fallback_time(m, p) + mpi_allreduce(n, wire, p)
+        return ring_allreduce_time(n, wire, p, latency_optimal=lat,
+                                   placement=pl)
+    if kind in ("reduce_scatter", "map+reduce_scatter"):
+        if fallback:
+            return host_fallback_time(m, p) \
+                + ring_reduce_scatter_time(n, wire, p)
+        return ring_reduce_scatter_time(n, wire, p, placement=pl)
+    if kind == "allgather+map":
+        # m is the per-rank *input* shard; each of the n-1 hops forwards
+        # one full shard (the gathered payload is n*m), and the hop map
+        # runs once per forwarded shard
+        gather = ring_all_gather_time(n, n * m, p)
+        if fallback:
+            return host_fallback_time(m, p) + gather
+        return gather + (n - 1) * m / accel_rate(p, pl)
+    if kind == "allgather":
+        return ring_all_gather_time(n, n * m, p)
+    if kind == "alltoall":
+        return (n - 1) * ((m / n) / p.bw + hop) if n > 1 else 0.0
+    if kind == "bcast":
+        return math.ceil(math.log2(max(n, 2))) * (m / p.bw + hop)
+    if kind == "scan":
+        rounds = math.ceil(math.log2(max(n, 2)))
+        if fallback:
+            return host_fallback_time(m, p) + rounds * (m / p.bw + hop)
+        return rounds * (m / p.bw + hop + m / accel_rate(p, pl))
+    if kind == "scan+allgather":
+        t = stage_time("scan", n, m, p, placement=placement)
+        return t + ring_all_gather_time(n, n * m, p)
+    if kind == "delivered":
+        # purely local: what the lossy wire delivered of this rank's own
+        # contribution — no collective happens
+        return host_fallback_time(m, p) if fallback \
+            else m / accel_rate(p, pl)
+    if kind == "ef_allreduce":
+        # shared-scale path: a tiny latency-ring scale exchange plus the
+        # quantized (≈ half-width) payload on the RS∘AG walk
+        if fallback:
+            return host_fallback_time(m, p) + mpi_allreduce(n, m, p)
+        compress = m / accel_rate(p, pl)
+        scale = ring_allreduce_time(n, max(m // 256, 4), p,
+                                    latency_optimal=True)
+        return compress + scale + ring_allreduce_time(n, m // 2, p)
+    if kind == "allreduce+alltoall":
+        # per-rank payloads of the pair are summed into m by the caller;
+        # model the traversal as the fused shared schedule
+        if fallback:
+            return host_fallback_time(m, p) \
+                + mpi_allreduce_then_alltoall(n, m // 2, m // 2, p)
+        return acis_fused_allreduce_alltoall(n, m // 2, m // 2, p,
+                                             placement=pl)
+    raise ValueError(f"unknown stage kind {kind!r}")

@@ -9,9 +9,11 @@ explicit inputs and outputs over numbered values, multiple program inputs
 and multiple program outputs.  Users normally do not build it by hand —
 they write a plain Python function over symbolic values and call
 :func:`repro.core.tracing.trace`; the compiler (core/compiler.py) runs a
-pass pipeline (Legalize → FuseHops → SelectSchedule → Emit) over the DAG
-and emits a single JAX callable executing under one `shard_map` — the
-"CGRA binary" is the jitted HLO.  This is the mechanism by which arbitrary
+pass pipeline (Legalize → LowerTopology → FuseHops → SelectSchedule →
+PlaceCGRA → Emit) over the DAG and emits a single JAX callable executing
+under one `shard_map` — the "CGRA binary" is the jitted HLO, and every
+stage carries the CGRA placement (or explicit host fallback) the
+:mod:`repro.cgra` mapper assigned its compute body.  This is the mechanism by which arbitrary
 *graphs* of collectives and maps become one in-network program (Type 4)
 rather than a sequence of endpoint round-trips.
 
@@ -121,8 +123,12 @@ class Node:
 
 # -- user-facing constructors ------------------------------------------------
 
-def Map(fn: Callable, name: str = "") -> Node:
-    return Node(OpKind.MAP, fn=fn, name=name)
+def Map(fn: Callable, name: str = "", fusable: bool = True) -> Node:
+    """``fusable=False`` marks a map whose body is *not* chunk-local
+    (e.g. a cumsum or other cross-position transform): the compiler will
+    never hop-fuse it into a collective's chunk loop, and the CGRA
+    mapper still places it as a whole-payload pipeline stage."""
+    return Node(OpKind.MAP, fn=fn, name=name, fusable=fusable)
 
 
 def Reduce(monoid: Monoid = ADD, axis: Axis = None) -> Node:

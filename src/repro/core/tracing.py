@@ -119,15 +119,18 @@ def trace(fn: Callable, *, name: Optional[str] = None,
 
 # -- traced ops (the user-facing program vocabulary) -------------------------
 
-def map(fn: Callable, *xs: Value, name: str = "") -> Value:  # noqa: A001
+def map(fn: Callable, *xs: Value, name: str = "",  # noqa: A001
+        fusable: bool = True) -> Value:
     """Apply ``fn`` elementwise/locally; fusable into adjacent hops.
 
     ``fn`` must be *chunk-local* (elementwise or otherwise independent of
-    how the tensor is split across ranks): when the compiler fuses it into
-    a collective's hop loop it runs once per in-flight chunk, so a
-    function that mixes values across positions (e.g. ``cumsum``) would
-    compute something different fused vs unfused.  That is the IR's MAP
-    contract, not a compiler quirk — use ``scan`` for cross-position ops.
+    how the tensor is split across ranks) unless ``fusable=False``: when
+    the compiler fuses it into a collective's hop loop it runs once per
+    in-flight chunk, so a function that mixes values across positions
+    (e.g. ``cumsum``) would compute something different fused vs unfused.
+    That is the IR's MAP contract, not a compiler quirk — use ``scan``
+    for cross-rank ops, or mark the map ``fusable=False`` to keep it a
+    standalone whole-payload stage.
 
     Accepts multiple inputs (``fn`` is called as ``fn(*tensors)``) — the
     only op that may, which is what lets one program combine tensors.
@@ -135,7 +138,8 @@ def map(fn: Callable, *xs: Value, name: str = "") -> Value:  # noqa: A001
     if not xs:
         raise TypeError("map needs at least one input value")
     return _current("map").emit(
-        Node(OpKind.MAP, fn=fn, name=name or getattr(fn, "__name__", "")), xs)
+        Node(OpKind.MAP, fn=fn, fusable=fusable,
+             name=name or getattr(fn, "__name__", "")), xs)
 
 
 def _unary(op_name: str, op: Node, x: Value) -> Value:

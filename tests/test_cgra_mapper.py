@@ -1,0 +1,300 @@
+"""CGRA device model + mapper: placements are real, fallbacks are loud.
+
+The acceptance bar: every fused stage of every acis backend carries a
+Placement or an explicit host fallback, and netmodel has no silent
+constant-rate path left for MAP compute.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import core as acis
+from repro.core import make_engine, netmodel
+from repro.cgra.device import (CGRADevice, HostFallback, PAPER_CGRA,
+                               Placement, placement_rate, route_through)
+from repro.cgra.mapper import PlaceCGRA
+
+AV = jax.ShapeDtypeStruct
+
+
+# ---------------------------------------------------------------------------
+# device model
+# ---------------------------------------------------------------------------
+
+def test_paper_device_matches_table_ii_rate():
+    """The device's line rate is the old accel_clock*accel_width constant;
+    the NetParams compat properties read through to it."""
+    assert PAPER_CGRA.line_rate == 250e6 * 64
+    p = netmodel.PAPER
+    assert p.accel_clock == PAPER_CGRA.clock_hz
+    assert p.accel_width == PAPER_CGRA.lane_bytes
+    assert netmodel.accel_rate(p) == PAPER_CGRA.line_rate
+
+
+def test_placement_rate_drops_with_ii():
+    pl = Placement(device=PAPER_CGRA, n_ops=20, n_route=0, depth=3, ii=2)
+    assert pl.bytes_per_s == PAPER_CGRA.line_rate / 2
+    assert placement_rate(pl) == pl.bytes_per_s
+    assert placement_rate(None) == PAPER_CGRA.line_rate
+
+
+def test_host_fallback_has_no_in_switch_rate():
+    with pytest.raises(ValueError, match="host-fallback"):
+        placement_rate(HostFallback("because"))
+
+
+def test_route_through_is_line_rate_zero_pes():
+    pl = route_through(PAPER_CGRA, 3)
+    assert pl.fits and pl.pes_used == 0
+    assert pl.bytes_per_s == PAPER_CGRA.line_rate
+
+
+# ---------------------------------------------------------------------------
+# mapping compiled stages
+# ---------------------------------------------------------------------------
+
+def _compile(fn, backend="acis", **kw):
+    eng = make_engine(backend, outer_axis=kw.pop("outer_axis", None))
+    return eng.compile(fn, **kw)
+
+
+def test_map_allreduce_stage_gets_placed():
+    c = _compile(lambda x: acis.reduce(acis.map(jnp.square, x, name="sq")),
+                 in_avals=(AV((64,), jnp.float32),), axis_size=8)
+    (st,) = c.stages
+    assert st.kind == "map+allreduce"
+    pl = st.placement
+    assert isinstance(pl, Placement) and pl.fits
+    assert pl.n_ops >= 2                  # square + add combine
+    assert 0 < pl.pes_used <= PAPER_CGRA.n_pes
+    assert pl.bytes_per_s > 0
+
+
+def test_movement_stage_is_route_through():
+    c = _compile(lambda x: acis.all_gather(x))
+    (st,) = c.stages
+    assert st.placement.fits and st.placement.pes_used == 0
+
+
+def test_hier_pad_bookkeeping_maps_route_through():
+    c = _compile(lambda x: acis.reduce(x, axis="auto"),
+                 backend="acis_hierarchical", outer_axis="pod",
+                 in_avals=(AV((128,), jnp.float32),),
+                 axis_size={"data": 4, "pod": 2})
+    kinds = c.stage_kinds()
+    assert kinds == ["map", "reduce_scatter", "allreduce", "allgather",
+                     "map"]
+    pads = [s.placement for s in c.stages if s.kind == "map"]
+    assert all(p.fits and p.n_ops == 0 for p in pads)
+
+
+def test_unsupported_map_body_falls_back_to_host():
+    """A matmul body needs a MAC array the switch CGRA does not have —
+    explicit host fallback, with the primitive named."""
+    c = _compile(
+        lambda a, b: acis.reduce(acis.map(lambda x, y: x @ y, a, b,
+                                          name="mm")),
+        in_avals=(AV((8, 8), jnp.float32), AV((8, 8), jnp.float32)),
+        axis_size=8)
+    st = next(s for s in c.stages if s.kind == "map")
+    assert isinstance(st.placement, HostFallback)
+    assert "dot_general" in st.placement.reason
+
+
+def test_collective_inside_map_body_falls_back():
+    """A MAP body that itself communicates is endpoint code, not a
+    dataflow graph one switch can run."""
+    from repro.core import lookaside
+
+    c = _compile(
+        lambda x: acis.map(
+            lambda v: lookaside.distributed_prefix_sum(v, "data"), x,
+            name="dps"),
+        in_avals=(AV((16,), jnp.float32),), axis_size=8)
+    (st,) = c.stages
+    assert isinstance(st.placement, HostFallback)
+
+
+def test_topk_compressor_falls_back():
+    c = _compile(lambda x: acis.ef_reduce(x, axis="data",
+                                          compressor="topk")[0],
+                 backend="acis_compressed",
+                 in_avals=(AV((256,), jnp.float32),), axis_size=8)
+    (st,) = c.stages
+    assert isinstance(st.placement, HostFallback)
+    assert "top_k" in st.placement.reason
+
+
+def test_int8_ef_compressor_fits():
+    c = _compile(lambda x: acis.ef_reduce(x, axis="data")[0],
+                 backend="acis_compressed",
+                 in_avals=(AV((1024,), jnp.float32),), axis_size=8)
+    (st,) = c.stages
+    assert isinstance(st.placement, Placement) and st.placement.fits
+
+
+def test_encoded_codec_combine_costs_throughput():
+    """The int8 encoded-domain combine maps, but at II > 1 — compression
+    in the switch is not free, and the placement says by how much."""
+    c = _compile(lambda x: acis.reduce(x, axis="auto"),
+                 backend="acis_hierarchical_compressed", outer_axis="pod",
+                 in_avals=(AV((1 << 14,), jnp.float32),),
+                 axis_size={"data": 4, "pod": 2})
+    outer = next(s for s in c.stages if s.kind == "allreduce")
+    pl = outer.placement
+    assert pl.fits and pl.ii > 1
+    assert pl.bytes_per_s < PAPER_CGRA.line_rate
+
+
+def test_tiny_device_forces_fallback():
+    """Shrinking the grid below the body's op count flips the outcome —
+    the feasibility check is real, not cosmetic."""
+    from repro.core.compiler import (Emit, FuseHops, Legalize,
+                                     LowerTopology, SelectSchedule,
+                                     compile_rank_local)
+
+    tiny = CGRADevice(rows=1, cols=1, ops_per_pe=1)
+    pipeline = (Legalize(), LowerTopology(), FuseHops(), SelectSchedule(),
+                PlaceCGRA(device=tiny), Emit())
+    c = compile_rank_local(
+        lambda x: acis.reduce(acis.map(
+            lambda v: jnp.tanh(v) * 3 + 1, x, name="body")),
+        "data", axis_size=8, in_avals=(AV((64,), jnp.float32),),
+        pipeline=pipeline)
+    (st,) = c.stages
+    assert isinstance(st.placement, HostFallback)
+    assert "ALU slots" in st.placement.reason
+
+
+@pytest.mark.parametrize("backend", ["acis", "acis_compressed",
+                                     "acis_hierarchical",
+                                     "acis_hierarchical_compressed"])
+def test_every_stage_carries_placement_or_fallback(backend):
+    """Acceptance: no stage leaves the pipeline unmapped on any backend."""
+    hier = "hierarchical" in backend
+    eng = make_engine(backend, inner_axis="data",
+                      outer_axis="pod" if hier else None)
+
+    def sync(g, r):
+        t = acis.map(lambda g_, r_: g_ + r_, g, r, name="ef_target")
+        if "compressed" in backend:
+            red, dlv = acis.ef_reduce(t, axis="auto")
+            out = acis.map(lambda y: y / 8.0, red, name="mean")
+            res = acis.map(lambda t_, d: t_ - d, t, dlv, name="ef_residual")
+            return out, res
+        red = acis.reduce(t, axis="auto")
+        return acis.map(lambda y: y / 8.0, red, name="mean"), t
+
+    sizes = {"data": 4, "pod": 2} if hier else {"data": 8}
+    c = eng.compile(sync, in_avals=(AV((64,), jnp.float32),) * 2,
+                    axis_size=sizes)
+    assert len(c.stages) >= 1
+    for st in c.stages:
+        assert st.placement is not None, f"unmapped stage {st.kind}"
+        assert isinstance(st.placement, (Placement, HostFallback))
+        assert st.ir is not None
+
+
+# ---------------------------------------------------------------------------
+# netmodel: placement-derived rates, no silent MAP constants
+# ---------------------------------------------------------------------------
+
+def test_stage_time_requires_placement_for_map_stages():
+    with pytest.raises(ValueError, match="no constant-rate default"):
+        netmodel.stage_time("map", 8, 1 << 20, netmodel.PAPER)
+    with pytest.raises(ValueError, match="no constant-rate default"):
+        netmodel.stage_time("map+allreduce", 8, 1 << 20, netmodel.PAPER)
+
+
+def test_stage_time_fallback_charges_pcie_and_mpi():
+    m = 1 << 20
+    fits = Placement(device=PAPER_CGRA, n_ops=2, n_route=0, depth=2, ii=1)
+    t_fit = netmodel.stage_time("map+allreduce", 8, m, netmodel.PAPER,
+                                placement=fits)
+    t_fb = netmodel.stage_time("map+allreduce", 8, m, netmodel.PAPER,
+                               placement=HostFallback("too big"))
+    assert t_fb > t_fit
+    # the detour includes the PCIe + MPI + host-stream terms exactly once
+    p = netmodel.PAPER
+    assert t_fb >= netmodel.host_fallback_time(m, p)
+    assert netmodel.host_fallback_time(m, p) == pytest.approx(
+        2 * p.pcie + p.mpi_overhead + m / p.host_bw)
+
+
+def test_ring_time_slows_with_ii():
+    m = 1 << 22
+    fast = Placement(device=PAPER_CGRA, n_ops=2, n_route=0, depth=2, ii=1)
+    slow = Placement(device=PAPER_CGRA, n_ops=40, n_route=0, depth=4, ii=4)
+    t1 = netmodel.ring_allreduce_time(8, m, placement=fast)
+    t4 = netmodel.ring_allreduce_time(8, m, placement=slow)
+    assert t4 > t1
+
+
+def test_placecgra_annotates_desc_with_model_time():
+    c = _compile(lambda x: acis.reduce(x),
+                 in_avals=(AV((1 << 16,), jnp.float32),), axis_size=8)
+    (st,) = c.stages
+    assert "model" in st.desc and "us" in st.desc
+
+
+def test_explain_lists_placements():
+    c = _compile(lambda x: acis.reduce(acis.map(jnp.square, x, name="sq")),
+                 in_avals=(AV((64,), jnp.float32),), axis_size=8)
+    txt = c.explain()
+    assert "map+allreduce" in txt and "PEs" in txt
+    assert "placement" in txt
+
+
+def test_engine_config_cgra_device_override():
+    """The device is an engine config knob: a starved grid turns the same
+    program into a host-fallback without touching the pipeline."""
+    tiny = CGRADevice(rows=1, cols=1, ops_per_pe=1)
+    eng = make_engine("acis", cgra_device=tiny)
+    c = eng.compile(
+        lambda x: acis.reduce(acis.map(
+            lambda v: jnp.tanh(v) * 3 + 1, x, name="body")),
+        in_avals=(AV((64,), jnp.float32),), axis_size=8)
+    (st,) = c.stages
+    assert isinstance(st.placement, HostFallback)
+
+
+def test_loop_body_falls_back_not_placed():
+    """lax.scan / while_loop bodies have a sequential controller the
+    spatial pipeline lacks — they must fall back, not place at line
+    rate (regression: sub-jaxpr eqns were treated as call wrappers)."""
+    import jax.lax as lax
+
+    def loopy(v):
+        def body(c, x):
+            return c + x, c
+        c, _ = lax.scan(body, jnp.zeros_like(v[0]), v)
+        return v + c
+
+    c = _compile(lambda x: acis.map(loopy, x, name="loopy"),
+                 in_avals=(AV((8, 4), jnp.float32),), axis_size=8)
+    (st,) = c.stages
+    assert isinstance(st.placement, HostFallback)
+    assert "scan" in st.placement.reason or "while" in st.placement.reason
+
+
+def test_device_supported_set_is_honored():
+    """A device without transcendentals must reject a tanh body — the
+    ALU vocabulary is per-device, not a global constant."""
+    from repro.cgra.device import ALU_PRIMS
+
+    no_tanh = CGRADevice(supported=ALU_PRIMS - {"tanh"})
+    eng = make_engine("acis", cgra_device=no_tanh)
+    c = eng.compile(
+        lambda x: acis.reduce(acis.map(jnp.tanh, x, name="act")),
+        in_avals=(AV((64,), jnp.float32),), axis_size=8)
+    (st,) = c.stages
+    assert isinstance(st.placement, HostFallback)
+    assert "tanh" in st.placement.reason
+
+    eng2 = make_engine("acis")        # full vocabulary: places fine
+    c2 = eng2.compile(
+        lambda x: acis.reduce(acis.map(jnp.tanh, x, name="act")),
+        in_avals=(AV((64,), jnp.float32),), axis_size=8)
+    assert c2.stages[0].placement.fits

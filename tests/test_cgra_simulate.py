@@ -1,0 +1,314 @@
+"""Dataplane simulator: numerics match shard_map, latency is reported.
+
+The acceptance bar: for all four acis backends the simulator's outputs
+match the shard_map execution of the *same* CompiledProgram (allclose),
+and the report puts simulated latency next to the netmodel prediction.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro import core as acis
+from repro.core import make_engine
+from repro.core.wire import BF16
+from repro.cgra.simulate import SimReport, SwitchSim
+
+AV = jax.ShapeDtypeStruct
+N = 8
+
+
+def smap(fn, mesh, in_specs, out_specs):
+    return jax.jit(jax.shard_map(fn, mesh=mesh, in_specs=in_specs,
+                                 out_specs=out_specs, check_vma=False))
+
+
+@pytest.fixture(scope="module")
+def mesh22():
+    return jax.make_mesh((2, 2), ("pod", "data"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+def _sim(eng, sizes):
+    return SwitchSim(eng.topology(axis_size=sizes))
+
+
+# ---------------------------------------------------------------------------
+# acceptance: four backends, simulator vs shard_map on the same program
+# ---------------------------------------------------------------------------
+
+def _sync_program(eng, backend, n_total):
+    """A gradient-sync-shaped program (EF target/mean/residual on the
+    compressed backends) with an explicit divisor so it runs outside
+    shard_map too."""
+    compressed = "compressed" in backend
+
+    def sync(g, r):
+        t = acis.map(lambda g_, r_: g_ + r_, g, r, name="ef_target")
+        if compressed:
+            red, dlv = acis.ef_reduce(t, axis="auto")
+            out = acis.map(lambda y: y / n_total, red, name="mean")
+            res = acis.map(lambda t_, d: t_ - d, t, dlv,
+                           name="ef_residual")
+            return out, res
+        red = acis.reduce(t, axis="auto")
+        return acis.map(lambda y: y / n_total, red, name="mean"), t
+
+    hier = "hierarchical" in backend
+    sizes = {"data": 2, "pod": 2} if hier else {"data": N}
+    return eng.compile(sync, in_avals=(AV((4, 33), jnp.float32),) * 2,
+                       axis_size=sizes), sizes
+
+
+@pytest.mark.parametrize("backend", ["acis", "acis_compressed",
+                                     "acis_hierarchical",
+                                     "acis_hierarchical_compressed"])
+def test_simulator_matches_shard_map(backend, mesh8, mesh22, rng):
+    hier = "hierarchical" in backend
+    eng = make_engine(backend, inner_axis="data",
+                      outer_axis="pod" if hier else None)
+    n_total = 4 if hier else N
+    compiled, sizes = _sync_program(eng, backend, n_total)
+
+    g = rng.standard_normal((n_total, 4, 33)).astype(np.float32)
+    r = 0.01 * rng.standard_normal((n_total, 4, 33)).astype(np.float32)
+
+    if hier:
+        mesh, spec = mesh22, P("pod", "data", None, None)
+        gg = g.reshape(2, 2, 4, 33)
+        rr = r.reshape(2, 2, 4, 33)
+        lead = 2
+    else:
+        mesh, spec = mesh8, P("data", None, None)
+        gg, rr, lead = g, r, 1
+
+    def f(gl, rl):
+        idx = (0,) * lead
+        out, res = compiled(gl[idx], rl[idx])
+        expand = out[(None,) * lead]
+        return expand, res[(None,) * lead]
+
+    want_out, want_res = smap(f, mesh, (spec, spec), (spec, spec))(
+        jnp.asarray(gg), jnp.asarray(rr))
+
+    sim = _sim(eng, sizes)
+    # simulator leading dims follow the topology order (inner first)
+    sg = np.moveaxis(gg, 0, 1) if hier else gg
+    sr = np.moveaxis(rr, 0, 1) if hier else rr
+    (got_out, got_res), report = sim.run(compiled, sg, sr)
+    if hier:
+        got_out = np.moveaxis(got_out, 1, 0)
+        got_res = np.moveaxis(got_res, 1, 0)
+
+    atol = 5e-2 if "compressed" in backend else 1e-4
+    np.testing.assert_allclose(got_out, np.asarray(want_out), atol=atol)
+    np.testing.assert_allclose(got_res, np.asarray(want_res), atol=atol)
+
+    # every stage reported, with simulated + analytic latency and the
+    # stage's placement (or explicit fallback) attached
+    assert isinstance(report, SimReport)
+    assert len(report.stages) == len(compiled.stages)
+    assert report.t_sim > 0
+    assert report.t_model > 0
+    for srow, st in zip(report.stages, compiled.stages):
+        assert srow.kind == st.kind
+        assert srow.t_sim >= 0
+        assert srow.placement is st.placement
+
+
+# ---------------------------------------------------------------------------
+# individual stage kinds
+# ---------------------------------------------------------------------------
+
+def test_fig5_scan_allgather(mesh8, rng):
+    eng = make_engine("acis")
+    c = eng.compile(
+        lambda x: acis.all_gather(acis.scan(acis.all_gather(x))),
+        in_avals=(AV((8,), jnp.float32),), axis_size=N)
+    assert c.stage_kinds() == ["scan+allgather"]
+    x = rng.standard_normal((64,)).astype(np.float32)
+    want = np.asarray(smap(lambda v: c(v), mesh8, P("data"), P(None))(
+        jnp.asarray(x)))
+    got, rep = _sim(eng, N).run(c, x.reshape(N, 8))
+    np.testing.assert_allclose(got[0], want, atol=1e-4)
+    for row in got:
+        np.testing.assert_allclose(row, want, atol=1e-4)
+
+
+def test_nas_is_pair(mesh8, rng):
+    eng = make_engine("acis")
+    c = eng.compile(lambda h, k: (acis.reduce(h), acis.all_to_all(k)),
+                    in_avals=(AV((16,), jnp.float32),
+                              AV((64,), jnp.float32)),
+                    axis_size=N)
+    assert c.stage_kinds() == ["allreduce+alltoall"]
+    h = rng.standard_normal((N, 16)).astype(np.float32)
+    k = rng.standard_normal((N, 64)).astype(np.float32)
+    wh, wk = smap(lambda a, b: tuple(o[None] for o in c(a[0], b[0])),
+                  mesh8, (P("data"), P("data")),
+                  (P("data"), P("data")))(jnp.asarray(h), jnp.asarray(k))
+    (gh, gk), _ = _sim(eng, N).run(c, h, k)
+    np.testing.assert_allclose(gh, np.asarray(wh), atol=1e-4)
+    np.testing.assert_allclose(gk, np.asarray(wk))
+
+
+def test_bcast_allreduce_map_chain(mesh8, rng):
+    eng = make_engine("acis")
+    c = eng.compile(
+        lambda x: acis.map(lambda v: v + 1, acis.all_gather(
+            acis.reduce_scatter(acis.bcast(x, root=3)))),
+        in_avals=(AV((16,), jnp.float32),), axis_size=N)
+    x = rng.standard_normal((N, 16)).astype(np.float32)
+    want = np.asarray(smap(lambda v: c(v[0])[None], mesh8, P("data"),
+                           P("data"))(jnp.asarray(x)))
+    got, _ = _sim(eng, N).run(c, x)
+    np.testing.assert_allclose(got, want, atol=1e-4)
+
+
+def test_bf16_wire_codec_reduce(mesh8, rng):
+    eng = make_engine("acis")
+    c = eng.compile(lambda x: acis.reduce(acis.wire(BF16, x)),
+                    in_avals=(AV((32,), jnp.float32),), axis_size=N)
+    x = rng.standard_normal((N, 32)).astype(np.float32)
+    want = np.asarray(smap(lambda v: c(v[0])[None], mesh8, P("data"),
+                           P("data"))(jnp.asarray(x)))
+    got, _ = _sim(eng, N).run(c, x)
+    np.testing.assert_allclose(got, want, atol=5e-3)
+
+
+def test_ef_topk_matches(mesh8, rng):
+    eng = make_engine("acis_compressed", compressor="topk")
+    c = eng.compile(
+        lambda x: acis.ef_reduce(x, axis="data", compressor="topk",
+                                 topk_ratio=0.1)[0],
+        in_avals=(AV((4, 32), jnp.float32),), axis_size=N)
+    x = rng.standard_normal((N, 4, 32)).astype(np.float32)
+    want = np.asarray(smap(lambda v: c(v[0])[None], mesh8, P("data"),
+                           P("data"))(jnp.asarray(x)))
+    got, rep = _sim(eng, N).run(c, x)
+    np.testing.assert_allclose(got, want, atol=1e-4)
+    # top-k fell back to the host → the sim charged the detour, and the
+    # analytic column agrees it is a fallback stage
+    assert not c.stages[0].placement.fits
+    assert rep.stages[0].t_sim > 0
+
+
+# ---------------------------------------------------------------------------
+# latency accounting
+# ---------------------------------------------------------------------------
+
+def test_simulated_time_tracks_analytic_model(rng):
+    """Not a bit-match — the DES and the closed form make different
+    pipelining assumptions — but same stage, same order of magnitude."""
+    eng = make_engine("acis")
+    c = eng.compile(lambda x: acis.reduce(x),
+                    in_avals=(AV((1 << 14,), jnp.float32),), axis_size=N)
+    x = rng.standard_normal((N, 1 << 14)).astype(np.float32)
+    _, rep = _sim(eng, N).run(c, x)
+    (row,) = rep.stages
+    assert row.t_model is not None
+    assert 0.2 < row.t_sim / row.t_model < 5.0
+
+
+def test_outer_dci_stage_costs_more_than_inner(rng):
+    """Same payload, same ring length: the thin inter-pod tier must be
+    simulated slower than the intra-pod tier."""
+    eng = make_engine("acis_hierarchical", inner_axis="data",
+                      outer_axis="pod")
+    c = eng.compile(
+        lambda x: acis.all_gather(
+            acis.reduce_scatter(x, axis="data"), axis="pod"),
+        in_avals=(AV((8, 32), jnp.float32),),
+        axis_size={"data": 2, "pod": 2})
+    assert c.stage_axes() == ["data", "pod"]
+    x = rng.standard_normal((2, 2, 8, 32)).astype(np.float32)
+    _, rep = _sim(eng, {"data": 2, "pod": 2}).run(c, x)
+    by_axis = {r.axis: r for r in rep.stages}
+    # RS output is 1/2 the bytes the AG moves back, yet DCI still loses
+    assert by_axis["pod"].t_sim > by_axis["data"].t_sim
+
+
+def test_fallback_stage_slower_than_placed(rng):
+    """The same program on a too-small device must simulate slower —
+    the host detour is charged, not ignored."""
+    from repro.core.compiler import (Emit, FuseHops, Legalize,
+                                     LowerTopology, SelectSchedule,
+                                     compile_rank_local)
+    from repro.cgra.device import CGRADevice
+    from repro.cgra.mapper import PlaceCGRA
+
+    def prog(x):
+        return acis.reduce(acis.map(lambda v: jnp.tanh(v) * 2, x,
+                                    name="body"))
+
+    def build(device):
+        pipeline = (Legalize(), LowerTopology(), FuseHops(),
+                    SelectSchedule(), PlaceCGRA(device=device), Emit())
+        return compile_rank_local(prog, "data", axis_size=N,
+                                  in_avals=(AV((1 << 12,), jnp.float32),),
+                                  pipeline=pipeline)
+
+    big = build(CGRADevice())                  # default grid: fits
+    tiny = build(CGRADevice(rows=1, cols=1, ops_per_pe=1))
+    assert big.stages[0].placement.fits
+    assert not tiny.stages[0].placement.fits
+
+    x = np.random.default_rng(0).standard_normal((N, 1 << 12)) \
+        .astype(np.float32)
+    sim = SwitchSim({"data": N})
+    _, rep_big = sim.run(big, x)
+    _, rep_tiny = sim.run(tiny, x)
+    assert rep_tiny.t_sim > rep_big.t_sim
+    # numerics identical either way — fallback changes cost, not results
+    out_big, _ = sim.run(big, x)
+    out_tiny, _ = sim.run(tiny, x)
+    np.testing.assert_allclose(out_big, out_tiny)
+
+
+def test_report_table_renders():
+    eng = make_engine("acis")
+    c = eng.compile(lambda x: acis.reduce(x),
+                    in_avals=(AV((64,), jnp.float32),), axis_size=N)
+    x = np.ones((N, 64), np.float32)
+    _, rep = _sim(eng, N).run(c, x)
+    txt = rep.table()
+    assert "sim_us" in txt and "model_us" in txt and "TOTAL" in txt
+
+
+def test_input_grid_validation():
+    eng = make_engine("acis")
+    c = eng.compile(lambda x: acis.reduce(x))
+    sim = SwitchSim({"data": N})
+    with pytest.raises(ValueError, match="rank grid"):
+        sim.run(c, np.ones((3, 4), np.float32))
+    with pytest.raises(TypeError, match="inputs"):
+        sim.run(c)
+
+
+def test_sim_requires_default_pipeline_stage_ir():
+    import dataclasses as dc
+
+    eng = make_engine("acis")
+    c = eng.compile(lambda x: acis.reduce(x))
+    stripped = dc.replace(c.stages[0], ir=None)
+    c.stages = [stripped]
+    with pytest.raises(ValueError, match="StageIR"):
+        SwitchSim({"data": N}).run(c, np.ones((N, 4), np.float32))
+
+
+def test_fused_exclusive_scan_matches_shard_map(mesh8, rng):
+    """Regression: the fused scan+allgather interpreter must honor the
+    scan's `exclusive` flag (rank 0 gets the monoid identity block)."""
+    eng = make_engine("acis")
+    c = eng.compile(
+        lambda x: acis.all_gather(acis.scan(acis.all_gather(x),
+                                            exclusive=True)),
+        in_avals=(AV((4,), jnp.float32),), axis_size=N)
+    assert c.stage_kinds() == ["scan+allgather"]
+    x = rng.standard_normal((N, 4)).astype(np.float32)
+    want = np.asarray(smap(lambda v: c(v[0])[None], mesh8, P("data"),
+                           P("data"))(jnp.asarray(x)))
+    got, _ = _sim(eng, N).run(c, x)
+    np.testing.assert_allclose(got[0], want[0], atol=1e-4)

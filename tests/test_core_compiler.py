@@ -117,7 +117,8 @@ def test_pipeline_is_composable():
     compiled = compile_rank_local(prog, "data", pipeline=unfused)
     assert compiled.stage_kinds() == ["allgather", "scan", "allgather"]
     assert [type(p).__name__ for p in DEFAULT_PIPELINE] == \
-        ["Legalize", "LowerTopology", "FuseHops", "SelectSchedule", "Emit"]
+        ["Legalize", "LowerTopology", "FuseHops", "SelectSchedule",
+         "PlaceCGRA", "Emit"]
 
 
 def test_compile_program_reports_schedules(mesh8):
@@ -144,3 +145,64 @@ def test_compiled_bcast_scan_chain(mesh8, rng):
     want = (scan / 2).sum(axis=0)
     for i in range(N):
         np.testing.assert_allclose(out[i], want, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# dropped-codec warnings & the per-stage explain table
+# ---------------------------------------------------------------------------
+
+def test_legalize_warns_when_codec_dropped_at_noncapable_node():
+    """A wire codec a fixed-function consumer cannot apply must not
+    vanish silently — the warning names the node and the codec."""
+    from repro import core as acis
+
+    eng = acis.make_engine("acis")
+    with pytest.warns(UserWarning, match="bf16.*allgather"):
+        eng.compile(lambda x: acis.all_gather(acis.wire(BF16, x)))
+
+
+def test_legalize_warns_when_codec_dropped_at_ef_reduce():
+    from repro import core as acis
+
+    eng = acis.make_engine("acis")
+    with pytest.warns(UserWarning, match="error-feedback"):
+        eng.compile(lambda x: acis.ef_reduce(acis.wire(BF16, x),
+                                             axis="data")[0])
+
+
+def test_legalize_silent_when_codec_is_applied():
+    import warnings as _w
+
+    prog = SwitchProgram([Wire(BF16), ReduceScatter(), AllGather()])
+    with _w.catch_warnings():
+        _w.simplefilter("error")        # any warning -> failure
+        compiled = compile_rank_local(prog, "data")
+    assert compiled.stage_kinds() == ["allreduce"]
+
+
+def test_explain_renders_stage_table(mesh8):
+    from repro import core as acis
+
+    eng = acis.make_engine("acis_hierarchical_compressed",
+                           outer_axis="pod")
+    c = eng.compile(lambda x: acis.reduce(x, axis="auto"),
+                    in_avals=(jax.ShapeDtypeStruct((256,), jnp.float32),),
+                    axis_size={"data": 4, "pod": 2})
+    txt = c.explain()
+    # kind, axis, schedule, codec and placement all present per stage
+    assert "reduce_scatter" in txt and "allreduce" in txt
+    assert "pod" in txt and "data" in txt
+    assert "int8" in txt
+    assert "PEs" in txt or "route-through" in txt
+    assert txt.count("\n") >= len(c.stages)
+
+
+def test_legalize_warns_codec_carried_through_map_to_output():
+    """A codec that rides through a MAP but never reaches a collective
+    is dropped at the program boundary — also announced (regression:
+    only direct wire→output drops used to warn)."""
+    from repro import core as acis
+
+    eng = acis.make_engine("acis")
+    with pytest.warns(UserWarning, match="program output"):
+        eng.compile(lambda x: acis.map(jnp.square, acis.wire(BF16, x)))
