@@ -1,0 +1,82 @@
+"""Benchmark regression guard.
+
+    python -m benchmarks.check_regression BENCH_netmodel.json \\
+        benchmarks/baseline.json
+
+Diffs a fresh ``BENCH_netmodel.json`` against the committed baseline and
+fails (exit 1) on any deterministic metric regressing by more than
+``TOLERANCE``.  Keys are classified by direction: ``*speedup`` /
+``*time_vs_f32`` are higher-is-better ratios, everything else is a
+latency in µs (lower is better).  ``jax_*`` keys are wall-clock
+measurements of real executions — too noisy for a CI gate — and are
+skipped; the analytic/emulated figures and the execution-plan program
+times are deterministic, so a >25% move there is a real model or
+compiler change, not jitter.
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+
+TOLERANCE = 0.25
+NOISY_PREFIXES = ("jax_",)
+HIGHER_IS_BETTER_SUFFIXES = ("speedup", "mean_speedup", "time_vs_f32")
+
+
+def classify(key: str) -> str:
+    if key.endswith(HIGHER_IS_BETTER_SUFFIXES):
+        return "higher"
+    return "lower"
+
+
+def check(fresh: dict, baseline: dict,
+          tolerance: float = TOLERANCE) -> list[str]:
+    failures = []
+    for key, old in sorted(baseline.items()):
+        if key.startswith(NOISY_PREFIXES):
+            continue
+        if not isinstance(old, (int, float)) or old <= 0:
+            continue
+        new = fresh.get(key)
+        if new is None:
+            failures.append(f"{key}: present in baseline, missing from "
+                            "fresh results")
+            continue
+        if classify(key) == "higher":
+            if new < old * (1.0 - tolerance):
+                failures.append(
+                    f"{key}: {old:.3f} -> {new:.3f} "
+                    f"({new / old - 1.0:+.1%}, higher is better)")
+        elif new > old * (1.0 + tolerance):
+            failures.append(
+                f"{key}: {old:.3f}us -> {new:.3f}us "
+                f"({new / old - 1.0:+.1%}, lower is better)")
+    return failures
+
+
+def main(argv: list[str]) -> int:
+    if len(argv) != 2:
+        print(__doc__, file=sys.stderr)
+        return 2
+    with open(argv[0]) as f:
+        fresh = json.load(f)
+    with open(argv[1]) as f:
+        baseline = json.load(f)
+    checked = sum(1 for k, v in baseline.items()
+                  if not k.startswith(NOISY_PREFIXES)
+                  and isinstance(v, (int, float)) and v > 0)
+    failures = check(fresh, baseline)
+    if failures:
+        print(f"REGRESSION: {len(failures)} of {checked} guarded metrics "
+              f"moved >{TOLERANCE:.0%} vs {argv[1]}:")
+        for f_ in failures:
+            print(f"  {f_}")
+        return 1
+    print(f"benchmark guard OK: {checked} metrics within "
+          f"{TOLERANCE:.0%} of {argv[1]}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

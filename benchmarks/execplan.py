@@ -1,0 +1,102 @@
+"""Execution-planning benchmark: per-leaf vs bucketized gradient sync.
+
+The compiler's Coalesce pass concatenates per-leaf reductions into
+flat-buffer bucket collectives; the ExecutionPlan runtime overlaps
+independent stages.  This module prices both against the analytic
+:func:`repro.core.netmodel.program_time` on a ragged many-leaf gradient
+pytree (the transformer shape: a few big matmul leaves, a long tail of
+small biases/norms) and cross-checks the overlap model on the dataplane
+simulator — the numbers CI tracks in ``BENCH_netmodel.json``.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+N_LEAVES = 64
+AXIS_SIZE = 8
+
+
+def _ragged_sizes(n_leaves: int = N_LEAVES) -> list[int]:
+    """Element counts of a transformer-ish gradient pytree: 1/8 large
+    matmul leaves, the rest a ragged small tail (deterministic)."""
+    rng = np.random.default_rng(7)
+    sizes = []
+    for i in range(n_leaves):
+        if i % 8 == 0:
+            sizes.append(int(rng.integers(1 << 18, 1 << 19)))   # 1-2 MB
+        else:
+            sizes.append(int(rng.integers(1 << 8, 1 << 13)))    # 1-32 KB
+    return sizes
+
+
+def _sync_program(sizes, engine, axis_sizes):
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import tracing
+
+    n_total = 1
+    for v in axis_sizes.values():
+        n_total *= v
+
+    def sync(*gs):
+        outs = []
+        for g in gs:
+            r = tracing.reduce(g, axis="auto")
+            outs.append(tracing.map(lambda y: y / n_total, r, name="mean"))
+        return tuple(outs)
+
+    prog = tracing.trace(sync, name=f"sync[{len(sizes)}]",
+                         num_inputs=len(sizes))
+    avals = tuple(jax.ShapeDtypeStruct((s,), jnp.float32) for s in sizes)
+    return engine.compile(prog, in_avals=avals, axis_size=axis_sizes)
+
+
+def _collectives(compiled) -> int:
+    return sum(1 for s in compiled.stages
+               if s.kind not in ("map", "delivered"))
+
+
+def rows() -> list[tuple]:
+    """CSV rows: program_time of the 64-leaf sync, per-leaf vs bucketized,
+    plus a simulated overlap cross-check."""
+    from repro.core import make_engine, netmodel
+    from repro.cgra.simulate import SwitchSim
+
+    sizes = _ragged_sizes()
+    axis_sizes = {"data": AXIS_SIZE}
+
+    per_leaf = _sync_program(
+        sizes, make_engine("acis", bucket_bytes=0), axis_sizes)
+    bucketized = _sync_program(sizes, make_engine("acis"), axis_sizes)
+
+    t_pl = per_leaf.program_time()
+    t_bk = bucketized.program_time()
+    total = sum(sizes) * 4
+    cap = netmodel.bucket_bytes(AXIS_SIZE)
+    out = [
+        (f"execplan_sync{N_LEAVES}_per_leaf", t_pl * 1e6,
+         f"collectives={_collectives(per_leaf)}"
+         f",stages={len(per_leaf.stages)}"),
+        (f"execplan_sync{N_LEAVES}_bucketized", t_bk * 1e6,
+         f"speedup={t_pl / t_bk:.2f}"
+         f",collectives={_collectives(bucketized)}"
+         f",min_buckets={-(-total // cap)}"
+         f",waves={bucketized.plan.n_waves}"),
+    ]
+
+    # overlap cross-check: simulate a small bucketized sync end-to-end and
+    # put the wave-overlapped latency next to program_time's prediction
+    eng = make_engine("acis")
+    small_sizes = _ragged_sizes(16)
+    small = _sync_program(small_sizes, eng, {"data": 4})
+    rng = np.random.default_rng(0)
+    inputs = [rng.standard_normal((4, s)).astype(np.float32)
+              for s in small_sizes]
+    _, report = SwitchSim(eng.topology(axis_size=4)).run(small, *inputs)
+    out.append((
+        "execplan_sim_sync16_end_to_end", report.t_end * 1e6,
+        f"analytic_us={(report.t_program_model or 0.0) * 1e6:.2f}"
+        f",serial_us={report.t_sim * 1e6:.2f}"))
+    return out

@@ -14,7 +14,7 @@ from typing import Callable
 
 import numpy as np
 
-from benchmarks import netmodel as nm
+from repro.core import netmodel as nm
 
 SIZES_SMALL = [2 ** i for i in range(2, 13)]            # 4 B .. 4 KB
 SIZES_LARGE = [2 ** i for i in range(12, 23)]           # 4 KB .. 4 MB

@@ -60,6 +60,11 @@ def main() -> None:
     cgra_rows = cgra.rows()
     rows += cgra_rows
 
+    # execution planning: bucketized vs per-leaf gradient sync, and the
+    # simulated vs analytic overlap cross-check
+    from benchmarks import execplan
+    rows += execplan.rows()
+
     print("name,us_per_call,derived")
     for name, us, derived in rows:
         print(f"{name},{us:.2f},{derived}")

@@ -75,6 +75,14 @@ def main():
         state = loop.run(state)
         dt = time.time() - t0
 
+    if engine is not None and engine.last_sync_program() is not None:
+        # the compiled switch program gradient_sync actually ran: the
+        # Coalesce buckets and the ExecutionPlan wave structure per stage
+        compiled_sync = engine.last_sync_program()
+        print("\ngradient-sync switch program "
+              f"(analytic {compiled_sync.program_time() * 1e6:.1f}us/sync):")
+        print(compiled_sync.explain())
+
     first = loop.metrics_log[0]["nll"]
     last = loop.metrics_log[-1]["nll"]
     print("\nstep,nll,accuracy")

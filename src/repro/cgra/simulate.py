@@ -16,7 +16,12 @@ Two outputs per run:
   * a :class:`SimReport` putting the *simulated* per-stage latency next
     to the :func:`repro.core.netmodel.stage_time` analytic prediction —
     the emulator's cross-check, stage by stage, with the CGRA placement
-    (or host fallback) that produced the compute rate.
+    (or host fallback) that produced the compute rate.  Stages execute
+    in :class:`~repro.core.executor.ExecutionPlan` wave order: within a
+    wave, stages on different mesh axes overlap on disjoint clock
+    branches, so ``report.t_end`` (overlapped end-to-end) validates the
+    :func:`repro.core.netmodel.program_time` overlap model while the
+    per-stage sum ``report.t_sim`` remains the serial cost.
 
 The simulator needs no mesh and no shard_map: multi-axis programs
 (hierarchical RS/AR/AG) run over a simulated rank *grid*, each stage
@@ -56,6 +61,7 @@ class SimStage:
     t_sim: float                  # simulated wall time of the stage (s)
     t_model: Optional[float]      # netmodel.stage_time prediction (s)
     placement: Any = None
+    wave: int = 0                 # ExecutionPlan wave the stage ran in
 
     @property
     def deviation(self) -> Optional[float]:
@@ -68,6 +74,12 @@ class SimStage:
 class SimReport:
     stages: list[SimStage]
     axes: dict                    # axis name -> size
+    # end-to-end simulated latency with wave overlap (stages of one wave
+    # on different axes run concurrently); ≤ t_sim, the serial stage sum
+    t_end: float = 0.0
+    # netmodel.program_time of the same plan — the analytic overlap
+    # model's prediction for t_end (None without a compile topology)
+    t_program_model: Optional[float] = None
 
     @property
     def t_sim(self) -> float:
@@ -78,17 +90,22 @@ class SimReport:
         return sum(s.t_model or 0.0 for s in self.stages)
 
     def table(self) -> str:
-        rows = [("kind", "axis", "sched", "sim_us", "model_us", "placement")]
+        rows = [("wv", "kind", "axis", "sched", "sim_us", "model_us",
+                 "placement")]
         for s in self.stages:
             pl = s.placement.describe() if s.placement is not None else "-"
-            rows.append((s.kind, s.axis or "-", s.schedule or "-",
+            rows.append((str(s.wave), s.kind, s.axis or "-",
+                         s.schedule or "-",
                          f"{s.t_sim * 1e6:9.2f}",
                          f"{(s.t_model or 0.0) * 1e6:9.2f}", pl))
-        rows.append(("TOTAL", "", "", f"{self.t_sim * 1e6:9.2f}",
+        rows.append(("", "TOTAL", "", "", f"{self.t_sim * 1e6:9.2f}",
                      f"{self.t_model * 1e6:9.2f}", ""))
-        w = [max(len(r[c]) for r in rows) for c in range(5)]
+        rows.append(("", "END-TO-END", "", "", f"{self.t_end * 1e6:9.2f}",
+                     f"{(self.t_program_model or 0.0) * 1e6:9.2f}",
+                     "(waves overlapped)"))
+        w = [max(len(r[c]) for r in rows) for c in range(6)]
         return "\n".join(
-            "  ".join(r[c].ljust(w[c]) for c in range(5)) + "  " + r[5]
+            "  ".join(r[c].ljust(w[c]) for c in range(6)) + "  " + r[6]
             for r in rows)
 
 
@@ -169,11 +186,21 @@ class SwitchSim:
     # -- public entry -------------------------------------------------------
 
     def run(self, compiled, *inputs) -> tuple[Any, SimReport]:
-        """Execute ``compiled`` over per-rank inputs.
+        """Execute ``compiled`` over per-rank inputs, wave by wave.
 
         Every input is shaped ``grid + local_shape`` (leading dims in
         topology-axis order).  Returns ``(outputs, report)`` with outputs
         in the same convention.
+
+        Stages are walked in :class:`~repro.core.executor.ExecutionPlan`
+        wave order.  Within one wave, stages traversing *different* mesh
+        axes occupy disjoint links and advance independent clock branches
+        from the wave-start snapshot (true overlap); stages sharing an
+        axis serialize on that axis's rings.  The wave ends at the
+        element-wise max of its branches — so ``report.t_end`` measures
+        the overlapped end-to-end latency the analytic
+        :func:`repro.core.netmodel.program_time` predicts, while the
+        per-stage ``t_sim`` entries still sum to the serial cost.
         """
         src = compiled.source
         if len(inputs) != src.num_inputs:
@@ -188,27 +215,43 @@ class SwitchSim:
                     f"got shape {x.shape}")
             env[i] = x.reshape((self.n_ranks,) + x.shape[len(self.grid):])
 
+        plan = getattr(compiled, "plan", None)
+        waves = plan.waves if plan is not None \
+            else tuple((i,) for i in range(len(compiled.stages)))
         clock = np.zeros((self.n_ranks,), np.float64)
-        stages: list[SimStage] = []
-        for st in compiled.stages:
-            if st.ir is None:
-                raise ValueError(
-                    f"stage {st.kind!r} carries no StageIR — the program "
-                    "was compiled by a pipeline the simulator cannot "
-                    "interpret (use the default pipeline)")
-            t0 = float(clock.max())
-            args = [env[v] for v in st.in_vids]
-            outs = self._exec(st, args, clock)
-            for vid, o in zip(st.out_vids, outs):
-                env[vid] = np.asarray(o)
-            t_sim = float(clock.max()) - t0
-            stages.append(SimStage(
-                st.kind, st.axis, st.schedule, t_sim,
-                self._model_time(st, args), st.placement))
+        rows: dict[int, SimStage] = {}
+        for wi, wave in enumerate(waves):
+            branch: dict[str, Array] = {}
+            for si in wave:
+                st = compiled.stages[si]
+                if st.ir is None:
+                    raise ValueError(
+                        f"stage {st.kind!r} carries no StageIR — the "
+                        "program was compiled by a pipeline the simulator "
+                        "cannot interpret (use the default pipeline)")
+                c = branch.get(st.axis)
+                if c is None:
+                    c = branch[st.axis] = clock.copy()
+                t0 = float(c.max())
+                args = [env[v] for v in st.in_vids]
+                outs = self._exec(st, args, c)
+                for vid, o in zip(st.out_vids, outs):
+                    env[vid] = np.asarray(o)
+                t_sim = float(c.max()) - t0
+                rows[si] = SimStage(
+                    st.kind, st.axis, st.schedule, t_sim,
+                    self._model_time(st, args), st.placement, wi)
+            if branch:
+                clock = np.maximum.reduce(list(branch.values()))
 
         outs = tuple(env[v].reshape(self.grid + env[v].shape[1:])
                      for v in src.outputs)
-        report = SimReport(stages, dict(self.sizes))
+        t_prog = None
+        topo = getattr(compiled, "topology", None)
+        if plan is not None and topo is not None:
+            t_prog = netmodel.program_time(plan, topo)
+        report = SimReport([rows[i] for i in sorted(rows)],
+                           dict(self.sizes), float(clock.max()), t_prog)
         return (outs[0] if len(outs) == 1 else outs), report
 
     # -- per-stage analytic prediction --------------------------------------
@@ -217,6 +260,10 @@ class SwitchSim:
         m = int(args[0].nbytes // self.n_ranks) if args else 0
         if st.kind == "allreduce+alltoall" and len(args) == 2:
             m = int((args[0].nbytes + args[1].nbytes) // self.n_ranks)
+        elif st.kind == "map" and st.ir.bytes_in is not None:
+            # the plan-consistent map payload: what the stage produces
+            # (pack = sum of operands, split = one slice of the bucket)
+            m = int(st.ir.bytes_in)
         axis = st.axis
         n = self.sizes.get(axis, 1)
         p = self.nets.get(axis, netmodel.PAPER)
@@ -251,13 +298,13 @@ class SwitchSim:
         out = self._apply_map(fn, args)
         p = netmodel.PAPER
         pl = st.placement
+        # a map streams what it produces: a Coalesce bucket pack emits the
+        # sum of its operands, a bucket split only its own slice
+        m = int(out.nbytes // self.n_ranks)
         if pl is not None and not pl.fits:
-            self._advance_local(clock, netmodel.host_fallback_time(
-                int(args[0].nbytes // self.n_ranks), p))
+            self._advance_local(clock, netmodel.host_fallback_time(m, p))
         else:
-            self._advance_local(
-                clock, (args[0].nbytes // self.n_ranks)
-                / netmodel.accel_rate(p, pl))
+            self._advance_local(clock, m / netmodel.accel_rate(p, pl))
         return (out,)
 
     # .. ring all-reduce family .............................................

@@ -18,15 +18,22 @@ Layering:
               LowerTopology (resolve axes against the compile Topology;
               rewrite a compound/"auto" reduce into RS(inner) →
               AR(outer, coded) → AG(inner), the codec on the thin outer
-              hop only) → FuseHops (first-class same-axis fusion
+              hop only) → Coalesce (bucket per-leaf reductions into
+              flat-buffer bucket collectives, sized from the netmodel
+              crossover) → FuseHops (first-class same-axis fusion
               patterns) → SelectSchedule (latency- vs bandwidth-optimal
               rings via CollectiveConfig.latency_optimal_below + the
               netmodel cost model, per the link tier each stage actually
               traverses) → Emit (one shard_map program, the "CGRA
-              binary"; each stage runs over its own axis)
+              binary"; each stage runs over its own axis, scheduled by
+              an explicit ExecutionPlan of dependency waves)
+  executor    ExecutionPlan IR: per-stage dependency edges + concurrent
+              waves — what CompiledProgram runs, netmodel.program_time
+              costs, and the dataplane simulator overlaps
   netmodel    analytic network emulator (paper Table II), two link tiers
               (fast intra-pod ICI, ~10× thinner inter-pod DCI) — feeds
-              both the benchmark figures and the SelectSchedule cost model
+              the benchmark figures, the SelectSchedule cost model, and
+              program_time (plan critical path with per-tier overlap)
   topology    hierarchical multi-pod sync (thin wrapper over the compiled
               pipeline) + straggler masking
   switchops   SPU instruction registry (jnp refs + Pallas kernels)
@@ -60,6 +67,7 @@ from repro.core.program import (AllGather, AllToAll, Bcast, DagNode,
                                 ReduceScatter, Scan, SwitchProgram, Wire)
 from repro.core.compiler import (AxisSpec, CompiledProgram, Stage, Topology,
                                  compile_program, compile_rank_local)
+from repro.core.executor import ExecutionPlan, build_plan
 from repro.core.tracing import (Value, all_gather, all_to_all, bcast,
                                 ef_reduce, reduce, reduce_scatter, scan,
                                 trace, wire)
@@ -72,6 +80,7 @@ __all__ = [
     "ReduceScatter", "Scan", "SwitchProgram", "Wire", "DagNode", "DagProgram",
     "ErrorFeedback", "AxisSpec", "Topology",
     "CompiledProgram", "Stage", "compile_program", "compile_rank_local",
+    "ExecutionPlan", "build_plan",
     "Value", "trace", "map", "reduce", "reduce_scatter", "all_gather",
     "all_to_all", "scan", "bcast", "wire", "ef_reduce",
 ]

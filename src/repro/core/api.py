@@ -18,10 +18,15 @@ stays in GSPMD-auto land.  See train/step.py for the integration.
 All ``acis*`` gradient syncs are one traced switch program — per leaf a
 ``reduce(axis="auto")`` (plus error-feedback target/residual maps on the
 compressed backends) — compiled once through the Legalize → LowerTopology
-→ FuseHops → SelectSchedule → Emit pipeline against the engine's
-:class:`~repro.core.compiler.Topology` and cached per pytree structure.
-The hierarchical RS/AR/AG schedule is no longer a call-site convention:
-it is what LowerTopology emits for a multi-axis reduce.
+→ Coalesce → FuseHops → SelectSchedule → Emit pipeline against the
+engine's :class:`~repro.core.compiler.Topology` and cached per pytree
+structure.  The hierarchical RS/AR/AG schedule is no longer a call-site
+convention: it is what LowerTopology emits for a multi-axis reduce — and
+the per-leaf collectives are not what actually runs: the Coalesce pass
+buckets compatible leaves into flat-buffer bucket collectives
+(``CollectiveConfig.bucket_bytes``), so a many-leaf pytree syncs in a
+few streaming buckets executed over an explicit
+:class:`~repro.core.executor.ExecutionPlan`.
 """
 
 from __future__ import annotations
@@ -52,6 +57,12 @@ class CollectiveConfig:
     compressor: str = "int8"
     topk_ratio: float = 0.01
     latency_optimal_below: int = 16384  # bytes; ring-vs-latency crossover
+    # Coalesce bucket size (bytes): per-leaf reductions sharing an
+    # axis/monoid/codec are concatenated into flat buckets of this many
+    # bytes, one collective per bucket.  None = derive from the cost
+    # model's crossover for the axis traversed
+    # (repro.core.netmodel.bucket_bytes); 0 = disable bucketing.
+    bucket_bytes: Optional[int] = None
     # switch CGRA the PlaceCGRA pass maps stage bodies onto; None = the
     # paper's Table II device (repro.cgra.device.PAPER_CGRA)
     cgra_device: Optional[Any] = None
@@ -72,6 +83,7 @@ class CollectiveEngine:
         self.inner_axis = inner_axis
         self.outer_axis = outer_axis
         self._sync_cache: dict = {}   # pytree structure → CompiledProgram
+        self._last_sync = None        # most recently built/fetched program
 
     # -- properties ---------------------------------------------------------
 
@@ -168,8 +180,6 @@ class CollectiveEngine:
                 treedef, outs[len(leaves):])
             return synced, new_state
         outs = compiled(*leaves)
-        if len(leaves) == 1:
-            outs = (outs,)
         return jax.tree_util.tree_unflatten(treedef, outs), state
 
     def _sync_program(self, treedef, avals: tuple,
@@ -197,6 +207,7 @@ class CollectiveEngine:
         key = (treedef, avals, n_total, tuple(sorted(sizes.items())))
         hit = self._sync_cache.get(key)
         if hit is not None:
+            self._last_sync = hit
             return hit
 
         def _mean(y):
@@ -239,7 +250,15 @@ class CollectiveEngine:
             prog, inner, axis_size=sizes.get(inner), config=cfg,
             in_avals=in_avals, topology=self.topology(axis_size=sizes))
         self._sync_cache[key] = compiled
+        self._last_sync = compiled
         return compiled
+
+    def last_sync_program(self):
+        """The most recently compiled (or cache-hit) gradient-sync
+        :class:`~repro.core.compiler.CompiledProgram`, or None before the
+        first sync — the stable way for drivers to print ``explain()`` /
+        ``program_time()`` for the program that actually ran."""
+        return self._last_sync
 
     # -- generic ops (used by MoE dispatch, GCN, examples) -------------------
 

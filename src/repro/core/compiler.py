@@ -13,33 +13,47 @@ generation → scheduling) as five composable passes:
      hierarchical RS(inner) → REDUCE(outer) → AG(inner) schedule, with
      any sunk wire codec riding the *outer* (thin inter-pod) hop only —
      ACiS processing placed exactly where the flows converge.
-  3. :class:`FuseHops`   — pattern-match fusion opportunities.  Each rule
+  3. :class:`Coalesce`   — execution planning, part one: bucket the
+     per-leaf REDUCE / error-feedback REDUCE+DELIVERED units that share
+     an axis, monoid and wire codec into flat-buffer **bucket stages**
+     (concat the leaves, run one collective per fixed-byte bucket sized
+     from the cost model's latency/bandwidth crossover, split the
+     results back per leaf), so a many-leaf gradient sync pays the
+     per-collective ring latency once per bucket instead of once per
+     tensor — the SwitchML/ACCL+ streaming-aggregation shape.
+  4. :class:`FuseHops`   — pattern-match fusion opportunities.  Each rule
      is a first-class :class:`FusionPattern` over the DAG (paper Fig. 5
      AG∘scan∘AG, the NAS-IS AR+A2A pair, map-into-hop fusion, RS∘AG →
      one all-reduce schedule, the error-feedback REDUCE+DELIVERED pair);
      matched nodes are grouped into :class:`StageIR` units — same-axis
      only — and topologically ordered.
-  4. :class:`SelectSchedule` — pick the latency- vs bandwidth-optimal ring
+  5. :class:`SelectSchedule` — pick the latency- vs bandwidth-optimal ring
      for every all-reduce stage by propagating per-rank payload bytes
      through the DAG and consulting ``CollectiveConfig.
      latency_optimal_below`` plus the analytic cost model in
      :mod:`repro.core.netmodel` — evaluated against the link tier of the
      axis the stage actually traverses (fast ICI vs thin DCI).
-  5. :class:`PlaceCGRA`  — map every stage's compute body (fused MAPs,
+  6. :class:`PlaceCGRA`  — map every stage's compute body (fused MAPs,
      monoid/codec combines, look-aside compressors) onto the switch CGRA
      grid (:mod:`repro.cgra`): trace to a jaxpr, lower to an op-graph,
      list-schedule + place.  Each stage gets a ``Placement`` (PEs, depth,
      II → sustained rate) or an explicit host-fallback the cost model
      charges as a PCIe + MPI detour.
-  6. :class:`Emit`       — lower every stage to a rank-local callable; the
+  7. :class:`Emit`       — lower every stage to a rank-local callable; the
      emitted :class:`CompiledProgram` executes them over a value
      environment (multi-input / multi-output programs are native), each
-     stage over its own axis.
+     stage over its own axis, following an explicit
+     :class:`~repro.core.executor.ExecutionPlan` — execution planning,
+     part two: stages carry dependency edges derived from the DAG and
+     independent stages are grouped into concurrent waves, which is what
+     :func:`repro.core.netmodel.program_time` costs as a critical path
+     and the dataplane simulator executes with real overlap.
 
 `compile_program` wraps the result in `jax.shard_map` + `jax.jit` — the
 "CGRA binary".  The emitted program records its fused stage list, the
-chosen schedules, and the per-stage axes so tests (and the roofline
-accounting) can verify what was fused, exactly like inspecting the
+chosen schedules, the per-stage axes and the wave structure
+(``CompiledProgram.explain()``) so tests (and the roofline accounting)
+can verify what was fused and what overlaps, exactly like inspecting the
 paper's generated schedule.
 """
 
@@ -54,7 +68,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from repro.core import collectives, fused, lookaside, netmodel, ring
+from repro.core import collectives, executor, fused, lookaside, netmodel, ring
 from repro.core.program import (AUTO_AXIS, COLLECTIVE_KINDS, DagNode,
                                 DagProgram, Node, OpKind, SwitchProgram)
 from repro.core.tracing import trace
@@ -161,6 +175,10 @@ class CompileContext:
     net: netmodel.NetParams = netmodel.PAPER
     dag: Optional[DagProgram] = None    # current form, updated per pass
     topology: Optional[Topology] = None
+    # memo for _propagate_avals: (dag object, aval map).  Coalesce and
+    # SelectSchedule both need per-value avals; when Coalesce leaves the
+    # DAG untouched (the common case) the eval_shape walk runs once.
+    aval_memo: Optional[tuple] = None
 
     @property
     def latency_optimal_below(self) -> Optional[int]:
@@ -235,15 +253,29 @@ class Stage:
 
 @dataclasses.dataclass
 class CompiledProgram:
-    """Rank-local executable: stages run in order over a value environment.
+    """Rank-local executable: stages run over a value environment following
+    an explicit :class:`~repro.core.executor.ExecutionPlan`.
 
     Every stage carries its own communication axis (stamped by
     LowerTopology), so one program may span several mesh axes — there is
-    no single program-wide axis any more.
+    no single program-wide axis any more.  The plan (dependency edges +
+    concurrency waves, derived from the DAG at construction) is what the
+    analytic cost model prices (:func:`repro.core.netmodel.program_time`)
+    and the dataplane simulator executes wave by wave.
+
+    Calling the program always returns a **tuple**, one entry per program
+    output — single-output programs return a 1-tuple, not a bare array.
     """
 
     stages: Sequence[Stage]
     source: DagProgram
+    topology: Optional[Topology] = None
+    plan: Optional[executor.ExecutionPlan] = None
+
+    def __post_init__(self):
+        if self.plan is None:
+            self.plan = executor.build_plan(
+                self.stages, self.source.num_inputs, self.source.outputs)
 
     def stage_kinds(self) -> list[str]:
         return [s.kind for s in self.stages]
@@ -258,10 +290,15 @@ class CompiledProgram:
         return [s.placement for s in self.stages]
 
     def explain(self) -> str:
-        """Readable per-stage table: what was fused, over which axis, on
-        which ring schedule, with which wire codec, and where the compute
-        body landed (CGRA placement or explicit host fallback)."""
-        rows = [("#", "kind", "axis", "schedule", "codec", "placement")]
+        """Readable per-stage table: what was fused, which wave of the
+        execution plan it runs in (stages sharing a wave are independent
+        and may overlap), over which axis, on which ring schedule, with
+        which wire codec, and where the compute body landed (CGRA
+        placement or explicit host fallback)."""
+        wave_of = {i: w for w, grp in enumerate(self.plan.waves)
+                   for i in grp}
+        rows = [("#", "wave", "kind", "axis", "schedule", "codec",
+                 "placement")]
         for i, st in enumerate(self.stages):
             codec = "-"
             if st.ir is not None:
@@ -273,19 +310,30 @@ class CompiledProgram:
                         codec = f"ef[{nd.op.ef.compressor}]"
             pl = st.placement.describe() if st.placement is not None \
                 else "-"
-            rows.append((str(i), st.kind, st.axis or "-",
-                         st.schedule or "-", codec, pl))
-        widths = [max(len(r[c]) for r in rows) for c in range(5)]
+            rows.append((str(i), str(wave_of.get(i, "-")), st.kind,
+                         st.axis or "-", st.schedule or "-", codec, pl))
+        ncols = len(rows[0]) - 1         # last column stays ragged
+        widths = [max(len(r[c]) for r in rows) for c in range(ncols)]
         lines = [f"program {self.source.name!r} "
                  f"({self.source.num_inputs} in, "
                  f"{len(self.source.outputs)} out, "
-                 f"{len(self.stages)} stages)"]
+                 f"{len(self.stages)} stages, "
+                 f"{self.plan.n_waves} waves)"]
         for j, r in enumerate(rows):
             lines.append("  " + "  ".join(
-                r[c].ljust(widths[c]) for c in range(5)) + "  " + r[5])
+                r[c].ljust(widths[c]) for c in range(ncols))
+                + "  " + r[ncols])
             if j == 0:
-                lines.append("  " + "-" * (sum(widths) + 8 + len(r[5])))
+                lines.append("  " + "-" * (sum(widths) + 2 * ncols
+                                           + len(r[ncols])))
         return "\n".join(lines)
+
+    def program_time(self, topology: Optional[Topology] = None) -> float:
+        """Analytic wall time of the whole plan (critical path with
+        per-tier overlap) — :func:`repro.core.netmodel.program_time`
+        against this program's compile topology."""
+        topo = topology if topology is not None else self.topology
+        return netmodel.program_time(self.plan, topo)
 
     def axes(self) -> list[str]:
         """Distinct communication axes, in first-use order."""
@@ -295,7 +343,7 @@ class CompiledProgram:
                 seen.append(s.axis)
         return seen
 
-    def __call__(self, *xs: PyTree) -> PyTree:
+    def __call__(self, *xs: PyTree) -> tuple:
         n_in = self.source.num_inputs
         if len(xs) == 1 and n_in > 1 and isinstance(xs[0], (tuple, list)):
             xs = tuple(xs[0])      # chain-shim spelling: one tuple argument
@@ -303,13 +351,7 @@ class CompiledProgram:
             raise TypeError(
                 f"program {self.source.name!r} takes {n_in} inputs, "
                 f"got {len(xs)}")
-        env: dict[int, PyTree] = dict(enumerate(xs))
-        for st in self.stages:
-            outs = st.run(tuple(env[v] for v in st.in_vids), st.axis)
-            for vid, o in zip(st.out_vids, outs):
-                env[vid] = o
-        outs = tuple(env[v] for v in self.source.outputs)
-        return outs[0] if len(outs) == 1 else outs
+        return executor.execute(self.plan, xs)
 
 
 # ---------------------------------------------------------------------------
@@ -528,7 +570,512 @@ class LowerTopology:
 
 
 # ---------------------------------------------------------------------------
-# Pass 3: FuseHops — first-class fusion patterns
+# Pass 3: Coalesce — bucket per-leaf reductions into flat-buffer stages
+# ---------------------------------------------------------------------------
+
+def _propagate_avals(dag: DagProgram,
+                     ctx: CompileContext) -> dict[int, jax.ShapeDtypeStruct]:
+    """Best-effort rank-local aval for every DAG value.
+
+    Program inputs come from ``ctx.in_avals``; MAP outputs via
+    ``jax.eval_shape`` (a map whose body queries ``lax.axis_size`` —
+    e.g. the hier pad/mean bookkeeping — simply stays unknown);
+    collectives preserve their input aval except AG/RS, which scale the
+    leading dim by their axis size when it is known.
+    """
+    if ctx.in_avals is None:
+        return {}
+    if ctx.aval_memo is not None and ctx.aval_memo[0] is dag:
+        return ctx.aval_memo[1]
+    avals: dict[int, jax.ShapeDtypeStruct] = {}
+    for i, a in enumerate(ctx.in_avals):
+        try:
+            avals[i] = jax.ShapeDtypeStruct(tuple(a.shape), a.dtype)
+        except Exception:
+            pass
+    for nd in dag.nodes:
+        ins = [avals.get(v) for v in nd.inputs]
+        if any(a is None for a in ins):
+            continue
+        k = nd.op.kind
+        if k == OpKind.MAP:
+            try:
+                out = jax.eval_shape(nd.op.fn, *ins)
+            except Exception:
+                continue
+            if hasattr(out, "shape") and hasattr(out, "dtype"):
+                avals[nd.out] = jax.ShapeDtypeStruct(tuple(out.shape),
+                                                     out.dtype)
+        elif k == OpKind.ALLGATHER:
+            n = SelectSchedule._axis_size(nd, ctx)
+            if n and ins[0].shape:
+                avals[nd.out] = jax.ShapeDtypeStruct(
+                    (ins[0].shape[0] * n,) + tuple(ins[0].shape[1:]),
+                    ins[0].dtype)
+        elif k == OpKind.REDUCE_SCATTER:
+            n = SelectSchedule._axis_size(nd, ctx)
+            if n and ins[0].shape:
+                avals[nd.out] = jax.ShapeDtypeStruct(
+                    (max(ins[0].shape[0] // n, 1),)
+                    + tuple(ins[0].shape[1:]), ins[0].dtype)
+        elif k != OpKind.WIRE:
+            avals[nd.out] = ins[0]
+    ctx.aval_memo = (dag, avals)
+    return avals
+
+
+def _aval_bytes(aval) -> int:
+    size = int(math.prod(aval.shape)) if aval.shape else 1
+    return size * jnp.dtype(aval.dtype).itemsize
+
+
+def _pack_fn(sizes: tuple[int, ...]) -> Callable:
+    """Emit-side shim: flatten every leaf and concat into one flat bucket.
+
+    The bucket layout (split offsets) was computed from the compile
+    ``in_avals`` — if a leaf shows up at run time with a different
+    element count, slicing would silently hand every downstream leaf the
+    wrong gradient, so the mismatch is rejected at trace time instead.
+    """
+    def pack(*xs):
+        for i, (x, s) in enumerate(zip(xs, sizes)):
+            if x.size != s:
+                raise ValueError(
+                    f"Coalesce bucket pack: leaf {i} has {x.size} "
+                    f"elements at run time but the compile in_avals "
+                    f"promised {s} — pass in_avals matching the "
+                    "rank-local shapes (bucket offsets are computed "
+                    "from them)")
+        return jnp.concatenate([x.reshape(-1) for x in xs], axis=0)
+    return pack
+
+
+def _split_fn(offset: int, size: int) -> Callable:
+    """Emit-side shim: slice one leaf back out of a reduced flat bucket,
+    shaped like the original operand (runtime shape, not the aval — a
+    rank-local leading dim of 1 survives the round trip)."""
+    def split(b, orig):
+        return b[offset:offset + size].reshape(orig.shape)
+    return split
+
+
+@dataclasses.dataclass
+class _ReduceUnit:
+    """One bucketable per-leaf reduction — a plain REDUCE, an
+    error-feedback REDUCE(+DELIVERED sibling, + trailing outer reduces),
+    or a whole LowerTopology hierarchical pad→RS…→AR→…AG→unpad chain.
+    All three are elementwise across ranks and shape-preserving end to
+    end, which is exactly what makes concat-then-split legal."""
+
+    kind: str                       # "reduce" | "ef" | "hier"
+    vin: int                        # the leaf value feeding the unit
+    out_red: int                    # the unit's reduced output value
+    out_dlv: Optional[int]          # DELIVERED sibling output (ef only)
+    nodes: tuple[DagNode, ...]      # claimed by this unit
+    key: tuple                      # bucketing group key
+    nbytes: int
+    size: int
+    shape: tuple
+    ops: dict                       # replay ops for the bucket rebuild
+
+
+class Coalesce:
+    """Bucket same-axis/monoid/codec per-leaf reductions into flat-buffer
+    bucket stages.
+
+    A transformer's gradient sync emits one reduce per pytree leaf —
+    hundreds of collectives, each paying the full ring latency.  This
+    pass concatenates the leaves of compatible reductions into fixed-byte
+    buckets (sized by :func:`repro.core.netmodel.bucket_bytes` from the
+    latency/bandwidth crossover of the axis actually traversed, or the
+    ``CollectiveConfig.bucket_bytes`` override; ``0`` disables the pass),
+    runs **one** collective per bucket, and splits the results back per
+    leaf — pack/split are ordinary MAP shims, so the per-leaf API is
+    unchanged and `gradient_sync` numerics are preserved: exactly (up to
+    summation order) for plain reductions and hierarchical chains, and
+    within the compression's own error bars for blockwise error-feedback
+    compressors (block boundaries shift across the concat).  Top-k EF is
+    deliberately *not* bucketized — global selection over a concat would
+    change which gradients ship — and data-dependent reductions never
+    share a bucket.
+
+    Runs between LowerTopology and FuseHops: axes are resolved (the
+    group key is exact) and the hierarchical RS/AR/AG chains LowerTopology
+    emitted are bucketized whole — the bucket replays the same chain
+    once.  Leaves whose aval is unknown, groups of one, and buckets of
+    one stay untouched.
+    """
+
+    name = "coalesce"
+
+    def __init__(self, bucket_bytes: Optional[int] = None):
+        self.bucket_bytes = bucket_bytes
+
+    def run(self, dag: DagProgram, ctx: CompileContext) -> DagProgram:
+        override = self.bucket_bytes
+        if override is None and ctx.config is not None:
+            override = getattr(ctx.config, "bucket_bytes", None)
+        if override == 0 or ctx.in_avals is None:
+            return dag
+        avals = _propagate_avals(dag, ctx)
+        units = self._find_units(dag, avals)
+        buckets = self._form_buckets(units, ctx, override, dag)
+        if not buckets:
+            return dag
+        return self._rewrite(dag, buckets)
+
+    # -- unit discovery ------------------------------------------------------
+
+    def _find_units(self, dag: DagProgram,
+                    avals: dict) -> list[_ReduceUnit]:
+        users = dag.users()
+        out_set = set(dag.outputs)
+        claimed: set[int] = set()
+
+        def sole_user(vid: int) -> Optional[DagNode]:
+            us = users.get(vid, [])
+            if len(us) == 1 and vid not in out_set \
+                    and us[0].out not in claimed:
+                return us[0]
+            return None
+
+        # DELIVERED siblings indexed once — _match_ef must not rescan the
+        # whole DAG per EF reduce (O(leaves²) on big gradient pytrees)
+        delivered: dict[tuple, DagNode] = {}
+        for nd in dag.nodes:
+            if nd.op.kind == OpKind.DELIVERED:
+                delivered.setdefault((nd.inputs, nd.op.axis, nd.op.ef), nd)
+
+        units: list[_ReduceUnit] = []
+        for nd in dag.nodes:
+            if nd.out in claimed or not nd.inputs:
+                continue
+            aval = avals.get(nd.inputs[0])
+            u = None
+            if aval is not None:
+                if nd.op.kind == OpKind.REDUCE and nd.op.ef is not None:
+                    u = self._match_ef(nd, delivered, aval, claimed,
+                                       sole_user)
+                elif nd.op.kind == OpKind.REDUCE:
+                    u = self._match_reduce(nd, aval)
+                elif nd.op.kind == OpKind.MAP and nd.op.name == "hier_pad":
+                    u = self._match_hier(nd, aval, sole_user)
+            if u is not None:
+                units.append(u)
+                claimed.update(g.out for g in u.nodes)
+        return units
+
+    @staticmethod
+    def _leaf_meta(aval) -> tuple[int, int, tuple, str]:
+        size = int(math.prod(aval.shape)) if aval.shape else 1
+        return (_aval_bytes(aval), size, tuple(aval.shape),
+                str(jnp.dtype(aval.dtype)))
+
+    def _match_reduce(self, nd: DagNode, aval) -> Optional[_ReduceUnit]:
+        nbytes, size, shape, dt = self._leaf_meta(aval)
+        key = ("reduce", nd.op.axis, nd.op.monoid.name, nd.op.codec.name,
+               dt)
+        return _ReduceUnit("reduce", nd.inputs[0], nd.out, None, (nd,),
+                           key, nbytes, size, shape, {"red": nd.op})
+
+    def _match_ef(self, nd: DagNode, delivered: dict, aval,
+                  claimed: set, sole_user) -> Optional[_ReduceUnit]:
+        if nd.op.ef.compressor == "topk":
+            # top-k selects globally over its operand: run over a concat
+            # bucket it would starve small-magnitude leaves in favor of
+            # large ones — a semantic change, not a layout change.  The
+            # blockwise compressors (int8 shared-scale: one scale per
+            # 256-element block) only shift block boundaries, which stays
+            # within the compression's own error bars.
+            return None
+        dlv = delivered.get((nd.inputs, nd.op.axis, nd.op.ef))
+        if dlv is not None and dlv.out in claimed:
+            dlv = None
+        # trailing plain outer reduces (the hierarchical EF lowering:
+        # compress at the innermost tier, reduce the outer tiers exactly)
+        outer: list[DagNode] = []
+        cur = nd
+        while True:
+            u = sole_user(cur.out)
+            if (u is not None and u.op.kind == OpKind.REDUCE
+                    and u.op.ef is None and len(u.inputs) == 1):
+                outer.append(u)
+                cur = u
+            else:
+                break
+        nbytes, size, shape, dt = self._leaf_meta(aval)
+        ef = nd.op.ef
+        key = ("ef", nd.op.axis, nd.op.monoid.name, ef.compressor,
+               round(ef.topk_ratio, 9),
+               tuple((o.op.axis, o.op.monoid.name, o.op.codec.name)
+                     for o in outer),
+               dlv is not None, dt)
+        nodes = (nd,) + tuple(outer) + ((dlv,) if dlv is not None else ())
+        return _ReduceUnit("ef", nd.inputs[0], cur.out,
+                           dlv.out if dlv is not None else None,
+                           nodes, key, nbytes, size, shape,
+                           {"red": nd.op,
+                            "dlv": dlv.op if dlv is not None else None,
+                            "outer": tuple(o.op for o in outer)})
+
+    def _match_hier(self, pad: DagNode, aval,
+                    sole_user) -> Optional[_ReduceUnit]:
+        rs: list[DagNode] = []
+        u = sole_user(pad.out)
+        while u is not None and u.op.kind == OpKind.REDUCE_SCATTER:
+            rs.append(u)
+            u = sole_user(u.out)
+        if not rs or u is None or u.op.kind != OpKind.REDUCE \
+                or u.op.ef is not None:
+            return None
+        red = u
+        ag: list[DagNode] = []
+        u = sole_user(red.out)
+        while u is not None and u.op.kind == OpKind.ALLGATHER:
+            ag.append(u)
+            u = sole_user(u.out)
+        unpad = u
+        if (unpad is None or unpad.op.kind != OpKind.MAP
+                or unpad.op.name != "hier_unpad"
+                or len(unpad.inputs) != 2
+                or unpad.inputs[1] != pad.inputs[0]
+                or len(ag) != len(rs)
+                or [n.op.axis for n in ag]
+                != [n.op.axis for n in reversed(rs)]):
+            return None
+        nbytes, size, shape, dt = self._leaf_meta(aval)
+        key = ("hier", tuple(n.op.axis for n in rs), red.op.axis,
+               red.op.monoid.name, red.op.codec.name, dt)
+        nodes = (pad,) + tuple(rs) + (red,) + tuple(ag) + (unpad,)
+        return _ReduceUnit("hier", pad.inputs[0], unpad.out, None, nodes,
+                           key, nbytes, size, shape,
+                           {"pad": pad.op, "rs": tuple(n.op for n in rs),
+                            "red": red.op, "ag": tuple(n.op for n in ag),
+                            "unpad": unpad.op})
+
+    # -- bucket formation ----------------------------------------------------
+
+    @staticmethod
+    def _primary_axis(u: _ReduceUnit) -> Optional[str]:
+        """The first link tier the unit's payload traverses (sizes the
+        bucket): the reduce's own axis, or the innermost RS axis of a
+        hierarchical chain."""
+        ax = u.ops["rs"][0].axis if u.kind == "hier" else u.ops["red"].axis
+        return ax if isinstance(ax, str) and ax != AUTO_AXIS else None
+
+    @staticmethod
+    def _value_ancestors(dag: DagProgram) -> dict[int, set[int]]:
+        anc: dict[int, set[int]] = {}
+        for nd in dag.nodes:
+            a: set[int] = set()
+            for v in nd.inputs:
+                a.add(v)
+                a |= anc.get(v, set())
+            anc[nd.out] = a
+        return anc
+
+    def _form_buckets(self, units: list[_ReduceUnit], ctx: CompileContext,
+                      override: Optional[int],
+                      dag: DagProgram) -> list[list[_ReduceUnit]]:
+        """Greedy byte-capped packing, dependency-safe.
+
+        A unit whose input transitively depends on a current bucket
+        member's output must not join that bucket (the pack would need a
+        value the bucket itself produces); it is deferred to a later
+        round and may still bucket with its own level.  A final
+        Kahn check over the bucket graph dissolves any bucket whose
+        grouping would knot buckets into a cycle through intermediate
+        nodes — unbucketed lowering is always legal, just less coalesced
+        (same policy as FuseHops' cross-branch fusion).
+        """
+        anc = self._value_ancestors(dag)
+        groups: dict[tuple, list[_ReduceUnit]] = {}
+        for u in units:
+            groups.setdefault(u.key, []).append(u)
+        buckets: list[list[_ReduceUnit]] = []
+        for us in groups.values():
+            if override:
+                cap = override
+            else:
+                ax = self._primary_axis(us[0])
+                cap = netmodel.bucket_bytes(
+                    ctx.size_of(ax) if ax else None,
+                    ctx.net_of(ax) if ax else netmodel.PAPER)
+            pending = us
+            while len(pending) >= 2:
+                cur: list[_ReduceUnit] = []
+                cur_bytes = 0
+                cur_outs: set[int] = set()
+                deferred: list[_ReduceUnit] = []
+
+                def close():
+                    nonlocal cur, cur_bytes, cur_outs
+                    if len(cur) >= 2:
+                        buckets.append(cur)
+                    cur, cur_bytes, cur_outs = [], 0, set()
+
+                for u in pending:       # definition order throughout
+                    if any(o in anc.get(u.vin, ()) for o in cur_outs):
+                        deferred.append(u)      # retry next round
+                        continue
+                    if cur and cur_bytes + u.nbytes > cap:
+                        close()                 # full: start the next one
+                    cur.append(u)
+                    cur_bytes += u.nbytes
+                    cur_outs.add(u.out_red)
+                    if u.out_dlv is not None:
+                        cur_outs.add(u.out_dlv)
+                close()
+                if len(deferred) >= len(pending):
+                    break       # no progress (unreachable: the first unit
+                    #             of a round always enters cur) — safety
+                pending = deferred
+        return self._drop_cyclic(buckets, anc)
+
+    @staticmethod
+    def _drop_cyclic(buckets: list[list[_ReduceUnit]],
+                     anc: dict[int, set[int]]) -> list[list[_ReduceUnit]]:
+        """Dissolve buckets participating in a bucket-graph cycle.
+
+        Rare shape: two buckets each holding a unit whose input depends
+        (through *another* member of the other bucket) on the first —
+        individually independent units, knotted only by the grouping.
+        """
+        while True:
+            outs_of = [
+                {u.out_red for u in b}
+                | {u.out_dlv for u in b if u.out_dlv is not None}
+                for b in buckets]
+            indeg = [0] * len(buckets)
+            succs: list[list[int]] = [[] for _ in buckets]
+            for i, b in enumerate(buckets):
+                for j, outs in enumerate(outs_of):
+                    if i != j and any(o in anc.get(u.vin, ())
+                                      for u in b for o in outs):
+                        succs[j].append(i)
+                        indeg[i] += 1
+            ready = [i for i, d in enumerate(indeg) if d == 0]
+            seen = 0
+            while ready:
+                i = ready.pop()
+                seen += 1
+                for s in succs[i]:
+                    indeg[s] -= 1
+                    if indeg[s] == 0:
+                        ready.append(s)
+            if seen == len(buckets):
+                return buckets
+            # dissolve a bucket actually ON a cycle, not one merely
+            # downstream of the knot (which Kahn also leaves with
+            # residual indegree)
+            residual = {i for i, d in enumerate(indeg) if d > 0}
+
+            def on_cycle(start: int) -> bool:
+                stack, visited = list(succs[start]), set()
+                while stack:
+                    i = stack.pop()
+                    if i == start:
+                        return True
+                    if i in visited or i not in residual:
+                        continue
+                    visited.add(i)
+                    stack.extend(succs[i])
+                return False
+
+            drop = next(i for i in sorted(residual) if on_cycle(i))
+            buckets = buckets[:drop] + buckets[drop + 1:]
+
+    # -- the rewrite ---------------------------------------------------------
+
+    def _rewrite(self, dag: DagProgram,
+                 buckets: list[list[_ReduceUnit]]) -> DagProgram:
+        claimed_outs = {nd.out for b in buckets for u in b
+                        for nd in u.nodes}
+        producers: dict[int, tuple] = {}
+        for nd in dag.nodes:
+            if nd.out not in claimed_outs:
+                producers[nd.out] = ("node", nd)
+        for bi, b in enumerate(buckets):
+            for u in b:
+                producers[u.out_red] = ("bucket", bi)
+                if u.out_dlv is not None:
+                    producers[u.out_dlv] = ("bucket", bi)
+
+        nodes_out: list[DagNode] = []
+        vmap: dict[int, int] = {i: i for i in range(dag.num_inputs)}
+        next_vid = [dag.num_inputs]
+
+        def emit(op: Node, ins: Sequence[int]) -> int:
+            vid = next_vid[0]
+            next_vid[0] += 1
+            nodes_out.append(DagNode(op, tuple(ins), vid))
+            return vid
+
+        emitted: set[int] = set()
+
+        def get(vid: int) -> int:
+            got = vmap.get(vid)
+            if got is not None:
+                return got
+            tag, obj = producers[vid]
+            if tag == "node":
+                ins = tuple(get(v) for v in obj.inputs)
+                vmap[vid] = emit(obj.op, ins)
+            else:
+                emit_bucket(obj)
+            return vmap[vid]
+
+        def emit_bucket(bi: int) -> None:
+            if bi in emitted:
+                return
+            emitted.add(bi)
+            us = buckets[bi]
+            ins = tuple(get(u.vin) for u in us)
+            pack = emit(Node(OpKind.MAP,
+                             fn=_pack_fn(tuple(u.size for u in us)),
+                             name="bucket_pack", fusable=False), ins)
+            ops = us[0].ops
+            v_dlv = None
+            if us[0].kind == "reduce":
+                v_red = emit(ops["red"], (pack,))
+            elif us[0].kind == "ef":
+                v_red = emit(ops["red"], (pack,))
+                if ops["dlv"] is not None:
+                    v_dlv = emit(ops["dlv"], (pack,))
+                for op in ops["outer"]:
+                    v_red = emit(op, (v_red,))
+            else:                                        # "hier"
+                v = emit(ops["pad"], (pack,))
+                for op in ops["rs"]:
+                    v = emit(op, (v,))
+                v = emit(ops["red"], (v,))
+                for op in ops["ag"]:
+                    v = emit(op, (v,))
+                v_red = emit(ops["unpad"], (v, pack))
+            off = 0
+            for u in us:
+                orig = vmap[u.vin]      # runtime shape donor for the slice
+                split = Node(OpKind.MAP, fn=_split_fn(off, u.size),
+                             name="bucket_split", fusable=False)
+                vmap[u.out_red] = emit(split, (v_red, orig))
+                if u.out_dlv is not None:
+                    dsplit = Node(OpKind.MAP, fn=_split_fn(off, u.size),
+                                  name="bucket_split", fusable=False)
+                    vmap[u.out_dlv] = emit(dsplit, (v_dlv, orig))
+                off += u.size
+
+        for nd in dag.nodes:
+            p = producers.get(nd.out)
+            if p is not None and p[0] == "node":
+                get(nd.out)
+        for v in dag.outputs:
+            get(v)
+        return DagProgram(dag.num_inputs, tuple(nodes_out),
+                          tuple(vmap[v] for v in dag.outputs), dag.name)
+
+
+# ---------------------------------------------------------------------------
+# Pass 4: FuseHops — first-class fusion patterns
 # ---------------------------------------------------------------------------
 
 @dataclasses.dataclass
@@ -870,7 +1417,7 @@ class FuseHops:
 
 
 # ---------------------------------------------------------------------------
-# Pass 4: SelectSchedule — latency- vs bandwidth-optimal rings
+# Pass 5: SelectSchedule — latency- vs bandwidth-optimal rings
 # ---------------------------------------------------------------------------
 
 _RESCHEDULABLE = {"allreduce", "map+allreduce"}
@@ -897,8 +1444,12 @@ class SelectSchedule:
         nbytes = self._value_bytes(ctx)
         out: list[StageIR] = []
         for g in groups:
+            # every stage records its raw per-rank payload (the program
+            # cost model walks the emitted plan stage by stage)
+            b = self._group_bytes(g, nbytes)
             if g.kind not in _RESCHEDULABLE:
-                out.append(g)
+                out.append(dataclasses.replace(g, bytes_in=b)
+                           if b is not None else g)
                 continue
             red = next(nd for nd in g.nodes
                        if nd.op.kind in (OpKind.REDUCE,
@@ -907,18 +1458,35 @@ class SelectSchedule:
                 # the encoded-domain combine only exists as the chunked
                 # RS∘AG walk — there is no latency-ring variant to pick
                 out.append(dataclasses.replace(
-                    g, schedule="bandwidth",
+                    g, bytes_in=b, schedule="bandwidth",
                     desc=f"encoded-domain ({red.op.codec.name}) RS∘AG walk "
                          "(fixed schedule)"))
                 continue
-            b = nbytes.get(g.in_vids[0]) if nbytes is not None else None
+            wire = None
             if b is not None:
                 # what actually travels: the sunk codec shrinks the wire
-                b = int(b * red.op.codec.wire_ratio)
+                wire = int(b * red.op.codec.wire_ratio)
             out.append(dataclasses.replace(
                 g, bytes_in=b,
-                **self._decide(b, ctx, g.axis or ctx.axis_name)))
+                **self._decide(wire, ctx, g.axis or ctx.axis_name)))
         return out
+
+    @staticmethod
+    def _group_bytes(g: StageIR, nbytes: Optional[dict]) -> Optional[int]:
+        if nbytes is None or not g.in_vids:
+            return None
+        if g.kind == "allreduce+alltoall":
+            # the fused-pair model takes the summed per-rank payload
+            vals = [nbytes.get(v) for v in g.in_vids]
+            return sum(vals) if all(v is not None for v in vals) else None
+        if g.kind == "map":
+            # a map streams what it *produces* (a Coalesce split is
+            # address steering — it reads one slice of the bucket, not
+            # the whole buffer; a pack's output is the sum of its inputs)
+            b = nbytes.get(g.out_vids[0])
+            if b is not None:
+                return b
+        return nbytes.get(g.in_vids[0])
 
     def _decide(self, payload: Optional[int], ctx: CompileContext,
                 axis: str) -> dict:
@@ -952,19 +1520,28 @@ class SelectSchedule:
     def _value_bytes(ctx: CompileContext) -> Optional[dict[int, int]]:
         """Per-rank payload bytes for every DAG value, or None if unknown.
 
-        A multi-input MAP is sized as the max over its *known* input
-        sizes, and stays unknown when none are known — sizing it from
-        ``inputs[0]`` alone would let a small first operand mis-drive the
-        latency/bandwidth decision downstream.  AG/RS scale by the size of
-        their own axis (unknown axis size → unknown output).
+        Exact where the aval propagation can see (``jax.eval_shape``
+        sizes MAP bodies, including the Coalesce pack/split shims, whose
+        outputs are nothing like their first input).  Where it cannot
+        (a map querying ``lax.axis_size``), a multi-input MAP falls back
+        to the max over its *known* input sizes, and stays unknown when
+        none are known — sizing it from ``inputs[0]`` alone would let a
+        small first operand mis-drive the latency/bandwidth decision
+        downstream.  AG/RS scale by the size of their own axis (unknown
+        axis size → unknown output).
         """
         if ctx.in_avals is None:
             return None
+        avals = _propagate_avals(ctx.dag, ctx)
         nbytes: dict[int, int] = {}
         for i, aval in enumerate(ctx.in_avals):
             size = int(math.prod(aval.shape)) if aval.shape else 1
             nbytes[i] = size * jnp.dtype(aval.dtype).itemsize
         for nd in ctx.dag.nodes:
+            a = avals.get(nd.out)
+            if a is not None:
+                nbytes[nd.out] = _aval_bytes(a)
+                continue
             k = nd.op.kind
             if k == OpKind.MAP:
                 known = [nbytes[v] for v in nd.inputs if v in nbytes]
@@ -999,7 +1576,7 @@ class SelectSchedule:
 
 
 # ---------------------------------------------------------------------------
-# Pass 5: PlaceCGRA — map stage compute bodies onto the switch grid
+# Pass 6: PlaceCGRA — map stage compute bodies onto the switch grid
 # ---------------------------------------------------------------------------
 
 class PlaceCGRA:
@@ -1025,7 +1602,7 @@ class PlaceCGRA:
 
 
 # ---------------------------------------------------------------------------
-# Pass 6: Emit
+# Pass 7: Emit
 # ---------------------------------------------------------------------------
 
 class Emit:
@@ -1201,7 +1778,7 @@ class Emit:
 # The pipeline & public entry points
 # ---------------------------------------------------------------------------
 
-DEFAULT_PIPELINE = (Legalize(), LowerTopology(), FuseHops(),
+DEFAULT_PIPELINE = (Legalize(), LowerTopology(), Coalesce(), FuseHops(),
                     SelectSchedule(), PlaceCGRA(), Emit())
 
 
@@ -1242,7 +1819,7 @@ def compile_rank_local(
                          config=config, in_avals=in_avals,
                          topology=topology)
     stages, final_dag = run_pipeline(dag, ctx, pipeline)
-    return CompiledProgram(stages, final_dag)
+    return CompiledProgram(stages, final_dag, topology=ctx.topology)
 
 
 def compile_program(
@@ -1269,7 +1846,10 @@ def compile_program(
                                   topology=topology)
 
     def run(*xs):
-        return compiled(*xs)
+        # the rank-local program always returns a tuple; the shard_map
+        # callable mirrors out_specs, so a single spec gets a bare array
+        outs = compiled(*xs)
+        return outs[0] if len(outs) == 1 else outs
 
     fn = jax.shard_map(run, mesh=mesh, in_specs=in_specs,
                        out_specs=out_specs, check_vma=False)

@@ -248,6 +248,35 @@ def ring_crossover_bytes(n: int, p: NetParams = PAPER) -> float:
     return hop * p.bw / (1.0 - 2.0 / n)
 
 
+# Fraction of a bucket collective's time the fixed per-collective cost
+# (the hop walk) is allowed to be: the Coalesce pass sizes its flat-buffer
+# gradient buckets so the 2(n-1) ring hops are amortized down to this
+# share of the bandwidth term.
+BUCKET_OVERHEAD_FRACTION = 0.05
+
+# Floor/ceiling for derived bucket sizes (unknown topologies get the
+# floor — roughly the classic DDP bucket scale).
+MIN_BUCKET_BYTES = 1 << 20
+MAX_BUCKET_BYTES = 64 << 20
+
+
+def bucket_bytes(n: Optional[int], p: NetParams = PAPER, *,
+                 overhead_fraction: float = BUCKET_OVERHEAD_FRACTION) -> int:
+    """Coalesce bucket size for an ``n``-rank ring on link tier ``p``.
+
+    Solves ``2(n-1)·hop ≤ f · 2(n-1)/n · m/bw`` for ``m``: the payload at
+    which the fixed hop walk of one more collective costs at most
+    ``overhead_fraction`` of its streaming time.  Sits well above
+    :func:`ring_crossover_bytes`, so bucketized stages are always in the
+    bandwidth-optimal regime.  Unknown ``n`` falls back to the floor.
+    """
+    if n is None or n <= 1:
+        return MIN_BUCKET_BYTES
+    hop = p.fpga_link + p.port
+    m = n * hop * p.bw / overhead_fraction
+    return int(min(max(m, MIN_BUCKET_BYTES), MAX_BUCKET_BYTES))
+
+
 def ring_reduce_scatter_time(n: int, m: int, p: NetParams = PAPER, *,
                              placement=None) -> float:
     """Chunked ring RS: n-1 hops of m/n bytes, one combine per hop."""
@@ -396,3 +425,95 @@ def stage_time(kind: str, n: int, m: int, p: NetParams = PAPER, *,
         return acis_fused_allreduce_alltoall(n, m // 2, m // 2, p,
                                              placement=pl)
     raise ValueError(f"unknown stage kind {kind!r}")
+
+
+# ---------------------------------------------------------------------------
+# program-level cost (ExecutionPlan critical path with per-tier overlap)
+# ---------------------------------------------------------------------------
+
+# How much of a *non-critical* concurrent stage's time the fabric hides
+# when independent stages of one wave run together.  Keyed by the link
+# tier of the stage being overlapped: fast intra-pod rings are (nearly)
+# disjoint and overlap almost fully, thin converging DCI links contend
+# at the inter-pod switch ports, and purely local (axis-less) compute
+# streams behind whatever communication is in flight.  1.0 = the stage
+# is entirely hidden behind the wave's critical path, 0.0 = it
+# serializes (the old sum-of-stages model).
+TIER_OVERLAP = {"ici": 0.9, "dci": 0.6, "local": 1.0}
+
+
+def plan_stage_time(st, topo=None, p: NetParams = PAPER) -> Optional[float]:
+    """:func:`stage_time` for one emitted stage of an ExecutionPlan.
+
+    ``st`` duck-types :class:`repro.core.compiler.Stage` (``kind``,
+    ``axis``, ``schedule``, ``placement``, and an ``ir`` carrying
+    ``bytes_in`` — raw per-rank payload bytes — plus the fused nodes'
+    wire codec).  ``topo`` duck-types :class:`repro.core.compiler.
+    Topology` for per-axis ring sizes and link tiers.  Returns None when
+    the payload or the axis size is unknown.
+    """
+    ir = getattr(st, "ir", None)
+    m = getattr(ir, "bytes_in", None)
+    if m is None:
+        return None
+    n = 1
+    net = p
+    if st.axis:
+        if topo is None or topo.size(st.axis) is None:
+            return None
+        n = topo.size(st.axis)
+        net = topo.net(st.axis)
+    ratio = 1.0
+    for nd in getattr(ir, "nodes", ()):
+        codec = nd.op.codec
+        if getattr(codec, "wire_ratio", 1.0) != 1.0:
+            ratio = float(codec.wire_ratio)
+    try:
+        return stage_time(st.kind, n, m, net, placement=st.placement,
+                          schedule=st.schedule, codec_ratio=ratio)
+    except ValueError:
+        return None
+
+
+def program_time(plan, topo=None, p: NetParams = PAPER, *,
+                 overlap: Optional[dict] = None) -> float:
+    """Predicted wall time of a whole compiled program's ExecutionPlan.
+
+    Within each wave, stages traversing *different* axes use disjoint
+    links and overlap; stages sharing an axis serialize on its ring.
+    The wave costs its longest per-axis chain plus, for every other
+    axis, the un-hidden ``(1 - TIER_OVERLAP[tier])`` remainder of that
+    axis's chain.  Summed over waves this is a critical-path cost:
+    always ≥ the longest single stage and ≤ the plain sum of stage
+    times (the pre-plan model).
+
+    Stages whose payload or axis size is unknown contribute zero — cost
+    what the model can see rather than refusing the whole program.
+    """
+    ov = dict(TIER_OVERLAP)
+    if overlap:
+        ov.update(overlap)
+
+    def tier_of(axis: str) -> str:
+        if not axis:
+            return "local"
+        spec = topo.spec(axis) if topo is not None else None
+        return spec.tier if spec is not None else "ici"
+
+    total = 0.0
+    for wave in plan.waves:
+        per_axis: dict[str, float] = {}
+        for i in wave:
+            st = plan.stages[i]
+            t = plan_stage_time(st, topo, p)
+            if t:
+                per_axis[st.axis] = per_axis.get(st.axis, 0.0) + t
+        if not per_axis:
+            continue
+        longest_axis = max(per_axis, key=per_axis.get)
+        wave_t = per_axis[longest_axis]
+        for ax, t in per_axis.items():
+            if ax != longest_axis:
+                wave_t += (1.0 - ov.get(tier_of(ax), 1.0)) * t
+        total += wave_t
+    return total

@@ -169,7 +169,7 @@ def ring_all_reduce(
     hops of ``size/n`` bytes each (bandwidth-optimal; right for large
     messages).  ``latency_optimal=True``: n-1 hops of full-size messages with
     a combine at every hop — fewer sequential hops for tiny messages (the
-    paper's Fig. 3 small-message regime; see benchmarks/netmodel.py for the
+    paper's Fig. 3 small-message regime; see repro/core/netmodel.py for the
     crossover).
     """
     n = lax.axis_size(axis_name)

@@ -91,7 +91,7 @@ def hierarchical_all_reduce(
             return tracing.map(_mean, r, name="mean") if mean else r
 
         compiled = _COMPILE_CACHE[key] = engine.compile(prog)
-    return compiled(x)
+    return compiled(x)[0]
 
 
 def masked_all_reduce(

@@ -129,7 +129,7 @@ def test_fig5_scan_allgather(mesh8, rng):
         in_avals=(AV((8,), jnp.float32),), axis_size=N)
     assert c.stage_kinds() == ["scan+allgather"]
     x = rng.standard_normal((64,)).astype(np.float32)
-    want = np.asarray(smap(lambda v: c(v), mesh8, P("data"), P(None))(
+    want = np.asarray(smap(lambda v: c(v)[0], mesh8, P("data"), P(None))(
         jnp.asarray(x)))
     got, rep = _sim(eng, N).run(c, x.reshape(N, 8))
     np.testing.assert_allclose(got[0], want, atol=1e-4)
@@ -161,7 +161,7 @@ def test_bcast_allreduce_map_chain(mesh8, rng):
             acis.reduce_scatter(acis.bcast(x, root=3)))),
         in_avals=(AV((16,), jnp.float32),), axis_size=N)
     x = rng.standard_normal((N, 16)).astype(np.float32)
-    want = np.asarray(smap(lambda v: c(v[0])[None], mesh8, P("data"),
+    want = np.asarray(smap(lambda v: c(v[0])[0][None], mesh8, P("data"),
                            P("data"))(jnp.asarray(x)))
     got, _ = _sim(eng, N).run(c, x)
     np.testing.assert_allclose(got, want, atol=1e-4)
@@ -172,7 +172,7 @@ def test_bf16_wire_codec_reduce(mesh8, rng):
     c = eng.compile(lambda x: acis.reduce(acis.wire(BF16, x)),
                     in_avals=(AV((32,), jnp.float32),), axis_size=N)
     x = rng.standard_normal((N, 32)).astype(np.float32)
-    want = np.asarray(smap(lambda v: c(v[0])[None], mesh8, P("data"),
+    want = np.asarray(smap(lambda v: c(v[0])[0][None], mesh8, P("data"),
                            P("data"))(jnp.asarray(x)))
     got, _ = _sim(eng, N).run(c, x)
     np.testing.assert_allclose(got, want, atol=5e-3)
@@ -185,7 +185,7 @@ def test_ef_topk_matches(mesh8, rng):
                                  topk_ratio=0.1)[0],
         in_avals=(AV((4, 32), jnp.float32),), axis_size=N)
     x = rng.standard_normal((N, 4, 32)).astype(np.float32)
-    want = np.asarray(smap(lambda v: c(v[0])[None], mesh8, P("data"),
+    want = np.asarray(smap(lambda v: c(v[0])[0][None], mesh8, P("data"),
                            P("data"))(jnp.asarray(x)))
     got, rep = _sim(eng, N).run(c, x)
     np.testing.assert_allclose(got, want, atol=1e-4)
@@ -308,7 +308,7 @@ def test_fused_exclusive_scan_matches_shard_map(mesh8, rng):
         in_avals=(AV((4,), jnp.float32),), axis_size=N)
     assert c.stage_kinds() == ["scan+allgather"]
     x = rng.standard_normal((N, 4)).astype(np.float32)
-    want = np.asarray(smap(lambda v: c(v[0])[None], mesh8, P("data"),
+    want = np.asarray(smap(lambda v: c(v[0])[0][None], mesh8, P("data"),
                            P("data"))(jnp.asarray(x)))
     got, _ = _sim(eng, N).run(c, x)
     np.testing.assert_allclose(got[0], want[0], atol=1e-4)

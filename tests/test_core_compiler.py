@@ -117,8 +117,8 @@ def test_pipeline_is_composable():
     compiled = compile_rank_local(prog, "data", pipeline=unfused)
     assert compiled.stage_kinds() == ["allgather", "scan", "allgather"]
     assert [type(p).__name__ for p in DEFAULT_PIPELINE] == \
-        ["Legalize", "LowerTopology", "FuseHops", "SelectSchedule",
-         "PlaceCGRA", "Emit"]
+        ["Legalize", "LowerTopology", "Coalesce", "FuseHops",
+         "SelectSchedule", "PlaceCGRA", "Emit"]
 
 
 def test_compile_program_reports_schedules(mesh8):

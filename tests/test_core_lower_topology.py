@@ -259,7 +259,7 @@ def test_custom_pipeline_without_lowertopology_still_runs(mesh22, rng):
             pipeline=pipeline)
 
     x = rng.standard_normal((4, 8)).astype(np.float32)
-    out = np.asarray(smap(lambda v: c(v[0, 0])[None, None], mesh22,
+    out = np.asarray(smap(lambda v: c(v[0, 0])[0][None, None], mesh22,
                           P("pod", "data", None), P("pod", "data", None))(
         jnp.asarray(x.reshape(2, 2, 8))))
     # per-pod sum over the inner "data" axis only

@@ -363,7 +363,7 @@ def test_wire_codec_on_plain_reduce_scatter(mesh8, rng):
 
     x = rng.standard_normal((N, N * 4)).astype(np.float32)
     f = jax.jit(jax.shard_map(
-        lambda v: compiled(v[0])[None], mesh=mesh8,
+        lambda v: compiled(v[0])[0][None], mesh=mesh8,
         in_specs=P("data", None), out_specs=P("data", None),
         check_vma=False))
     out = np.asarray(f(jnp.asarray(x)))
@@ -375,7 +375,7 @@ def test_wire_codec_on_plain_reduce_scatter(mesh8, rng):
     cbad = compile_rank_local(bad, "data")
     with pytest.raises(ValueError, match="standalone reduce-scatter"):
         jax.jit(jax.shard_map(
-            lambda v: cbad(v[0])[None], mesh=mesh8,
+            lambda v: cbad(v[0])[0][None], mesh=mesh8,
             in_specs=P("data", None), out_specs=P("data", None),
             check_vma=False))(jnp.asarray(x))
 

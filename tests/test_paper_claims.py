@@ -17,7 +17,8 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
 import pytest
 
-from benchmarks import figures, netmodel as nm
+from benchmarks import figures
+from repro.core import netmodel as nm
 
 
 def test_fig5_mean_speedup_matches_paper():

@@ -83,7 +83,7 @@ def test_system_fused_program_in_training_context(mesh8, rng):
 
     def training_like(xl):
         local = xl * 2.0
-        fem = compiled(local)           # fused in-network prefix sum
+        (fem,) = compiled(local)        # fused in-network prefix sum
         return fem.sum() + local.sum()
 
     f = jax.jit(jax.shard_map(lambda x: training_like(x).reshape(1),
