@@ -6,12 +6,13 @@
 Diffs a fresh ``BENCH_netmodel.json`` against the committed baseline and
 fails (exit 1) on any deterministic metric regressing by more than
 ``TOLERANCE``.  Keys are classified by direction: ``*speedup`` /
-``*time_vs_f32`` are higher-is-better ratios, everything else is a
-latency in µs (lower is better).  ``jax_*`` keys are wall-clock
-measurements of real executions — too noisy for a CI gate — and are
-skipped; the analytic/emulated figures and the execution-plan program
-times are deterministic, so a >25% move there is a real model or
-compiler change, not jitter.
+``*time_vs_f32`` are higher-is-better ratios, everything else is
+lower-is-better — a latency in µs, or a size for ``*_bytes`` keys (the
+execution plan's peak pack-transient memory).  ``jax_*`` keys are
+wall-clock measurements of real executions — too noisy for a CI gate —
+and are skipped; the analytic/emulated figures, the execution-plan
+program times and the transient-memory accounting are deterministic, so
+a >25% move there is a real model or compiler change, not jitter.
 """
 
 from __future__ import annotations
@@ -28,6 +29,10 @@ def classify(key: str) -> str:
     if key.endswith(HIGHER_IS_BETTER_SUFFIXES):
         return "higher"
     return "lower"
+
+
+def unit(key: str) -> str:
+    return "B" if key.endswith("_bytes") else "us"
 
 
 def check(fresh: dict, baseline: dict,
@@ -49,8 +54,9 @@ def check(fresh: dict, baseline: dict,
                     f"{key}: {old:.3f} -> {new:.3f} "
                     f"({new / old - 1.0:+.1%}, higher is better)")
         elif new > old * (1.0 + tolerance):
+            u = unit(key)
             failures.append(
-                f"{key}: {old:.3f}us -> {new:.3f}us "
+                f"{key}: {old:.3f}{u} -> {new:.3f}{u} "
                 f"({new / old - 1.0:+.1%}, lower is better)")
     return failures
 

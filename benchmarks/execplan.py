@@ -1,20 +1,29 @@
 """Execution-planning benchmark: per-leaf vs bucketized gradient sync.
 
 The compiler's Coalesce pass concatenates per-leaf reductions into
-flat-buffer bucket collectives; the ExecutionPlan runtime overlaps
-independent stages.  This module prices both against the analytic
+flat-buffer bucket collectives; the ExecutionPlan runtime dispatches
+waves with cross-axis overlap and writes bucket packs into persistent
+donated arenas.  This module prices both against the analytic
 :func:`repro.core.netmodel.program_time` on a ragged many-leaf gradient
 pytree (the transformer shape: a few big matmul leaves, a long tail of
-small biases/norms) and cross-checks the overlap model on the dataplane
-simulator — the numbers CI tracks in ``BENCH_netmodel.json``.
+small biases/norms), cross-checks the overlap model on the dataplane
+simulator, **calibrates** the :data:`repro.core.netmodel.TIER_OVERLAP`
+fractions from the simulator's cross-axis points, and measures the real
+jit wall-clock of the overlapped+arena runtime against the serial
+PR-4-style dispatch — the numbers CI tracks in ``BENCH_netmodel.json``
+(the ``jax_*`` wall-clock rows are recorded but not gated; everything
+else is deterministic and guarded by ``check_regression.py``).
 """
 
 from __future__ import annotations
+
+import time
 
 import numpy as np
 
 N_LEAVES = 64
 AXIS_SIZE = 8
+HIER_SIZES = {"data": 4, "pod": 2}
 
 
 def _ragged_sizes(n_leaves: int = N_LEAVES) -> list[int]:
@@ -30,7 +39,11 @@ def _ragged_sizes(n_leaves: int = N_LEAVES) -> list[int]:
     return sizes
 
 
-def _sync_program(sizes, engine, axis_sizes):
+def _sync_program(sizes, engine, axis_sizes, *, shared_mean: bool = True):
+    """The traced many-leaf mean-sync.  ``shared_mean=True`` declares the
+    per-leaf mean elementwise with one shared fn — the shape Coalesce
+    hoists onto the bucket; False reproduces the pre-hoist per-leaf
+    emission (a fresh fn per leaf, no elementwise promise)."""
     import jax
     import jax.numpy as jnp
 
@@ -40,11 +53,19 @@ def _sync_program(sizes, engine, axis_sizes):
     for v in axis_sizes.values():
         n_total *= v
 
+    def _mean(y):
+        return y / n_total
+
     def sync(*gs):
         outs = []
         for g in gs:
             r = tracing.reduce(g, axis="auto")
-            outs.append(tracing.map(lambda y: y / n_total, r, name="mean"))
+            if shared_mean:
+                outs.append(tracing.map(_mean, r, name="mean",
+                                        elementwise=True))
+            else:
+                outs.append(tracing.map(lambda y: y / n_total, r,
+                                        name="mean"))
         return tuple(outs)
 
     prog = tracing.trace(sync, name=f"sync[{len(sizes)}]",
@@ -58,9 +79,188 @@ def _collectives(compiled) -> int:
                if s.kind not in ("map", "delivered"))
 
 
+# ---------------------------------------------------------------------------
+# TIER_OVERLAP calibration: fit the per-tier overlap fractions from the
+# simulator's overlapped t_end on cross-axis waves
+# ---------------------------------------------------------------------------
+
+def _calibration_points():
+    """Programs whose single wave holds stages on *different* axes (one
+    ici, one dci) — the shape whose cost depends on the overlap
+    fractions.  Payloads span the latency- and bandwidth-bound regimes
+    of both tiers."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro import core as acis
+    from repro.core import make_engine
+
+    AV = jax.ShapeDtypeStruct
+    eng = make_engine("acis", inner_axis="data", outer_axis="pod")
+    # the thin dci wire makes the pod stage critical whenever the
+    # payloads are comparable (ici exposed); the heavily data-skewed
+    # points flip the critical chain so the dci exposure is observable
+    for m_data, m_pod in ((1 << 10, 1 << 10), (1 << 13, 1 << 13),
+                          (1 << 15, 1 << 15), (1 << 17, 1 << 15),
+                          (1 << 15, 1 << 17), (1 << 18, 1 << 18),
+                          (1 << 19, 1 << 12), (1 << 19, 1 << 13),
+                          (1 << 20, 1 << 14)):
+        def prog(x, y):
+            return (acis.reduce(x, axis="data"),
+                    acis.reduce(y, axis="pod"))
+
+        c = eng.compile(prog,
+                        in_avals=(AV((m_data,), jnp.float32),
+                                  AV((m_pod,), jnp.float32)),
+                        axis_size=dict(HIER_SIZES))
+        yield eng, c, (m_data, m_pod)
+
+
+def calibrate(rng_seed: int = 0):
+    """Simulate every calibration point, fit TIER_OVERLAP, and report
+    the post-fit envelope.  Returns (fitted, samples, worst_err)."""
+    from repro.cgra.simulate import SwitchSim
+    from repro.core import netmodel
+
+    rng = np.random.default_rng(rng_seed)
+    samples = []
+    for eng, c, (m_data, m_pod) in _calibration_points():
+        x = rng.standard_normal((4, 2, m_data)).astype(np.float32)
+        y = rng.standard_normal((4, 2, m_pod)).astype(np.float32)
+        _, report = SwitchSim(
+            eng.topology(axis_size=dict(HIER_SIZES))).run(c, x, y)
+        samples.append((c.plan, c.topology, report.t_end))
+    fitted = netmodel.fit_tier_overlap(samples)
+    worst = 0.0
+    for plan, topo, t_end in samples:
+        t_fit = netmodel.program_time(plan, topo, overlap=fitted)
+        worst = max(worst, abs(t_fit - t_end) / t_end)
+    return fitted, samples, worst
+
+
+# ---------------------------------------------------------------------------
+# measured wall-clock: overlapped + arena dispatch vs serial PR-4 path
+# ---------------------------------------------------------------------------
+
+def _tail_sizes(n_leaves: int = N_LEAVES) -> list[int]:
+    """A ragged all-tail 64-leaf pytree (every leaf 1-32 KB, ~2 MB
+    total): the dispatch-bound regime where per-kernel and
+    per-collective fixed costs dominate over ring byte movement —
+    i.e. where the runtime mechanics (hoisted epilogue, donated arenas,
+    merged wave dispatch) are what the wall-clock measures."""
+    rng = np.random.default_rng(7)
+    return [int(rng.integers(1 << 8, 1 << 13)) for _ in range(n_leaves)]
+
+
+def wallclock_rows() -> list[tuple]:
+    """Measured jit wall-clock of the ragged 64-leaf sync on the
+    multi-axis {pod: 2, data: 4} mesh: the PR-4-style serial path
+    (stage-ordered dispatch, per-leaf means, fresh concat per pack) vs
+    the overlapped runtime (merged wave dispatch, hoisted bucket mean,
+    donated arenas).  Two workloads: the standard mixed ragged pytree
+    (bulk ring movement dominates — both paths move identical bytes, so
+    the mechanics land within noise) and the all-tail ragged pytree
+    (dispatch-bound — the regime the overlapped runtime targets).
+    Interleaved median-of-N timing; ``jax_*`` rows are recorded but not
+    CI-gated (wall-clock noise).
+    """
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.core import make_engine
+
+    mesh = jax.make_mesh((2, 4), ("pod", "data"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    spec = P("pod", "data", None)
+
+    def build(engine, sizes, leaves, *, shared_mean, arenas):
+        c = _sync_program(sizes, engine, dict(HIER_SIZES),
+                          shared_mean=shared_mean)
+        n = len(sizes)
+        if not arenas:
+            def body(*ls):
+                outs = c(*[l[0, 0] for l in ls])
+                return tuple(o[None, None] for o in outs)
+            fn = jax.jit(jax.shard_map(
+                body, mesh=mesh, in_specs=(spec,) * n,
+                out_specs=(spec,) * n, check_vma=False))
+
+            def run():
+                jax.block_until_ready(fn(*leaves))
+            return c, run
+
+        arena_bufs = c.make_arenas()
+
+        def body(ar, *ls):
+            outs, new_ar = c(*[l[0, 0] for l in ls], arenas=tuple(ar))
+            return tuple(o[None, None] for o in outs) + tuple(new_ar)
+
+        fn = jax.jit(jax.shard_map(
+            body, mesh=mesh, in_specs=(P(),) + (spec,) * n,
+            out_specs=(spec,) * n + (P(),) * len(arena_bufs),
+            check_vma=False), donate_argnums=(0,))
+        state = {"arenas": jax.device_put(
+            arena_bufs, NamedSharding(mesh, P()))}
+
+        def run():
+            res = fn(state["arenas"], *leaves)
+            jax.block_until_ready(res)
+            state["arenas"] = tuple(res[n:])
+        return c, run
+
+    out = []
+    rng = np.random.default_rng(0)
+    for tag, sizes, iters in (("mixed", _ragged_sizes(), 6),
+                              ("tail", _tail_sizes(), 10)):
+        leaves = [jnp.asarray(rng.standard_normal((2, 4, s))
+                              .astype(np.float32)) for s in sizes]
+        c_serial, run_serial = build(
+            make_engine("acis", inner_axis="data", outer_axis="pod",
+                        overlap_dispatch=False),
+            sizes, leaves, shared_mean=False, arenas=False)
+        c_over, run_over = build(
+            make_engine("acis", inner_axis="data", outer_axis="pod"),
+            sizes, leaves, shared_mean=True, arenas=True)
+        run_serial(); run_over()               # compile + warm
+        ts, to = [], []
+        for _ in range(iters):                 # interleaved: cancels drift
+            t0 = time.perf_counter(); run_serial()
+            ts.append(time.perf_counter() - t0)
+            t0 = time.perf_counter(); run_over()
+            to.append(time.perf_counter() - t0)
+        t_serial = float(np.median(ts))
+        t_over = float(np.median(to))
+        out += [
+            (f"jax_execplan_sync{len(sizes)}_{tag}_wallclock_serial",
+             t_serial * 1e6,
+             f"stages={len(c_serial.stages)}"
+             f",collectives={_collectives(c_serial)}"),
+            (f"jax_execplan_sync{len(sizes)}_{tag}_wallclock_overlapped",
+             t_over * 1e6,
+             f"speedup={t_serial / t_over:.2f}"
+             f",stages={len(c_over.stages)}"
+             f",collectives={_collectives(c_over)}"
+             f",arenas={len(c_over.arena_avals)}"),
+        ]
+        if tag == "mixed":
+            no_arena = c_serial.pack_transient_bytes(arenas=False)
+            with_arena = c_over.pack_transient_bytes(arenas=True)
+            out += [
+                (f"execplan_sync{len(sizes)}_pack_transient_noarena_bytes",
+                 float(no_arena), "fresh concat: bucket + live leaves"),
+                (f"execplan_sync{len(sizes)}_pack_transient_arena_bytes",
+                 float(with_arena),
+                 "donated in-place write"
+                 f",ratio={no_arena / max(with_arena, 1):.2f}"),
+            ]
+    return out
+
+
 def rows() -> list[tuple]:
-    """CSV rows: program_time of the 64-leaf sync, per-leaf vs bucketized,
-    plus a simulated overlap cross-check."""
+    """CSV rows: program_time of the 64-leaf sync (per-leaf vs
+    bucketized), the simulated overlap cross-check, the TIER_OVERLAP
+    calibration fit, and the measured wall-clock A/B."""
     from repro.core import make_engine, netmodel
     from repro.cgra.simulate import SwitchSim
 
@@ -99,4 +299,15 @@ def rows() -> list[tuple]:
         "execplan_sim_sync16_end_to_end", report.t_end * 1e6,
         f"analytic_us={(report.t_program_model or 0.0) * 1e6:.2f}"
         f",serial_us={report.t_sim * 1e6:.2f}"))
+
+    # TIER_OVERLAP calibration: fitted fractions + post-fit envelope
+    fitted, samples, worst = calibrate()
+    committed = {t: netmodel.TIER_OVERLAP[t] for t in fitted}
+    out.append((
+        "execplan_tier_overlap_calibration", 0.0,
+        ",".join(f"{t}={v:.2f}" for t, v in sorted(fitted.items()))
+        + f",committed={committed}"
+        + f",points={len(samples)},worst_err={worst:.1%}"))
+
+    out += wallclock_rows()
     return out

@@ -37,7 +37,10 @@ def main():
     def fem(x):
         return acis.all_gather(acis.scan(acis.all_gather(x)))
 
-    fn = engine.compile(fem, mesh, P("data"), P(None))
+    # in_avals are the rank-local shapes: they size the schedule choice
+    # (latency vs bandwidth ring) and keep program_time fully priced
+    fn = engine.compile(fem, mesh, P("data"), P(None),
+                        in_avals=(jax.ShapeDtypeStruct((4,), jnp.float32),))
     x = jnp.arange(32.0)
     out = fn(x)
     print("fused stages:", fn.stages)
@@ -51,7 +54,11 @@ def main():
 
     fn2 = engine.compile(histogram_shuffle, mesh,
                          (P("data", None), P("data")),
-                         (P("data", None), P("data")))
+                         (P("data", None), P("data")),
+                         in_avals=(jax.ShapeDtypeStruct((1, 16),
+                                                        jnp.float32),
+                                   jax.ShapeDtypeStruct((8,),
+                                                        jnp.float32)))
     hist = jnp.ones((8, 16)); keys = jnp.arange(64.0)
     h, k = fn2(hist, keys)
     print(f"nas-is fused stages: {fn2.stages}  "

@@ -136,6 +136,9 @@ class SwitchSim:
         self.grid = tuple(self.sizes[a] for a in self.axis_names)
         self.n_ranks = int(np.prod(self.grid))
         self.device = device
+        # per-rank injection-serialization account of the wave branch
+        # currently executing (set by run() around each stage)
+        self._cur_ser: Optional[Array] = None
 
     # -- rank bookkeeping ---------------------------------------------------
 
@@ -171,14 +174,25 @@ class SwitchSim:
         return t
 
     def _advance_ring(self, clock: Array, axis: str, steps: int,
-                      t_hop: float) -> None:
+                      t_hop: float, ser_hop: float = 0.0) -> None:
         """Discrete-event update: each step, every rank's clock becomes
-        max(own, upstream neighbour) + hop time, per ring of the axis."""
+        max(own, upstream neighbour) + hop time, per ring of the axis.
+
+        ``ser_hop`` is the *injection-serialization* share of the hop
+        (chunk bytes / link bw): the time the rank's shared port is
+        busy pushing this branch's bytes.  It accrues into the current
+        wave branch's serialization account — concurrent branches of one
+        wave overlap their propagation and compute, but their injection
+        contends at the port, so the wave merge re-exposes the
+        non-critical branches' serialization (see :meth:`run`).
+        """
         for _ in range(max(steps, 0)):
             snap = clock.copy()
             for g in self._rings(axis):
                 prev = np.roll(g, 1)
                 clock[g] = np.maximum(snap[g], snap[prev]) + t_hop
+        if ser_hop and steps > 0 and self._cur_ser is not None:
+            self._cur_ser += steps * ser_hop
 
     def _advance_local(self, clock: Array, t: float) -> None:
         clock += t
@@ -222,6 +236,7 @@ class SwitchSim:
         rows: dict[int, SimStage] = {}
         for wi, wave in enumerate(waves):
             branch: dict[str, Array] = {}
+            branch_ser: dict[str, Array] = {}
             for si in wave:
                 st = compiled.stages[si]
                 if st.ir is None:
@@ -232,9 +247,14 @@ class SwitchSim:
                 c = branch.get(st.axis)
                 if c is None:
                     c = branch[st.axis] = clock.copy()
+                    branch_ser[st.axis] = np.zeros_like(clock)
+                self._cur_ser = branch_ser[st.axis]
                 t0 = float(c.max())
                 args = [env[v] for v in st.in_vids]
-                outs = self._exec(st, args, c)
+                try:
+                    outs = self._exec(st, args, c)
+                finally:
+                    self._cur_ser = None
                 for vid, o in zip(st.out_vids, outs):
                     env[vid] = np.asarray(o)
                 t_sim = float(c.max()) - t0
@@ -242,7 +262,18 @@ class SwitchSim:
                     st.kind, st.axis, st.schedule, t_sim,
                     self._model_time(st, args), st.placement, wi)
             if branch:
-                clock = np.maximum.reduce(list(branch.values()))
+                # concurrent branches overlap propagation and compute,
+                # but every rank injects into all of its rings through
+                # one shared port: the wave ends at the per-rank max
+                # branch plus the *other* branches' injection-
+                # serialization time (the contention the calibrated
+                # netmodel.TIER_OVERLAP fractions price)
+                clocks = np.stack(list(branch.values()))
+                sers = np.stack([branch_ser[a] for a in branch])
+                arg = np.argmax(clocks, axis=0)
+                exposed = sers.sum(axis=0) \
+                    - np.take_along_axis(sers, arg[None], axis=0)[0]
+                clock = clocks.max(axis=0) + exposed
 
         outs = tuple(env[v].reshape(self.grid + env[v].shape[1:])
                      for v in src.outputs)
@@ -258,8 +289,11 @@ class SwitchSim:
 
     def _model_time(self, st, args: list) -> Optional[float]:
         m = int(args[0].nbytes // self.n_ranks) if args else 0
+        m_parts = None
         if st.kind == "allreduce+alltoall" and len(args) == 2:
-            m = int((args[0].nbytes + args[1].nbytes) // self.n_ranks)
+            m_parts = (int(args[0].nbytes // self.n_ranks),
+                       int(args[1].nbytes // self.n_ranks))
+            m = sum(m_parts)
         elif st.kind == "map" and st.ir.bytes_in is not None:
             # the plan-consistent map payload: what the stage produces
             # (pack = sum of operands, split = one slice of the bucket)
@@ -275,7 +309,8 @@ class SwitchSim:
             return netmodel.stage_time(st.kind, n, m, p,
                                        placement=st.placement,
                                        schedule=st.schedule,
-                                       codec_ratio=ratio)
+                                       codec_ratio=ratio,
+                                       m_parts=m_parts)
         except ValueError:
             return None
 
@@ -441,7 +476,8 @@ class SwitchSim:
             # charge it twice)
             self._advance_local(clock, p.mpi_overhead)
         t_hop = self._hop_time(p, chunk, chunk if compute else 0.0, pl)
-        self._advance_ring(clock, st.axis, steps, t_hop)
+        self._advance_ring(clock, st.axis, steps, t_hop,
+                           ser_hop=chunk / p.bw)
 
     # .. stage handlers ......................................................
 
@@ -548,7 +584,8 @@ class SwitchSim:
         rounds = int(math.ceil(math.log2(max(n, 2)))) if n > 1 else 0
         m = args[0].nbytes / self.n_ranks
         self._advance_ring(clock, st.axis, rounds,
-                           self._hop_time(p, m, m, st.placement))
+                           self._hop_time(p, m, m, st.placement),
+                           ser_hop=m / p.bw)
         return tuple(out)
 
     def _run_scan_allgather(self, st, args, clock):
@@ -582,7 +619,8 @@ class SwitchSim:
         m = args[0].nbytes / self.n_ranks
         rounds = int(math.ceil(math.log2(max(n, 2)))) if n > 1 else 0
         self._advance_ring(clock, st.axis, rounds,
-                           self._hop_time(p, m, m, st.placement))
+                           self._hop_time(p, m, m, st.placement),
+                           ser_hop=m / p.bw)
         self._charge_ring(st, clock, m * n, compute=False)   # gather round
         return tuple(out)
 
@@ -597,7 +635,8 @@ class SwitchSim:
         rounds = int(math.ceil(math.log2(max(n, 2)))) if n > 1 else 0
         m = args[0].nbytes / self.n_ranks
         self._advance_ring(clock, st.axis, rounds,
-                           self._hop_time(p, m, 0.0, st.placement))
+                           self._hop_time(p, m, 0.0, st.placement),
+                           ser_hop=m / p.bw)
         return tuple(out)
 
     def _run_allreduce_alltoall(self, st, args, clock):
@@ -624,10 +663,11 @@ class SwitchSim:
         m_keys = keys_arg.nbytes / self.n_ranks
         m_hist = hist_arg.nbytes / self.n_ranks
         # one shared traversal: key chunk + full histogram per hop
+        chunk = m_keys / max(n, 1) + m_hist
         self._advance_ring(
             clock, st.axis, max(n - 1, 0),
-            self._hop_time(p, m_keys / max(n, 1) + m_hist, m_hist,
-                           st.placement))
+            self._hop_time(p, chunk, m_hist, st.placement),
+            ser_hop=chunk / p.bw)
         return hist, keys
 
     # .. look-aside (error feedback) ........................................
@@ -646,7 +686,8 @@ class SwitchSim:
             # compress locally, tiny scale exchange, half-width RS∘AG walk
             self._advance_local(clock, m / netmodel.accel_rate(p, pl))
             self._advance_ring(clock, st.axis, max(n - 1, 0),
-                               self._hop_time(p, max(m / 256, 4), 0.0, pl))
+                               self._hop_time(p, max(m / 256, 4), 0.0, pl),
+                               ser_hop=max(m / 256, 4) / p.bw)
             self._charge_ring(st, clock, m * 0.5)
             self._charge_ring(st, clock, m * 0.5, compute=False)
         return (total, delivered) if both else (total,)

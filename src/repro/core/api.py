@@ -48,6 +48,26 @@ BACKENDS = ("xla", "acis", "acis_compressed", "acis_hierarchical",
             "acis_hierarchical_compressed")
 
 
+def live_axis_sizes(axes, known: Optional[dict] = None) -> dict:
+    """Best-effort ``{axis: size}`` for the named mesh axes.
+
+    Sizes are read live via ``lax.axis_size`` — available when called
+    inside a shard_map region manual over the axis — so compile paths
+    can key their caches and feed the cost model without a mesh in
+    hand.  ``known`` entries are kept as-is; axes not bound anywhere
+    simply stay absent.
+    """
+    sizes = dict(known) if known else {}
+    for ax in axes:
+        if ax is None or ax in sizes:
+            continue
+        try:
+            sizes[ax] = lax.axis_size(ax)
+        except Exception:            # not under shard_map over this axis
+            pass
+    return sizes
+
+
 @dataclasses.dataclass(frozen=True)
 class CollectiveConfig:
     backend: str = "xla"
@@ -66,6 +86,13 @@ class CollectiveConfig:
     # switch CGRA the PlaceCGRA pass maps stage bodies onto; None = the
     # paper's Table II device (repro.cgra.device.PAPER_CGRA)
     cgra_device: Optional[Any] = None
+    # overlapped wave dispatch (repro.core.executor.execute): same-axis
+    # stages of a wave are chained with explicit optimization_barrier
+    # edges, different-axis stages issue with no ordering edges so XLA
+    # may run their collectives concurrently.  False = strict
+    # stage-ordered serial emission (the pre-overlap runtime, kept for
+    # A/B measurement).
+    overlap_dispatch: bool = True
 
     def __post_init__(self):
         if self.backend not in BACKENDS:
@@ -83,6 +110,7 @@ class CollectiveEngine:
         self.inner_axis = inner_axis
         self.outer_axis = outer_axis
         self._sync_cache: dict = {}   # pytree structure → CompiledProgram
+        self._arena_cache: dict = {}  # same key → persistent bucket arenas
         self._last_sync = None        # most recently built/fetched program
 
     # -- properties ---------------------------------------------------------
@@ -142,11 +170,14 @@ class CollectiveEngine:
     # -- the gradient-sync transport -----------------------------------------
 
     def gradient_sync(self, grads: PyTree, state: PyTree,
-                      n_total: Optional[int] = None) -> tuple[PyTree, PyTree]:
+                      n_total: Optional[int] = None, *,
+                      arenas: Optional[tuple] = None):
         """Mean-all-reduce a gradient pytree over the DP axes.
 
-        Returns (synced_grads, new_state).  Must run inside a shard_map
-        region that is manual over `inner_axis` (and `outer_axis` if set).
+        Returns (synced_grads, new_state) — or (synced_grads, new_state,
+        new_arenas) when ``arenas`` is passed.  Must run inside a
+        shard_map region that is manual over `inner_axis` (and
+        `outer_axis` if set).
 
         Every ``acis*`` backend routes through one compiled switch
         program (cached per pytree structure): per leaf, a mean-reduce
@@ -154,6 +185,14 @@ class CollectiveEngine:
         around it on the compressed backends.  The LowerTopology pass
         turns the multi-axis reduce into the hierarchical RS/AR/AG
         schedule when an outer axis exists.
+
+        ``arenas`` are the persistent bucket buffers from
+        :meth:`init_arenas`: the Coalesce bucket packs then write leaves
+        into them in place instead of concatenating into fresh buffers.
+        Thread the returned ``new_arenas`` into the next step and donate
+        them at your jit boundary (``donate_argnums``) so XLA aliases
+        the buffers — the pack transient drops from 2× to ~1× bucket
+        size.
         """
         if self.config.backend == "xla":
             inner, outer = self.inner_axis, self.outer_axis
@@ -164,44 +203,85 @@ class CollectiveEngine:
             else:   # same divisor override the acis paths honor
                 synced = jax.tree.map(
                     lambda g: lax.psum(g, axes) / n_total, grads)
-            return synced, state
+            return (synced, state, arenas) if arenas is not None \
+                else (synced, state)
 
         leaves, treedef = jax.tree_util.tree_flatten(grads)
         if not leaves:                 # nothing to sync (e.g. frozen subtree)
-            return grads, state
+            return (grads, state, arenas) if arenas is not None \
+                else (grads, state)
         avals = tuple(jax.ShapeDtypeStruct(l.shape, l.dtype) for l in leaves)
         compiled = self._sync_program(treedef, avals, n_total)
+        args = tuple(leaves)
         if self.compressed:
-            res = treedef.flatten_up_to(state)
-            outs = compiled(*leaves, *res)
-            synced = jax.tree_util.tree_unflatten(
-                treedef, outs[:len(leaves)])
+            args = args + tuple(treedef.flatten_up_to(state))
+        if arenas is not None:
+            outs, new_arenas = compiled(*args, arenas=tuple(arenas))
+        else:
+            outs, new_arenas = compiled(*args), None
+        synced = jax.tree_util.tree_unflatten(treedef, outs[:len(leaves)])
+        new_state = state
+        if self.compressed:
             new_state = jax.tree_util.tree_unflatten(
                 treedef, outs[len(leaves):])
-            return synced, new_state
-        outs = compiled(*leaves)
-        return jax.tree_util.tree_unflatten(treedef, outs), state
+        if arenas is not None:
+            return synced, new_state, new_arenas
+        return synced, new_state
+
+    def init_arenas(self, grads_like: PyTree, *,
+                    axis_sizes: Optional[dict] = None,
+                    n_total: Optional[int] = None) -> Optional[tuple]:
+        """Persistent bucket arenas for :meth:`gradient_sync` on this
+        gradient pytree structure — allocated once per structure and
+        cached, so repeated calls return the *same* buffers (donating
+        callers get fresh ones from the sync's returned ``new_arenas``).
+
+        Call OUTSIDE any trace (the buffers must be concrete to persist
+        across steps), passing ``axis_sizes`` (``{axis: size}``) when no
+        shard_map region is active — bucket boundaries depend on the DP
+        ring sizes.  Returns None when the program has no bucket stages
+        (xla backend, bucketing disabled, single-leaf trees).
+        """
+        if self.config.backend == "xla":
+            return None
+        leaves = jax.tree_util.tree_leaves(grads_like)
+        if not leaves:
+            return None
+        treedef = jax.tree_util.tree_structure(grads_like)
+        avals = tuple(jax.ShapeDtypeStruct(l.shape, l.dtype) for l in leaves)
+        compiled = self._sync_program(treedef, avals, n_total,
+                                      axis_sizes=axis_sizes)
+        key = (treedef, avals, n_total,
+               tuple(sorted((axis_sizes or {}).items())))
+        hit = self._arena_cache.get(key)
+        if hit is not None and any(
+                getattr(a, "is_deleted", lambda: False)() for a in hit):
+            # a donating caller consumed the cached buffers (the step
+            # owns the live ones as state now) — hand out fresh arenas
+            # instead of deleted arrays
+            hit = None
+        if hit is None:
+            hit = self._arena_cache[key] = compiled.make_arenas()
+        return hit
 
     def _sync_program(self, treedef, avals: tuple,
-                      n_total: Optional[int] = None):
+                      n_total: Optional[int] = None, *,
+                      axis_sizes: Optional[dict] = None):
         """Build (or fetch) the compiled gradient-sync switch program for
         one pytree structure.
 
         ``avals`` (one per leaf) give SelectSchedule per-leaf payload
         sizes; axis sizes are read live via ``lax.axis_size`` — we are
-        inside the caller's shard_map region at trace time — so the
-        per-tier ring crossover is reachable without a mesh in hand.
+        inside the caller's shard_map region at trace time — unless
+        ``axis_sizes`` supplies them explicitly (the outside-trace
+        spelling :meth:`init_arenas` uses), so the per-tier ring
+        crossover is reachable without a mesh in hand.
         """
         cfg = self.config
         inner, outer = self.inner_axis, self.outer_axis
         compressed = self.compressed
         n_leaves = len(avals)
-        sizes = {}
-        for ax in (inner,) + ((outer,) if outer is not None else ()):
-            try:
-                sizes[ax] = lax.axis_size(ax)
-            except Exception:        # not under shard_map over this axis
-                pass
+        sizes = live_axis_sizes((inner, outer), axis_sizes)
         # the sizes are part of the key: the same engine may serve meshes
         # of different DP size, and the schedule choice depends on them
         key = (treedef, avals, n_total, tuple(sorted(sizes.items())))
@@ -234,12 +314,14 @@ class CollectiveEngine:
                     red, dlv = tracing.ef_reduce(
                         t, compressor=cfg.compressor,
                         topk_ratio=cfg.topk_ratio, axis="auto")
-                    outs.append(tracing.map(_mean, red, name="mean"))
+                    outs.append(tracing.map(_mean, red, name="mean",
+                                            elementwise=True))
                     news.append(tracing.map(_ef_residual, t, dlv, rs[i],
                                             name="ef_residual"))
                 else:
                     red = tracing.reduce(gs[i], ADD, axis="auto")
-                    outs.append(tracing.map(_mean, red, name="mean"))
+                    outs.append(tracing.map(_mean, red, name="mean",
+                                            elementwise=True))
             return tuple(outs) + tuple(news)
 
         prog = tracing.trace(

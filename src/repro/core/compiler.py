@@ -219,6 +219,10 @@ class StageIR:
     out_vids: tuple[int, ...]
     schedule: str = ""             # "latency" | "bandwidth" | "" (fixed)
     bytes_in: Optional[int] = None
+    # per-operand payload split where the summed bytes_in is not enough
+    # (the fused AR+A2A pair: (hist bytes, keys bytes) — the shared ring
+    # carries them very differently)
+    bytes_parts: Optional[tuple[int, ...]] = None
     desc: str = ""
     axis: str = ""                 # mesh axis the stage communicates over
     placement: Optional[Any] = None  # CGRA Placement | HostFallback
@@ -245,6 +249,11 @@ class Stage:
     axis: str = ""
     placement: Optional[Any] = None
     ir: Optional[StageIR] = None
+    # Coalesce bucket packs: index into the program's arena list (the
+    # persistent flat buffer this stage may write in place) and the
+    # rank-local aval of that buffer.  None for every other stage.
+    arena_slot: Optional[int] = None
+    arena_aval: Optional[Any] = None
 
     def __repr__(self):  # pragma: no cover
         return f"Stage({self.kind}@{self.axis})" if self.axis \
@@ -265,17 +274,70 @@ class CompiledProgram:
 
     Calling the program always returns a **tuple**, one entry per program
     output — single-output programs return a 1-tuple, not a bare array.
+
+    ``overlap`` selects the dispatch mode (see
+    :func:`repro.core.executor.execute`): overlapped wave dispatch by
+    default, strict stage-ordered serial emission when False
+    (``CollectiveConfig.overlap_dispatch`` at compile time).
+
+    The program's Coalesce bucket packs may additionally write into
+    persistent **arenas**: call :meth:`make_arenas` once, thread the
+    buffers through every call (``outs, arenas = prog(*xs,
+    arenas=arenas)``) and donate them at the jit boundary — the pack
+    transient drops from 2× to ~1× bucket size.
     """
 
     stages: Sequence[Stage]
     source: DagProgram
     topology: Optional[Topology] = None
     plan: Optional[executor.ExecutionPlan] = None
+    overlap: bool = True
 
     def __post_init__(self):
         if self.plan is None:
             self.plan = executor.build_plan(
                 self.stages, self.source.num_inputs, self.source.outputs)
+
+    # -- persistent bucket arenas -------------------------------------------
+
+    @property
+    def arena_avals(self) -> tuple:
+        """Rank-local aval of every bucket-pack arena, slot order."""
+        slots = [st for st in self.stages if st.arena_slot is not None]
+        return tuple(st.arena_aval
+                     for st in sorted(slots, key=lambda s: s.arena_slot))
+
+    def make_arenas(self) -> Optional[tuple]:
+        """Freshly allocated arena buffers (one flat zeros per bucket
+        pack), or None when the program has no bucket stages.  Allocate
+        once per program, outside any trace, and thread the returned
+        tuple through every call so the buffers can be donated."""
+        avals = self.arena_avals
+        if not avals:
+            return None
+        return tuple(jnp.zeros(a.shape, a.dtype) for a in avals)
+
+    def pack_transient_bytes(self, *, arenas: bool = False) -> int:
+        """Peak transient bytes of the bucket packs: each pack holds its
+        source leaves alive while materializing the flat bucket, so a
+        fresh concat peaks at ~2× the bucket; an in-place arena write
+        peaks at ~1× (the persistent buffer is not a transient of this
+        step, only the leaves are).  Packs sharing a wave have no
+        ordering edges between them — the runtime deliberately lets them
+        issue concurrently — so their transients are *summed* per wave
+        and the peak is the worst wave, not the largest single bucket.
+        """
+        wave_of = {i: w for w, grp in enumerate(self.plan.waves)
+                   for i in grp}
+        per_wave: dict[int, int] = {}
+        for i, st in enumerate(self.stages):
+            if st.arena_aval is None:
+                continue
+            bucket = _aval_bytes(st.arena_aval)
+            w = wave_of.get(i, -1)
+            per_wave[w] = per_wave.get(w, 0) \
+                + (bucket if arenas else 2 * bucket)
+        return max(per_wave.values(), default=0)
 
     def stage_kinds(self) -> list[str]:
         return [s.kind for s in self.stages]
@@ -343,7 +405,11 @@ class CompiledProgram:
                 seen.append(s.axis)
         return seen
 
-    def __call__(self, *xs: PyTree) -> tuple:
+    def __call__(self, *xs: PyTree, arenas: Optional[tuple] = None) -> tuple:
+        """Run the plan.  Without ``arenas``: the output tuple.  With
+        ``arenas`` (from :meth:`make_arenas`, or the previous call's
+        second result): ``(outputs, new_arenas)`` — thread and donate the
+        arenas so the bucket packs write in place."""
         n_in = self.source.num_inputs
         if len(xs) == 1 and n_in > 1 and isinstance(xs[0], (tuple, list)):
             xs = tuple(xs[0])      # chain-shim spelling: one tuple argument
@@ -351,7 +417,26 @@ class CompiledProgram:
             raise TypeError(
                 f"program {self.source.name!r} takes {n_in} inputs, "
                 f"got {len(xs)}")
-        return executor.execute(self.plan, xs)
+        if arenas is not None:
+            avals = self.arena_avals
+            if len(arenas) != len(avals):
+                raise TypeError(
+                    f"program {self.source.name!r} has {len(avals)} "
+                    f"bucket arenas, got {len(arenas)}")
+            for i, (a, want) in enumerate(zip(arenas, avals)):
+                # shape AND dtype must match: the pack would otherwise
+                # silently astype-cast every gradient into the arena's
+                # dtype (e.g. f32 grads into a bf16 arena)
+                if tuple(a.shape) != tuple(want.shape) \
+                        or jnp.dtype(a.dtype) != jnp.dtype(want.dtype):
+                    raise TypeError(
+                        f"program {self.source.name!r} arena {i} must be "
+                        f"{want.shape} {want.dtype}, got {tuple(a.shape)} "
+                        f"{a.dtype} — rebuild the arenas for this "
+                        "program (make_arenas / engine.init_arenas with "
+                        "matching grad dtypes)")
+        return executor.execute(self.plan, xs, arenas=arenas,
+                                overlapped=self.overlap)
 
 
 # ---------------------------------------------------------------------------
@@ -629,25 +714,37 @@ def _aval_bytes(aval) -> int:
     return size * jnp.dtype(aval.dtype).itemsize
 
 
-def _pack_fn(sizes: tuple[int, ...]) -> Callable:
+def _pack_fn(sizes: tuple[int, ...], dtype: str = "float32") -> Callable:
     """Emit-side shim: flatten every leaf and concat into one flat bucket.
 
     The bucket layout (split offsets) was computed from the compile
     ``in_avals`` — if a leaf shows up at run time with a different
     element count, slicing would silently hand every downstream leaf the
     wrong gradient, so the mismatch is rejected at trace time instead.
+
+    The per-leaf sizes and bucket dtype ride on the function as
+    ``bucket_sizes`` / ``bucket_dtype``: Emit reads them to lower the
+    pack as a donation-aware **arena write** (in-place
+    ``dynamic_update_slice`` into a persistent flat buffer) instead of a
+    fresh concatenation when the caller threads arenas through the call.
     """
     def pack(*xs):
-        for i, (x, s) in enumerate(zip(xs, sizes)):
-            if x.size != s:
-                raise ValueError(
-                    f"Coalesce bucket pack: leaf {i} has {x.size} "
-                    f"elements at run time but the compile in_avals "
-                    f"promised {s} — pass in_avals matching the "
-                    "rank-local shapes (bucket offsets are computed "
-                    "from them)")
+        _check_pack_sizes(xs, sizes)
         return jnp.concatenate([x.reshape(-1) for x in xs], axis=0)
+    pack.bucket_sizes = sizes
+    pack.bucket_dtype = dtype
     return pack
+
+
+def _check_pack_sizes(xs, sizes: tuple[int, ...]) -> None:
+    for i, (x, s) in enumerate(zip(xs, sizes)):
+        if x.size != s:
+            raise ValueError(
+                f"Coalesce bucket pack: leaf {i} has {x.size} "
+                f"elements at run time but the compile in_avals "
+                f"promised {s} — pass in_avals matching the "
+                "rank-local shapes (bucket offsets are computed "
+                "from them)")
 
 
 def _split_fn(offset: int, size: int) -> Callable:
@@ -677,6 +774,7 @@ class _ReduceUnit:
     size: int
     shape: tuple
     ops: dict                       # replay ops for the bucket rebuild
+    dtype: str = "float32"          # leaf (= bucket) dtype
 
 
 class Coalesce:
@@ -776,7 +874,7 @@ class Coalesce:
         key = ("reduce", nd.op.axis, nd.op.monoid.name, nd.op.codec.name,
                dt)
         return _ReduceUnit("reduce", nd.inputs[0], nd.out, None, (nd,),
-                           key, nbytes, size, shape, {"red": nd.op})
+                           key, nbytes, size, shape, {"red": nd.op}, dt)
 
     def _match_ef(self, nd: DagNode, delivered: dict, aval,
                   claimed: set, sole_user) -> Optional[_ReduceUnit]:
@@ -816,7 +914,7 @@ class Coalesce:
                            nodes, key, nbytes, size, shape,
                            {"red": nd.op,
                             "dlv": dlv.op if dlv is not None else None,
-                            "outer": tuple(o.op for o in outer)})
+                            "outer": tuple(o.op for o in outer)}, dt)
 
     def _match_hier(self, pad: DagNode, aval,
                     sole_user) -> Optional[_ReduceUnit]:
@@ -851,7 +949,7 @@ class Coalesce:
                            key, nbytes, size, shape,
                            {"pad": pad.op, "rs": tuple(n.op for n in rs),
                             "red": red.op, "ag": tuple(n.op for n in ag),
-                            "unpad": unpad.op})
+                            "unpad": unpad.op}, dt)
 
     # -- bucket formation ----------------------------------------------------
 
@@ -987,10 +1085,53 @@ class Coalesce:
 
     # -- the rewrite ---------------------------------------------------------
 
+    def _find_epilogues(self, dag: DagProgram,
+                        buckets: list[list[_ReduceUnit]],
+                        claimed_outs: set[int]) -> tuple[dict, dict]:
+        """Per-bucket elementwise epilogue hoist.
+
+        When every unit's reduced output feeds exactly one *identical*
+        single-input MAP declared ``elementwise`` (the gradient sync's
+        shared mean), that map runs once on the flat bucket instead of
+        once per leaf — a many-leaf sync then issues one bucket-sized
+        kernel rather than N tiny ones.  The hoist is only taken for a
+        whole bucket (all units share the fn object), and only on the
+        caller's explicit elementwise promise: ``f(concat(xs)) ==
+        concat(f(x))`` is what makes running it before the split legal.
+        Returns ({bucket idx → hoisted op}, {bucket idx → per-unit map
+        out vids}); the hoisted map nodes are added to ``claimed_outs``.
+        """
+        users = dag.users()
+        out_set = set(dag.outputs)
+        epilogues: dict[int, Node] = {}
+        epi_outs: dict[int, list[int]] = {}
+        for bi, b in enumerate(buckets):
+            hoisted: list[DagNode] = []
+            for u in b:
+                us = users.get(u.out_red, [])
+                if (len(us) == 1 and u.out_red not in out_set
+                        and us[0].op.kind == OpKind.MAP
+                        and len(us[0].inputs) == 1
+                        and us[0].op.elementwise
+                        and us[0].out not in claimed_outs):
+                    hoisted.append(us[0])
+                else:
+                    break
+            if len(hoisted) != len(b) \
+                    or len({h.op.fn for h in hoisted}) != 1:
+                continue
+            epilogues[bi] = dataclasses.replace(
+                hoisted[0].op, name="bucket_epilogue", fusable=False)
+            epi_outs[bi] = [h.out for h in hoisted]
+            claimed_outs.update(h.out for h in hoisted)
+        return epilogues, epi_outs
+
     def _rewrite(self, dag: DagProgram,
                  buckets: list[list[_ReduceUnit]]) -> DagProgram:
         claimed_outs = {nd.out for b in buckets for u in b
                         for nd in u.nodes}
+        epilogues, epi_outs = self._find_epilogues(dag, buckets,
+                                                   claimed_outs)
         producers: dict[int, tuple] = {}
         for nd in dag.nodes:
             if nd.out not in claimed_outs:
@@ -1000,6 +1141,8 @@ class Coalesce:
                 producers[u.out_red] = ("bucket", bi)
                 if u.out_dlv is not None:
                     producers[u.out_dlv] = ("bucket", bi)
+            for v in epi_outs.get(bi, ()):
+                producers[v] = ("bucket", bi)
 
         nodes_out: list[DagNode] = []
         vmap: dict[int, int] = {i: i for i in range(dag.num_inputs)}
@@ -1032,7 +1175,8 @@ class Coalesce:
             us = buckets[bi]
             ins = tuple(get(u.vin) for u in us)
             pack = emit(Node(OpKind.MAP,
-                             fn=_pack_fn(tuple(u.size for u in us)),
+                             fn=_pack_fn(tuple(u.size for u in us),
+                                         us[0].dtype),
                              name="bucket_pack", fusable=False), ins)
             ops = us[0].ops
             v_dlv = None
@@ -1052,12 +1196,20 @@ class Coalesce:
                 for op in ops["ag"]:
                     v = emit(op, (v,))
                 v_red = emit(ops["unpad"], (v, pack))
+            epi = epilogues.get(bi)
+            v_epi = emit(epi, (v_red,)) if epi is not None else None
             off = 0
-            for u in us:
+            for k, u in enumerate(us):
                 orig = vmap[u.vin]      # runtime shape donor for the slice
                 split = Node(OpKind.MAP, fn=_split_fn(off, u.size),
                              name="bucket_split", fusable=False)
-                vmap[u.out_red] = emit(split, (v_red, orig))
+                if v_epi is not None:
+                    # the hoisted epilogue replaced every per-leaf map:
+                    # the split of the epilogued bucket IS that map's
+                    # output (u.out_red itself had no other consumer)
+                    vmap[epi_outs[bi][k]] = emit(split, (v_epi, orig))
+                else:
+                    vmap[u.out_red] = emit(split, (v_red, orig))
                 if u.out_dlv is not None:
                     dsplit = Node(OpKind.MAP, fn=_split_fn(off, u.size),
                                   name="bucket_split", fusable=False)
@@ -1448,8 +1600,19 @@ class SelectSchedule:
             # cost model walks the emitted plan stage by stage)
             b = self._group_bytes(g, nbytes)
             if g.kind not in _RESCHEDULABLE:
-                out.append(dataclasses.replace(g, bytes_in=b)
-                           if b is not None else g)
+                parts = None
+                if g.kind == "allreduce+alltoall" and nbytes is not None:
+                    # the shared ring carries the pair asymmetrically
+                    # (histogram rides every hop whole, keys chunked) —
+                    # keep the per-operand split for the cost model
+                    vals = [nbytes.get(v) for v in g.in_vids]
+                    if all(v is not None for v in vals):
+                        parts = tuple(vals)
+                if b is not None or parts is not None:
+                    out.append(dataclasses.replace(g, bytes_in=b,
+                                                   bytes_parts=parts))
+                else:
+                    out.append(g)
                 continue
             red = next(nd for nd in g.nodes
                        if nd.op.kind in (OpKind.REDUCE,
@@ -1606,12 +1769,27 @@ class PlaceCGRA:
 # ---------------------------------------------------------------------------
 
 class Emit:
-    """Lower every StageIR to a rank-local callable."""
+    """Lower every StageIR to a rank-local callable.
+
+    Coalesce bucket packs additionally get an **arena slot**: the
+    emitted run accepts an optional persistent flat buffer and writes
+    the leaves into it in place (``dynamic_update_slice``) instead of
+    concatenating into a fresh one — with the arena donated at the jit
+    boundary the pack's transient memory is ~1× the bucket, not 2×.
+    """
 
     name = "emit"
 
     def run(self, groups: list[StageIR], ctx: CompileContext) -> list[Stage]:
-        return [self._emit(g, ctx) for g in groups]
+        stages = []
+        n_arenas = 0
+        for g in groups:
+            st = self._emit(g, ctx)
+            if st.arena_aval is not None:
+                st = dataclasses.replace(st, arena_slot=n_arenas)
+                n_arenas += 1
+            stages.append(st)
+        return stages
 
     def _emit(self, g: StageIR, ctx: CompileContext) -> Stage:
         run = getattr(self, "_" + g.kind.replace("+", "_"))(g)
@@ -1631,8 +1809,16 @@ class Emit:
                 # ops unresolved — fall back to the program-wide default
                 # axis (pure-map stages legitimately stay axis-less)
                 axis = ctx.axis_name
+        aval = None
+        if g.kind == "map":
+            sizes = getattr(g.nodes[0].op.fn, "bucket_sizes", None)
+            if sizes is not None:
+                aval = jax.ShapeDtypeStruct(
+                    (sum(sizes),),
+                    jnp.dtype(getattr(g.nodes[0].op.fn, "bucket_dtype",
+                                      "float32")))
         return Stage(g.kind, run, g.desc, g.in_vids, g.out_vids, g.schedule,
-                     axis, g.placement, g)
+                     axis, g.placement, g, arena_aval=aval)
 
     # -- fused stages --------------------------------------------------------
 
@@ -1715,9 +1901,27 @@ class Emit:
     @staticmethod
     def _map(g: StageIR):
         op = g.nodes[0].op
+        sizes = getattr(op.fn, "bucket_sizes", None)
+        if sizes is None:
+            def run(args, ax, _f=op.fn):
+                return (_f(*args),)
+            return run
 
-        def run(args, ax, _f=op.fn):
-            return (_f(*args),)
+        # Coalesce bucket pack: without an arena, the plain concat; with
+        # one, flatten every leaf into the persistent buffer in place —
+        # the same layout, but the destination is a donated buffer the
+        # caller keeps across steps instead of a fresh allocation
+        def run(args, ax, arena=None, _f=op.fn, _sizes=sizes):
+            if arena is None:
+                return (_f(*args),)
+            _check_pack_sizes(args, _sizes)
+            buf = arena
+            off = 0
+            for x, s in zip(args, _sizes):
+                buf = lax.dynamic_update_slice(
+                    buf, x.reshape(-1).astype(buf.dtype), (off,))
+                off += s
+            return (buf,)
         return run
 
     @staticmethod
@@ -1819,7 +2023,9 @@ def compile_rank_local(
                          config=config, in_avals=in_avals,
                          topology=topology)
     stages, final_dag = run_pipeline(dag, ctx, pipeline)
-    return CompiledProgram(stages, final_dag, topology=ctx.topology)
+    return CompiledProgram(stages, final_dag, topology=ctx.topology,
+                           overlap=getattr(config, "overlap_dispatch",
+                                           True))
 
 
 def compile_program(

@@ -11,18 +11,38 @@ This module is that layer.  :func:`build_plan` derives explicit
 dependency edges between emitted stages from the DAG's value ids and
 groups independent stages into concurrent **waves** (Kahn levels):
 every stage in wave *w* depends only on stages in waves < *w*, so a
-runtime may launch a whole wave at once.  Three consumers share the IR:
+runtime may launch a whole wave at once.  Within a wave the plan further
+partitions stages into per-axis **dispatch groups** (``wave_groups``):
+stages sharing a mesh axis contend for that axis's rings and must
+serialize; stages on different axes traverse disjoint links and are free
+to run concurrently.  Three consumers share the IR:
 
   * :meth:`repro.core.compiler.CompiledProgram.__call__` executes the
-    plan wave by wave (rank-local JAX issues the stages in plan order;
-    the waves document — and bound — the legal overlap),
+    plan wave by wave through :func:`execute`.  In overlapped mode the
+    wave's dispatch groups are issued round-robin into one merged
+    region: same-axis stages are tied together with explicit
+    ``lax.optimization_barrier`` edges (pinning the ring order in the
+    emitted HLO, so every rank issues the axis's collectives
+    identically), while cross-axis stages carry **no** ordering edges —
+    XLA's async scheduler may start their collectives concurrently.
+    Serial mode (``overlapped=False``) reproduces the strict
+    stage-ordered emission for A/B measurement.
   * :func:`repro.core.netmodel.program_time` costs the plan as a
     critical path with a per-tier overlap fraction instead of a
     sum of stage times,
   * :class:`repro.cgra.simulate.SwitchSim` advances its per-rank clocks
     wave by wave, overlapping stages that traverse *different* mesh
-    axes (disjoint links) and serializing stages that share one — the
-    measurement that validates the analytic overlap model.
+    axes (disjoint links, shared injection ports) and serializing
+    stages that share one — the measurement that calibrates the
+    analytic overlap model.
+
+:func:`execute` also threads persistent **bucket arenas** through the
+plan: a stage carrying an ``arena_slot`` (the Coalesce bucket packs)
+receives its pre-allocated flat buffer and writes leaves into it in
+place; the written buffers are returned alongside the program outputs so
+a caller can donate them back on the next step
+(``jax.jit(..., donate_argnums=...)``), dropping the pack transient from
+2× to ~1× bucket size.
 
 The plan is deliberately dumb data (stage indices + edges + waves): it
 duck-types against anything carrying ``in_vids``/``out_vids``, so the
@@ -32,7 +52,7 @@ cost model can consume it without importing the compiler.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Sequence
+from typing import Any, Optional, Sequence
 
 PyTree = Any
 
@@ -43,9 +63,12 @@ class ExecutionPlan:
 
     ``deps[i]`` are the stage indices stage *i* consumes values from;
     ``waves`` partitions ``range(len(stages))`` into concurrency groups
-    in topological order.  ``stages`` is the same sequence the owning
-    ``CompiledProgram`` holds (kept here so the cost model and the
-    simulator can walk the plan alone).
+    in topological order; ``wave_groups[w]`` splits wave ``w`` into
+    per-axis dispatch groups ``(axis, stage_indices)`` — stages within a
+    group share a mesh axis (or are axis-less local compute) and
+    serialize, groups are mutually independent.  ``stages`` is the same
+    sequence the owning ``CompiledProgram`` holds (kept here so the cost
+    model and the simulator can walk the plan alone).
     """
 
     stages: tuple
@@ -53,6 +76,7 @@ class ExecutionPlan:
     outputs: tuple[int, ...]
     deps: tuple[tuple[int, ...], ...]
     waves: tuple[tuple[int, ...], ...]
+    wave_groups: tuple[tuple[tuple[str, tuple[int, ...]], ...], ...] = ()
 
     @property
     def n_stages(self) -> int:
@@ -70,7 +94,7 @@ class ExecutionPlan:
 
     def validate(self) -> None:
         """Every stage appears in exactly one wave, strictly after all of
-        its dependencies' waves."""
+        its dependencies' waves; wave_groups re-partition each wave."""
         seen: dict[int, int] = {}
         for w, group in enumerate(self.waves):
             for i in group:
@@ -85,6 +109,45 @@ class ExecutionPlan:
                     raise ValueError(
                         f"stage {i} (wave {seen[i]}) depends on stage {d} "
                         f"(wave {seen[d]}) — waves are not topological")
+        for wave, groups in zip(self.waves, self.dispatch_groups()):
+            flat = sorted(i for _, idxs in groups for i in idxs)
+            if flat != sorted(wave):
+                raise ValueError(
+                    f"wave_groups {groups} do not partition wave {wave}")
+
+    def dispatch_groups(self) -> tuple:
+        """The per-wave axis dispatch groups — the stored ``wave_groups``
+        when present, else derived on the fly (a plan built by hand with
+        just stages/waves still dispatches correctly instead of silently
+        running nothing)."""
+        if len(self.wave_groups) == len(self.waves):
+            return self.wave_groups
+        return tuple(_axis_groups(self.stages, w) for w in self.waves)
+
+
+def _axis_groups(stages: Sequence,
+                 wave: tuple[int, ...]) -> tuple[tuple[str, tuple[int, ...]],
+                                                 ...]:
+    """Partition one wave into per-axis dispatch groups.
+
+    Stages sharing a (non-empty) axis contend for that axis's rings and
+    form one serialized group, in plan order.  Axis-less stages (local
+    maps) are each their own singleton group — nothing serializes free
+    compute.
+    """
+    by_axis: dict[str, list[int]] = {}
+    groups: list[tuple[str, tuple[int, ...]]] = []
+    for i in wave:
+        ax = getattr(stages[i], "axis", "")
+        if not ax:
+            groups.append(("", (i,)))
+            continue
+        if ax not in by_axis:
+            by_axis[ax] = []
+            groups.append((ax, by_axis[ax]))  # placeholder; fixed below
+        by_axis[ax].append(i)
+    return tuple((ax, tuple(idxs) if isinstance(idxs, list) else idxs)
+                 for ax, idxs in groups)
 
 
 def build_plan(stages: Sequence, num_inputs: int,
@@ -112,26 +175,95 @@ def build_plan(stages: Sequence, num_inputs: int,
     n_waves = (max(levels) + 1) if levels else 0
     waves = tuple(tuple(i for i, l in enumerate(levels) if l == w)
                   for w in range(n_waves))
+    wave_groups = tuple(_axis_groups(stages, w) for w in waves)
     plan = ExecutionPlan(tuple(stages), num_inputs, tuple(outputs),
-                         tuple(deps), waves)
+                         tuple(deps), waves, wave_groups)
     plan.validate()
     return plan
 
 
-def execute(plan: ExecutionPlan, args: Sequence[PyTree]) -> tuple:
+def _barrier_tie(prev_outs: tuple, ins: tuple) -> tuple:
+    """Tie a stage's inputs to its same-axis predecessor's outputs with an
+    ``optimization_barrier`` edge, pinning the axis's collective order in
+    the emitted HLO.  Falls back to trace order on jax versions without
+    the primitive."""
+    from jax import lax
+
+    barrier = getattr(lax, "optimization_barrier", None)
+    if barrier is None or not prev_outs:      # pragma: no cover - old jax
+        return ins
+    tied = barrier(tuple(ins) + tuple(prev_outs))
+    return tuple(tied[:len(ins)])
+
+
+def _issue_order(groups) -> list[int]:
+    """Round-robin across a wave's dispatch groups: the k-th stage of
+    every axis group is issued before any group's (k+1)-th, so
+    different-axis collectives sit adjacent in the merged region and
+    XLA's async scheduler can start them together."""
+    order: list[int] = []
+    cursors = [list(idxs) for _, idxs in groups]
+    while any(cursors):
+        for c in cursors:
+            if c:
+                order.append(c.pop(0))
+    return order
+
+
+def execute(plan: ExecutionPlan, args: Sequence[PyTree], *,
+            arenas: Optional[Sequence] = None,
+            overlapped: bool = True) -> tuple:
     """Run the plan over rank-local values, wave by wave.
 
-    Rank-local JAX execution is sequential either way; walking the plan
-    (rather than the flat stage list) keeps the runtime honest about the
-    dependency structure the cost model and the dataplane simulator
-    reason over, and is where an async transport would launch each wave
-    concurrently.  Always returns a tuple, one entry per program output.
+    ``overlapped=True`` (the default) issues each wave as one merged
+    region: same-axis stages are chained with explicit
+    ``optimization_barrier`` edges (they contend for one ring — every
+    rank must issue them in the same order), different-axis stages are
+    interleaved round-robin with no ordering edges between them, so
+    XLA's latency-hiding scheduler may run their collectives
+    concurrently.  ``overlapped=False`` reproduces the strict
+    stage-ordered serial emission (the pre-overlap runtime) for A/B
+    comparison.
+
+    ``arenas`` are the persistent flat buffers for the program's bucket
+    packs (one per ``arena_slot``, see
+    :meth:`repro.core.compiler.CompiledProgram.make_arenas`); each pack
+    writes its leaves into its arena in place rather than concatenating
+    into a fresh buffer.  When given, returns ``(outputs, new_arenas)``
+    with the written buffers, so the caller can donate them back on the
+    next call; otherwise returns just the output tuple.
     """
     env: dict[int, PyTree] = dict(enumerate(args))
-    for wave in plan.waves:
-        for i in wave:
-            st = plan.stages[i]
-            outs = st.run(tuple(env[v] for v in st.in_vids), st.axis)
-            for vid, o in zip(st.out_vids, outs):
-                env[vid] = o
-    return tuple(env[v] for v in plan.outputs)
+    new_arenas = list(arenas) if arenas is not None else None
+
+    def run_stage(i: int, prev_outs: tuple) -> tuple:
+        st = plan.stages[i]
+        ins = tuple(env[v] for v in st.in_vids)
+        if overlapped and prev_outs:
+            ins = _barrier_tie(prev_outs, ins)
+        slot = getattr(st, "arena_slot", None)
+        if slot is not None and new_arenas is not None:
+            outs = st.run(ins, st.axis, arena=new_arenas[slot])
+            new_arenas[slot] = outs[0]
+        else:
+            outs = st.run(ins, st.axis)
+        for vid, o in zip(st.out_vids, outs):
+            env[vid] = o
+        return outs
+
+    for wave, groups in zip(plan.waves, plan.dispatch_groups()):
+        if not overlapped:
+            for i in wave:
+                run_stage(i, ())
+            continue
+        last_outs: dict[str, tuple] = {}
+        for i in _issue_order(groups):
+            ax = plan.stages[i].axis
+            prev = last_outs.get(ax, ()) if ax else ()
+            outs = run_stage(i, prev)
+            if ax:
+                last_outs[ax] = outs
+    outs = tuple(env[v] for v in plan.outputs)
+    if new_arenas is not None:
+        return outs, tuple(new_arenas)
+    return outs

@@ -321,12 +321,39 @@ def acis_fused_allreduce_alltoall(n: int, m_hist: int, m_keys: int,
                                   p: NetParams = PAPER, *,
                                   placement=None) -> float:
     """Shared schedule: the histogram hops ride the key exchange; the
-    reduction is free behind the (larger) key traffic."""
+    reduction is free behind the (larger) key traffic.
+
+    This is the *application-level* emulator term (one per-collective
+    software/PCIe base cost included), paired against the MPI baseline in
+    the paper figures.  The per-stage compiled-plan model —
+    :func:`stage_time` / the dataplane simulator — uses
+    :func:`fused_ar_a2a_ring_time`, the bare shared-traversal walk.
+    """
     keys = acis_alltoall(n, m_keys, p)
     hist_exposed = max(0.0, acis_allreduce(n, m_hist, p,
                                            placement=placement) - keys)
     return keys + FUSED_EXPOSED_FRACTION * hist_exposed \
         + m_hist / accel_rate(p, placement)
+
+
+def fused_ar_a2a_ring_time(n: int, m_hist: int, m_keys: int,
+                           p: NetParams = PAPER, *,
+                           placement=None) -> float:
+    """Shared-ring traversal of the fused AR+A2A stage, hop-exact.
+
+    Mirrors the dataplane simulator's walk (one traversal, n-1 hops):
+    every hop forwards one key chunk (``m_keys/n``) *plus* the whole
+    histogram (the reduction rides every hop), and combines the
+    histogram at the placed rate.  No per-collective software base cost
+    — per-stage models are composed by :func:`program_time`, which is
+    also what the simulator validates.
+    """
+    if n <= 1:
+        return 0.0
+    hop = p.fpga_link + p.port
+    chunk = m_keys / n + m_hist
+    return (n - 1) * (hop + chunk / p.bw
+                      + m_hist / accel_rate(p, placement))
 
 
 # ---------------------------------------------------------------------------
@@ -341,12 +368,16 @@ _MAP_KINDS = {"map", "map+allreduce", "map+reduce_scatter",
 
 def stage_time(kind: str, n: int, m: int, p: NetParams = PAPER, *,
                placement=None, schedule: str = "",
-               codec_ratio: float = 1.0) -> float:
+               codec_ratio: float = 1.0,
+               m_parts: Optional[tuple] = None) -> float:
     """Predicted wall time of one emitted stage.
 
     ``kind`` is a :class:`~repro.core.compiler.Stage` kind, ``n`` the
     size of the axis it traverses, ``m`` the per-rank payload bytes
     *before* wire coding (``codec_ratio`` scales what actually travels).
+    ``m_parts`` splits ``m`` per operand for multi-input stages whose
+    traversal treats the operands asymmetrically (the fused AR+A2A pair:
+    ``(m_hist, m_keys)``); without it an even split is assumed.
 
     ``placement`` is the stage's CGRA mapping.  Stages that stream a
     fused MAP body **require** one — the old flat ``accel_clock *
@@ -417,13 +448,14 @@ def stage_time(kind: str, n: int, m: int, p: NetParams = PAPER, *,
                                     latency_optimal=True)
         return compress + scale + ring_allreduce_time(n, m // 2, p)
     if kind == "allreduce+alltoall":
-        # per-rank payloads of the pair are summed into m by the caller;
-        # model the traversal as the fused shared schedule
+        # the pair's per-rank payloads: the stamped per-operand split
+        # (hist, keys), or an even split of the summed m as a fallback
+        m_hist, m_keys = (m_parts if m_parts and len(m_parts) == 2
+                          else (m // 2, m // 2))
         if fallback:
             return host_fallback_time(m, p) \
-                + mpi_allreduce_then_alltoall(n, m // 2, m // 2, p)
-        return acis_fused_allreduce_alltoall(n, m // 2, m // 2, p,
-                                             placement=pl)
+                + mpi_allreduce_then_alltoall(n, m_hist, m_keys, p)
+        return fused_ar_a2a_ring_time(n, m_hist, m_keys, p, placement=pl)
     raise ValueError(f"unknown stage kind {kind!r}")
 
 
@@ -433,13 +465,24 @@ def stage_time(kind: str, n: int, m: int, p: NetParams = PAPER, *,
 
 # How much of a *non-critical* concurrent stage's time the fabric hides
 # when independent stages of one wave run together.  Keyed by the link
-# tier of the stage being overlapped: fast intra-pod rings are (nearly)
-# disjoint and overlap almost fully, thin converging DCI links contend
-# at the inter-pod switch ports, and purely local (axis-less) compute
-# streams behind whatever communication is in flight.  1.0 = the stage
-# is entirely hidden behind the wave's critical path, 0.0 = it
-# serializes (the old sum-of-stages model).
-TIER_OVERLAP = {"ici": 0.9, "dci": 0.6, "local": 1.0}
+# tier of the stage being overlapped: different-axis rings use disjoint
+# links, but every rank *injects* into all of its rings through one
+# port, so the wire-serialization share of a concurrent stage stays
+# exposed while propagation and in-switch compute hide.  Purely local
+# (axis-less) compute streams behind whatever communication is in
+# flight.  1.0 = the stage is entirely hidden behind the wave's critical
+# path, 0.0 = it serializes (the old sum-of-stages model).
+#
+# The ici/dci fractions are CALIBRATED, not priors: fitted by
+# :func:`fit_tier_overlap` against the dataplane simulator's overlapped
+# ``SimReport.t_end`` (which charges injection contention at the shared
+# port) across the cross-axis points of ``benchmarks/execplan.py``
+# (`python -m benchmarks.run` prints the current fit as
+# ``execplan_tier_overlap_calibration``).  The pre-calibration priors
+# were ici 0.9 / dci 0.6 — far too optimistic for bandwidth-bound
+# stages, whose time is mostly injection serialization the shared port
+# cannot hide.
+TIER_OVERLAP = {"ici": 0.29, "dci": 0.13, "local": 1.0}
 
 
 def plan_stage_time(st, topo=None, p: NetParams = PAPER) -> Optional[float]:
@@ -470,9 +513,42 @@ def plan_stage_time(st, topo=None, p: NetParams = PAPER) -> Optional[float]:
             ratio = float(codec.wire_ratio)
     try:
         return stage_time(st.kind, n, m, net, placement=st.placement,
-                          schedule=st.schedule, codec_ratio=ratio)
+                          schedule=st.schedule, codec_ratio=ratio,
+                          m_parts=getattr(ir, "bytes_parts", None))
     except ValueError:
         return None
+
+
+def _tier_of(axis: str, topo) -> str:
+    if not axis:
+        return "local"
+    spec = topo.spec(axis) if topo is not None else None
+    return spec.tier if spec is not None else "ici"
+
+
+def _wave_terms(plan, topo=None, p: NetParams = PAPER):
+    """Per wave: ``(base, exposed)`` — the longest per-axis serialized
+    chain, and every *other* axis's chain keyed by its link tier (the
+    part a tier's overlap fraction can hide).  The shared decomposition
+    under :func:`program_time` and :func:`fit_tier_overlap`."""
+    terms = []
+    for wave in plan.waves:
+        per_axis: dict[str, float] = {}
+        for i in wave:
+            st = plan.stages[i]
+            t = plan_stage_time(st, topo, p)
+            if t:
+                per_axis[st.axis] = per_axis.get(st.axis, 0.0) + t
+        if not per_axis:
+            continue
+        longest_axis = max(per_axis, key=per_axis.get)
+        exposed: dict[str, float] = {}
+        for ax, t in per_axis.items():
+            if ax != longest_axis:
+                tier = _tier_of(ax, topo)
+                exposed[tier] = exposed.get(tier, 0.0) + t
+        terms.append((per_axis[longest_axis], exposed))
+    return terms
 
 
 def program_time(plan, topo=None, p: NetParams = PAPER, *,
@@ -493,27 +569,90 @@ def program_time(plan, topo=None, p: NetParams = PAPER, *,
     ov = dict(TIER_OVERLAP)
     if overlap:
         ov.update(overlap)
-
-    def tier_of(axis: str) -> str:
-        if not axis:
-            return "local"
-        spec = topo.spec(axis) if topo is not None else None
-        return spec.tier if spec is not None else "ici"
-
     total = 0.0
-    for wave in plan.waves:
-        per_axis: dict[str, float] = {}
-        for i in wave:
-            st = plan.stages[i]
-            t = plan_stage_time(st, topo, p)
-            if t:
-                per_axis[st.axis] = per_axis.get(st.axis, 0.0) + t
-        if not per_axis:
-            continue
-        longest_axis = max(per_axis, key=per_axis.get)
-        wave_t = per_axis[longest_axis]
-        for ax, t in per_axis.items():
-            if ax != longest_axis:
-                wave_t += (1.0 - ov.get(tier_of(ax), 1.0)) * t
-        total += wave_t
+    for base, exposed in _wave_terms(plan, topo, p):
+        total += base
+        for tier, t in exposed.items():
+            total += (1.0 - ov.get(tier, 1.0)) * t
     return total
+
+
+def fit_tier_overlap(samples, *, tiers=("ici", "dci"),
+                     p: NetParams = PAPER) -> dict:
+    """Least-squares calibration of :data:`TIER_OVERLAP` from measured
+    overlapped end-to-end latencies.
+
+    ``samples`` is an iterable of ``(plan, topo, t_measured)`` — e.g. the
+    dataplane simulator's ``SimReport.t_end`` for programs whose waves
+    hold cross-axis stages.  :func:`program_time` is linear in the
+    per-tier exposure ``x_t = 1 - overlap_t``::
+
+        t = Σ_w base_w + Σ_t x_t · B_t ,  B_t = Σ_w exposed_w[t]
+
+    so the fit solves the normal equations of ``Σ_i (Σ_t B_it x_t -
+    (t_i - A_i))²`` over the requested tiers, clamping each overlap into
+    [0, 1].  Tiers with no exposure in any sample keep their current
+    :data:`TIER_OVERLAP` value.  Returns ``{tier: fitted_overlap}``
+    (does not mutate the module constant).
+    """
+    samples = [(plan, topo, t_meas,
+                list(_wave_terms(plan, topo, p)))
+               for plan, topo, t_meas in samples]
+    live = list(tiers)
+    while True:
+        # assemble the normal equations over the currently fittable
+        # tiers; any other tier's exposure is charged at its current
+        # TIER_OVERLAP value and folded into the base
+        k = len(live)
+        gram = [[0.0] * k for _ in range(k)]
+        rhs = [0.0] * k
+        for _, _, t_meas, terms in samples:
+            base = 0.0
+            b = [0.0] * k
+            for wave_base, exposed in terms:
+                base += wave_base
+                for t_name, t_val in exposed.items():
+                    if t_name in live:
+                        b[live.index(t_name)] += t_val
+                    else:
+                        base += (1.0 - TIER_OVERLAP.get(t_name, 1.0)) \
+                            * t_val
+            r = t_meas - base
+            for i in range(k):
+                rhs[i] += b[i] * r
+                for j in range(k):
+                    gram[i][j] += b[i] * b[j]
+        # a tier with no exposure, or whose column is (nearly) linearly
+        # dependent on the others, cannot be identified from these
+        # samples: drop it from the fit (it keeps its current value)
+        # and RE-solve — silently zeroing its variable while reporting
+        # the old constant would make the returned fit inconsistent
+        # with the equations it was solved from
+        dead = next((t for i, t in enumerate(live)
+                     if gram[i][i] <= 0.0), None)
+        if dead is None:
+            a = [row[:] + [rhs[i]] for i, row in enumerate(gram)]
+            singular = None
+            for col in range(k):
+                piv = max(range(col, k), key=lambda r_: abs(a[r_][col]))
+                scale = max(abs(gram[col][col]), 1e-30)
+                if abs(a[piv][col]) < 1e-9 * scale:
+                    singular = live[col]
+                    break
+                a[col], a[piv] = a[piv], a[col]
+                for r_ in range(k):
+                    if r_ != col and a[r_][col]:
+                        f = a[r_][col] / a[col][col]
+                        a[r_] = [x - f * y for x, y in zip(a[r_], a[col])]
+            dead = singular
+        if dead is not None:
+            live.remove(dead)
+            if live:
+                continue
+            return {t: TIER_OVERLAP[t] for t in tiers
+                    if t in TIER_OVERLAP}
+        fitted = dict(TIER_OVERLAP)
+        for i, t in enumerate(live):
+            x = a[i][-1] / a[i][i]
+            fitted[t] = min(max(1.0 - x, 0.0), 1.0)
+        return {t: fitted[t] for t in tiers if t in fitted}

@@ -101,6 +101,12 @@ class Node:
     #                                        chunk-local; shape transforms
     #                                        such as the compiler's pad/unpad
     #                                        bookkeeping maps are not)
+    elementwise: bool = False              # MAP: fn is strictly per-element
+    #                                        (f(concat(xs)) == concat(f(x))),
+    #                                        so Coalesce may hoist it from
+    #                                        per-leaf split outputs onto the
+    #                                        flat bucket — a caller promise,
+    #                                        declared at trace time
     name: str = ""
 
     def label(self) -> str:
@@ -123,12 +129,17 @@ class Node:
 
 # -- user-facing constructors ------------------------------------------------
 
-def Map(fn: Callable, name: str = "", fusable: bool = True) -> Node:
+def Map(fn: Callable, name: str = "", fusable: bool = True,
+        elementwise: bool = False) -> Node:
     """``fusable=False`` marks a map whose body is *not* chunk-local
     (e.g. a cumsum or other cross-position transform): the compiler will
     never hop-fuse it into a collective's chunk loop, and the CGRA
-    mapper still places it as a whole-payload pipeline stage."""
-    return Node(OpKind.MAP, fn=fn, name=name, fusable=fusable)
+    mapper still places it as a whole-payload pipeline stage.
+    ``elementwise=True`` additionally promises the body is strictly
+    per-element, letting Coalesce run it once on a flat bucket instead of
+    once per leaf."""
+    return Node(OpKind.MAP, fn=fn, name=name, fusable=fusable,
+                elementwise=elementwise)
 
 
 def Reduce(monoid: Monoid = ADD, axis: Axis = None) -> Node:

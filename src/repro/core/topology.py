@@ -70,7 +70,12 @@ def hierarchical_all_reduce(
     from repro.core import api, tracing
 
     del backend
-    key = (inner_axis, outer_axis, monoid.name, outer_codec.name, mean)
+    # the rank-local aval keys the cache too: SelectSchedule and Coalesce
+    # size the schedule from it, and the per-axis ring sizes are read
+    # live (we are inside the caller's shard_map region at trace time)
+    sizes = api.live_axis_sizes((inner_axis, outer_axis))
+    key = (inner_axis, outer_axis, monoid.name, outer_codec.name, mean,
+           tuple(x.shape), str(x.dtype), tuple(sorted(sizes.items())))
     compiled = _COMPILE_CACHE.get(key)
     if compiled is None:
         engine = api.make_engine("acis", inner_axis=inner_axis,
@@ -90,7 +95,9 @@ def hierarchical_all_reduce(
             r = tracing.reduce(v, monoid, axis="auto")
             return tracing.map(_mean, r, name="mean") if mean else r
 
-        compiled = _COMPILE_CACHE[key] = engine.compile(prog)
+        compiled = _COMPILE_CACHE[key] = engine.compile(
+            prog, in_avals=(jax.ShapeDtypeStruct(x.shape, x.dtype),),
+            axis_size=sizes or None)
     return compiled(x)[0]
 
 

@@ -120,7 +120,7 @@ def trace(fn: Callable, *, name: Optional[str] = None,
 # -- traced ops (the user-facing program vocabulary) -------------------------
 
 def map(fn: Callable, *xs: Value, name: str = "",  # noqa: A001
-        fusable: bool = True) -> Value:
+        fusable: bool = True, elementwise: bool = False) -> Value:
     """Apply ``fn`` elementwise/locally; fusable into adjacent hops.
 
     ``fn`` must be *chunk-local* (elementwise or otherwise independent of
@@ -134,11 +134,16 @@ def map(fn: Callable, *xs: Value, name: str = "",  # noqa: A001
 
     Accepts multiple inputs (``fn`` is called as ``fn(*tensors)``) — the
     only op that may, which is what lets one program combine tensors.
+
+    ``elementwise=True`` is a stronger promise than chunk-locality: the
+    body is strictly per-element (``fn(concat(xs)) == concat(fn(x) for
+    x)``), which lets the Coalesce pass hoist the map off every bucketed
+    leaf and run it once on the flat bucket instead.
     """
     if not xs:
         raise TypeError("map needs at least one input value")
     return _current("map").emit(
-        Node(OpKind.MAP, fn=fn, fusable=fusable,
+        Node(OpKind.MAP, fn=fn, fusable=fusable, elementwise=elementwise,
              name=name or getattr(fn, "__name__", "")), xs)
 
 

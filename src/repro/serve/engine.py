@@ -62,8 +62,15 @@ class ServeEngine:
         self.done: list[Completion] = []
         self.ticks = 0
 
+        # the KV cache is persistent, step-threaded state exactly like the
+        # train path's bucket arenas: donate it so every decode tick's
+        # cache writes alias the previous buffers instead of allocating a
+        # full cache copy per token (the engine always rebinds
+        # ``self.cache`` to the returned cache, so the donated input is
+        # never reused)
         self._decode = jax.jit(
-            lambda p, tok, cache, idx: model.decode_step(p, tok, cache, idx))
+            lambda p, tok, cache, idx: model.decode_step(p, tok, cache, idx),
+            donate_argnums=(2,))
 
     def submit(self, req: Request):
         assert len(req.prompt) + req.max_new_tokens < self.max_seq

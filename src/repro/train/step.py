@@ -46,11 +46,17 @@ class TrainState:
     opt: PyTree
     step: jax.Array
     ef_residual: Optional[PyTree] = None   # Type 3 look-aside memory
+    # persistent gradient-sync bucket arenas (engine.init_arenas):
+    # threaded through the step and donated with the state, so the
+    # Coalesce bucket packs write in place instead of re-allocating a 2×
+    # transient every sync
+    sync_arenas: Optional[tuple] = None
 
 
 jax.tree_util.register_pytree_node(
     TrainState,
-    lambda s: ((s.params, s.opt, s.step, s.ef_residual), None),
+    lambda s: ((s.params, s.opt, s.step, s.ef_residual, s.sync_arenas),
+               None),
     lambda aux, ch: TrainState(*ch))
 
 
@@ -202,54 +208,99 @@ def _opt_specs(opt_shapes: PyTree, pspecs: PyTree) -> PyTree:
 
 def build_train_step_acis(model: Model, optimizer: Optimizer, mesh: Mesh,
                           engine: CollectiveEngine, *,
-                          microbatches: int = 1) -> Callable:
+                          microbatches: int = 1,
+                          donate: bool = False) -> Callable:
     """Params replicated over DP axes (TP over 'model' untouched); gradient
-    sync + update run manual-over-DP via the CollectiveEngine."""
+    sync + update run manual-over-DP via the CollectiveEngine.
+
+    When the state carries ``sync_arenas`` (see :func:`init_state` with
+    ``arenas=True``), they are threaded through the sync and returned in
+    the new state; pass ``donate=True`` so the whole state — arenas
+    included — is donated to the step and XLA writes the bucket packs in
+    place instead of allocating a 2× transient per sync.  ``donate``
+    invalidates the state passed in (the usual donation contract), so it
+    is opt-in.
+    """
     dp = rules.dp_axes(mesh)
     manual_axes = set(dp)
 
     def step_fn(state: TrainState, batch) -> tuple[TrainState, dict]:
-        def local(params, opt, step, residual, tokens, context):
+        def local(params, opt, step, residual, arenas, tokens, context):
             b = {"tokens": tokens}
             if context is not None:
                 b["context"] = context
             grads, metrics = _accumulate_grads(
                 model, params, b, microbatches, None)
-            synced, new_residual = engine.gradient_sync(grads, residual)
+            if arenas is not None:
+                synced, new_residual, new_arenas = engine.gradient_sync(
+                    grads, residual, arenas=arenas)
+            else:
+                synced, new_residual = engine.gradient_sync(grads, residual)
+                new_arenas = None
             new_params, new_opt = optimizer.update(synced, opt, params, step)
             metrics = jax.tree.map(
                 lambda x: jax.lax.pmean(x, dp), metrics)
             gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
                               for g in jax.tree.leaves(synced)))
             metrics["grad_norm"] = gn
-            return new_params, new_opt, new_residual, metrics
+            return new_params, new_opt, new_residual, new_arenas, metrics
 
         tokens = batch["tokens"]
         context = batch.get("context")
-        in_specs = (P(), P(), P(), P(), P(dp), P(dp))
-        out_specs = (P(), P(), P(), P())
+        in_specs = (P(), P(), P(), P(), P(), P(dp), P(dp))
+        out_specs = (P(), P(), P(), P(), P())
         if context is None:
-            fn = lambda p, o, s, r, t: local(p, o, s, r, t, None)
-            in_specs = in_specs[:5]
+            fn = lambda p, o, s, r, a, t: local(p, o, s, r, a, t, None)
+            in_specs = in_specs[:6]
         else:
             fn = local
         mapped = jax.shard_map(
             fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
             axis_names=manual_axes, check_vma=False)
         args = (state.params, state.opt, state.step, state.ef_residual,
-                tokens) + (() if context is None else (context,))
-        new_params, new_opt, new_residual, metrics = mapped(*args)
+                state.sync_arenas, tokens) \
+            + (() if context is None else (context,))
+        new_params, new_opt, new_residual, new_arenas, metrics = \
+            mapped(*args)
         return TrainState(new_params, new_opt, state.step + 1,
-                          new_residual), metrics
+                          new_residual, new_arenas), metrics
 
-    return jax.jit(step_fn)
+    return jax.jit(step_fn, donate_argnums=(0,) if donate else ())
 
 
 def init_state(model: Model, optimizer: Optimizer, key,
-               engine: Optional[CollectiveEngine] = None) -> TrainState:
+               engine: Optional[CollectiveEngine] = None, *,
+               mesh: Optional[Mesh] = None,
+               arenas: bool = False,
+               microbatches: int = 1) -> TrainState:
+    """``arenas=True`` (acis backends, ``mesh`` required) additionally
+    allocates the persistent gradient-sync bucket arenas so the step can
+    write bucket packs in place — pair with
+    ``build_train_step_acis(..., donate=True)``.  Pass the step's
+    ``microbatches`` too: it decides the grad dtypes the arenas must
+    match (accumulated grads are f32, single-microbatch grads carry the
+    param dtype)."""
     params = model.init(key)
     opt = optimizer.init(params)
     residual = None
+    sync_arenas = None
     if engine is not None and engine.config.backend != "xla":
         residual = engine.init_state(params)
-    return TrainState(params, opt, jnp.zeros((), jnp.int32), residual)
+        if arenas:
+            if mesh is None:
+                raise ValueError("init_state(arenas=True) needs mesh= — "
+                                 "bucket boundaries depend on the DP "
+                                 "ring sizes")
+            sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+            axis_sizes = {a: sizes[a]
+                          for a in (engine.inner_axis, engine.outer_axis)
+                          if a is not None and a in sizes}
+            grads_like = jax.tree.map(
+                lambda p: jax.ShapeDtypeStruct(
+                    p.shape,
+                    jnp.float32 if microbatches > 1 else p.dtype),
+                params)
+            sync_arenas = engine.init_arenas(grads_like,
+                                             axis_sizes=axis_sizes)
+    return TrainState(params, opt, jnp.zeros((), jnp.int32), residual,
+                      sync_arenas)
