@@ -11,9 +11,10 @@ Prints ``name,us_per_call,derived`` CSV.  Default mode prints the summary
 rows (per-figure means + the real-JAX engine measurements); ``--full``
 additionally dumps every (collective × nodes × size) emulator point.
 ``--json`` additionally writes ``BENCH_netmodel.json`` (name →
-us_per_call) and ``BENCH_cgra.json`` (per-benchmark simulated vs
-analytic switch latency from the dataplane simulator) so CI can record
-both trajectories as artifacts.
+us_per_call), ``BENCH_cgra.json`` (per-benchmark simulated vs
+analytic switch latency from the dataplane simulator) and
+``BENCH_tune.json`` (autotuning-loop fidelity + search outcome) so CI
+can record the trajectories as artifacts.
 """
 
 import json
@@ -21,6 +22,7 @@ import sys
 
 JSON_PATH = "BENCH_netmodel.json"
 CGRA_JSON_PATH = "BENCH_cgra.json"
+TUNE_JSON_PATH = "BENCH_tune.json"
 
 
 def main() -> None:
@@ -65,6 +67,12 @@ def main() -> None:
     from benchmarks import execplan
     rows += execplan.rows()
 
+    # autotuning loop: self-replay fidelity, fit recovery, tuned vs
+    # default search, replay-vs-rerun agreement
+    from benchmarks import tune
+    tune_rows = tune.rows()
+    rows += tune_rows
+
     print("name,us_per_call,derived")
     for name, us, derived in rows:
         print(f"{name},{us:.2f},{derived}")
@@ -100,6 +108,11 @@ def main() -> None:
             json.dump(cgra.record(cgra_rows), f, indent=2, sort_keys=True)
             f.write("\n")
         print(f"wrote {CGRA_JSON_PATH}", file=sys.stderr)
+
+        with open(TUNE_JSON_PATH, "w") as f:
+            json.dump(tune.record(tune_rows), f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"wrote {TUNE_JSON_PATH}", file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,211 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+# match benchmarks.run — the wall-clock A/B shards over 8 host devices
+
+"""Autotuning benchmark: the repro.tune loop measured end to end.
+
+Record a simulated trace of the 64-leaf ragged gradient sync, replay it
+(self-replay fidelity), fit the simulator's link parameters back out of
+it (fit recovery), search the tunable config space with replay as the
+objective (tuned vs default ``program_time``), and cross-check the
+replayed score of the tuned plan against an actual simulator rerun
+(replay-vs-rerun agreement).  Everything except the ``jax_*`` wall-clock
+rows is deterministic — CI gates them via ``BENCH_tune.json`` +
+``benchmarks/baseline_tune.json``.
+
+Two workloads from :mod:`benchmarks.execplan`: the *mixed* ragged
+64-leaf pytree (big matmul leaves + small tail; the model-derived
+default bucket is already optimal there — the search must find nothing
+and say so) and the *tail* all-small 64-leaf pytree (dispatch-bound;
+the regime where the search beats the default bucket size).
+"""
+
+import dataclasses
+
+import numpy as np
+
+from benchmarks.execplan import (AXIS_SIZE, _collectives, _ragged_sizes,
+                                 _sync_program, _tail_sizes)
+
+N_LEAVES = 64
+
+
+def _build(sizes, axis_sizes):
+    """Candidate builder: compile the ragged sync under one config."""
+    from repro.core import make_engine
+
+    def build(cfg):
+        eng = make_engine("acis")
+        eng.config = cfg
+        return _sync_program(sizes, eng, axis_sizes)
+    return build
+
+
+def _sim_inputs(sizes, grid, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.standard_normal(grid + (s,)).astype(np.float32)
+            for s in sizes]
+
+
+def rows() -> list[tuple]:
+    """CSV rows: self-replay fidelity, fit recovery, search outcome,
+    replay-vs-rerun agreement, and the measured wall-clock A/B of the
+    tuned config."""
+    import repro.tune as tune
+    from repro.cgra.simulate import SwitchSim
+    from repro.core import make_engine
+
+    out = []
+
+    # -- self-replay fidelity (acceptance: within 5%) ----------------------
+    sizes = _ragged_sizes()
+    eng = make_engine("acis")
+    default = _sync_program(sizes, eng, {"data": 4})
+    ins = _sim_inputs(sizes, (4,))
+    _, trace, report = tune.record_sim(
+        default, SwitchSim(default.topology), *ins)
+    r_self = tune.replay(default.plan, trace, default.topology)
+    out.append((
+        f"tune_selfreplay_sync{N_LEAVES}_ratio",
+        r_self.t_end / report.t_end,
+        f"replay_us={r_self.t_end * 1e6:.2f}"
+        f",sim_us={report.t_end * 1e6:.2f}"
+        f",matched={r_self.matched}/{len(default.plan.stages)}"))
+
+    # -- fit recovery: perturbed sim link params come back out -------------
+    fit_sizes = [4096, 65536, 131072, 524288, 8192, 262144]
+    per_leaf = _sync_program(
+        fit_sizes, make_engine("acis", bucket_bytes=0), {"data": 4})
+    sim = SwitchSim(per_leaf.topology)
+    true = dataclasses.replace(sim.nets["data"],
+                               bw=sim.nets["data"].bw * 0.5,
+                               fpga_link=sim.nets["data"].fpga_link * 2.0)
+    sim.nets["data"] = true
+    _, fit_trace, _ = tune.record_sim(
+        per_leaf, sim, *_sim_inputs(fit_sizes, (4,)))
+    fit = tune.fit_net_params(
+        [(per_leaf.plan, per_leaf.topology, fit_trace)], tiers=("ici",))
+    got = fit.tiers["ici"]
+    out.append((
+        "tune_fit_bw_ratio", got.bw / true.bw,
+        f"fitted_gbps={got.bw / 1e9:.2f},true_gbps={true.bw / 1e9:.2f}"
+        f",link_ratio={got.fpga_link / true.fpga_link:.4f}"
+        f",residual={fit.residual:.2e},stages={fit.n_stages}"))
+
+    # -- search: tuned vs default program_time on the ragged tail ----------
+    base = make_engine("acis").config
+    build = _build(_tail_sizes(), {"data": AXIS_SIZE})
+    res = tune.search(build, base=base)
+    tuned_cfg = dataclasses.replace(base, **res.overrides)
+    tuned = build(tuned_cfg)
+    dflt = build(base)
+    t_tuned = tuned.program_time()
+    t_dflt = dflt.program_time()
+    out.append((
+        f"tune_search_sync{N_LEAVES}_tail", t_tuned * 1e6,
+        f"speedup={t_dflt / t_tuned:.4f}"
+        f",default_us={t_dflt * 1e6:.2f}"
+        f",overrides={'|'.join(f'{k}:{v}' for k, v in sorted(res.overrides.items())) or 'none'}"
+        f",evals={res.n_evals}"
+        f",collectives={_collectives(tuned)}v{_collectives(dflt)}"))
+
+    # -- replay-vs-rerun: the searched plan's replayed score against an
+    # actual simulator rerun of that plan (the objective is honest) -------
+    tail = _tail_sizes()
+    tail_ins = _sim_inputs(tail, (AXIS_SIZE,))
+    _, tail_trace, _ = tune.record_sim(
+        dflt, SwitchSim(dflt.topology), *tail_ins)
+    r_tuned = tune.replay(tuned.plan, tail_trace, tuned.topology,
+                          overlapped=tuned_cfg.overlap_dispatch)
+    _, rerun = SwitchSim(tuned.topology).run(tuned, *tail_ins)
+    out.append((
+        f"tune_replay_vs_rerun_sync{N_LEAVES}_ratio",
+        r_tuned.t_end / rerun.t_end,
+        f"replay_us={r_tuned.t_end * 1e6:.2f}"
+        f",rerun_us={rerun.t_end * 1e6:.2f}"
+        f",matched={r_tuned.matched},modeled={r_tuned.modeled}"))
+
+    out += wallclock_rows(tuned_cfg)
+    return out
+
+
+def wallclock_rows(tuned_cfg) -> list[tuple]:
+    """Measured jit wall-clock of the tail sync under the searched config
+    vs the default, interleaved medians (``jax_*``: recorded, not
+    gated)."""
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+
+    import repro.tune as tune
+    from repro.core import make_engine
+
+    sizes = _tail_sizes()
+    mesh = jax.make_mesh((8,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    spec = P("data", None)
+    rng = np.random.default_rng(0)
+    leaves = [jnp.asarray(rng.standard_normal((8, s)).astype(np.float32))
+              for s in sizes]
+
+    def runner(cfg):
+        eng = make_engine("acis")
+        eng.config = cfg
+        c = _sync_program(sizes, eng, {"data": 8})
+
+        def body(*ls):
+            outs = c(*[l[0] for l in ls])
+            return tuple(o[None] for o in outs)
+
+        fn = jax.jit(jax.shard_map(
+            body, mesh=mesh, in_specs=(spec,) * len(sizes),
+            out_specs=(spec,) * len(sizes), check_vma=False))
+
+        def run():
+            jax.block_until_ready(fn(*leaves))
+        return run
+
+    meds = tune.interleaved_medians(
+        {"default": runner(make_engine("acis").config),
+         "tuned": runner(tuned_cfg)}, iters=6)
+    return [
+        (f"jax_tune_sync{N_LEAVES}_wallclock_default",
+         meds["default"] * 1e6, ""),
+        (f"jax_tune_sync{N_LEAVES}_wallclock_tuned",
+         meds["tuned"] * 1e6,
+         f"speedup={meds['default'] / meds['tuned']:.2f}"),
+    ]
+
+
+def record(computed_rows: list | None = None) -> dict:
+    """BENCH_tune.json payload.
+
+    Ratio rows (``*_ratio``) are folded symmetrically — ``max(r, 1/r)``
+    — so the lower-is-better regression gate catches replay drifting
+    high *or* low against a baseline of 1.0; rows carrying a
+    ``speedup=`` derived metric also record ``name.speedup``.  Both are
+    what ``check_regression.py`` gates against
+    ``benchmarks/baseline_tune.json`` (``jax_*`` rows ride along
+    ungated).
+    """
+    out: dict = {}
+    for name, val, derived in (computed_rows if computed_rows is not None
+                               else rows()):
+        val = float(val)
+        if name.endswith("_ratio") and val > 0:
+            val = max(val, 1.0 / val)
+        out[name] = round(val, 6)
+        for part in str(derived).split(","):
+            k, _, v = part.partition("=")
+            if k == "speedup":
+                try:
+                    out[f"{name}.speedup"] = round(float(v), 4)
+                except ValueError:
+                    pass
+    return out
+
+
+if __name__ == "__main__":
+    print("name,value,derived")
+    for name, val, derived in rows():
+        print(f"{name},{val},{derived}")

@@ -62,6 +62,14 @@ class SimStage:
     t_model: Optional[float]      # netmodel.stage_time prediction (s)
     placement: Any = None
     wave: int = 0                 # ExecutionPlan wave the stage ran in
+    # global start timestamp of the stage on its wave branch (s) and the
+    # stage's injection-serialization share (the part of t_sim the shared
+    # port stays busy — what the wave merge re-exposes for non-critical
+    # branches).  Together with t_sim these are exactly the fields
+    # repro.tune.trace.StageTrace records, so simulated traces drive the
+    # record → fit → replay → search loop without hardware.
+    t_start: float = 0.0
+    t_ser: float = 0.0
 
     @property
     def deviation(self) -> Optional[float]:
@@ -250,6 +258,7 @@ class SwitchSim:
                     branch_ser[st.axis] = np.zeros_like(clock)
                 self._cur_ser = branch_ser[st.axis]
                 t0 = float(c.max())
+                s0 = float(branch_ser[st.axis].max())
                 args = [env[v] for v in st.in_vids]
                 try:
                     outs = self._exec(st, args, c)
@@ -260,7 +269,9 @@ class SwitchSim:
                 t_sim = float(c.max()) - t0
                 rows[si] = SimStage(
                     st.kind, st.axis, st.schedule, t_sim,
-                    self._model_time(st, args), st.placement, wi)
+                    self._model_time(st, args), st.placement, wi,
+                    t_start=t0,
+                    t_ser=float(branch_ser[st.axis].max()) - s0)
             if branch:
                 # concurrent branches overlap propagation and compute,
                 # but every rank injects into all of its rings through

@@ -93,11 +93,35 @@ class CollectiveConfig:
     # stage-ordered serial emission (the pre-overlap runtime, kept for
     # A/B measurement).
     overlap_dispatch: bool = True
+    # hoist a bucket's shared elementwise epilogue (the gradient mean)
+    # to one bucket-sized kernel; False keeps per-leaf epilogues.  A
+    # tunable: the hoist trades kernel count against wave-level overlap.
+    epilogue_hoist: bool = True
+    # consult (and on a miss, populate) the on-disk tuning DB
+    # (repro.tune.search) at compile: the stored winning overrides for
+    # this (program structure, topology) are applied transparently.
+    autotune: bool = False
+    # tuning-DB path; None = $ACIS_TUNE_DB, else ./.acis_tune.json
+    tune_db: Optional[str] = None
 
     def __post_init__(self):
         if self.backend not in BACKENDS:
             raise ValueError(
                 f"backend {self.backend!r} not in {BACKENDS}")
+
+    def cache_key(self) -> tuple:
+        """Every config field a compiled program's structure depends on.
+
+        Compiled-program caches must include this in their keys: the
+        autotuner varies ``bucket_bytes``/``overlap_dispatch``/
+        ``epilogue_hoist``/``latency_optimal_below``, so a tuned
+        program must not collide with the default config's cache entry
+        for the same pytree structure.
+        """
+        return (self.backend, self.codec, self.compressor,
+                self.topk_ratio, self.latency_optimal_below,
+                self.bucket_bytes, self.overlap_dispatch,
+                self.epilogue_hoist)
 
 
 class CollectiveEngine:
@@ -110,7 +134,8 @@ class CollectiveEngine:
         self.inner_axis = inner_axis
         self.outer_axis = outer_axis
         self._sync_cache: dict = {}   # pytree structure → CompiledProgram
-        self._arena_cache: dict = {}  # same key → persistent bucket arenas
+        self._arena_cache: dict = {}  # CompiledProgram → bucket arenas
+        self._tune_cache: dict = {}   # pytree structure → tuned config
         self._last_sync = None        # most recently built/fetched program
 
     # -- properties ---------------------------------------------------------
@@ -251,9 +276,10 @@ class CollectiveEngine:
         avals = tuple(jax.ShapeDtypeStruct(l.shape, l.dtype) for l in leaves)
         compiled = self._sync_program(treedef, avals, n_total,
                                       axis_sizes=axis_sizes)
-        key = (treedef, avals, n_total,
-               tuple(sorted((axis_sizes or {}).items())))
-        hit = self._arena_cache.get(key)
+        # keyed by the compiled program itself (identity): two configs
+        # producing different bucket layouts for the same pytree — e.g.
+        # tuned vs default bucket_bytes — must not share arenas
+        hit = self._arena_cache.get(compiled)
         if hit is not None and any(
                 getattr(a, "is_deleted", lambda: False)() for a in hit):
             # a donating caller consumed the cached buffers (the step
@@ -261,7 +287,7 @@ class CollectiveEngine:
             # instead of deleted arrays
             hit = None
         if hit is None:
-            hit = self._arena_cache[key] = compiled.make_arenas()
+            hit = self._arena_cache[compiled] = compiled.make_arenas()
         return hit
 
     def _sync_program(self, treedef, avals: tuple,
@@ -283,12 +309,52 @@ class CollectiveEngine:
         n_leaves = len(avals)
         sizes = live_axis_sizes((inner, outer), axis_sizes)
         # the sizes are part of the key: the same engine may serve meshes
-        # of different DP size, and the schedule choice depends on them
-        key = (treedef, avals, n_total, tuple(sorted(sizes.items())))
+        # of different DP size, and the schedule choice depends on them.
+        # The config's cache_key is too — the autotuner hands back
+        # configs differing only in tuned fields, and those must compile
+        # to distinct programs, not collide with the default's entry.
+        key0 = (treedef, avals, n_total, tuple(sorted(sizes.items())))
+        cfg_eff = cfg
+        if cfg.autotune and sizes.get(inner):
+            cfg_eff = self._tune_cache.get(key0)
+            if cfg_eff is None:
+                cfg_eff = self._tuned_sync_config(
+                    avals, n_total, sizes)
+                self._tune_cache[key0] = cfg_eff
+        key = key0 + (cfg_eff.cache_key(),)
         hit = self._sync_cache.get(key)
         if hit is not None:
             self._last_sync = hit
             return hit
+        compiled = self._build_sync(cfg_eff, avals, n_total, sizes)
+        self._sync_cache[key] = compiled
+        self._last_sync = compiled
+        return compiled
+
+    def _tuned_sync_config(self, avals, n_total, sizes):
+        """Resolve the effective config through the tuning DB: a stored
+        winner for this (pytree structure, topology) applies directly; a
+        miss searches the tunable space offline (analytic replay over
+        recompiled candidates) and persists the winner."""
+        from repro import tune
+
+        cfg = self.config
+        topo = self.topology(axis_size=sizes)
+        in_avals = avals + (avals if self.compressed else ())
+        tkey = tune.plan_key(
+            f"gradient_sync[{cfg.backend}x{len(avals)}]",
+            in_avals, topo, cfg)
+        return tune.tuned_config(
+            cfg,
+            lambda c: self._build_sync(c, avals, n_total, sizes),
+            key=tkey, db_path=cfg.tune_db)
+
+    def _build_sync(self, cfg, avals, n_total, sizes):
+        """Trace + compile the gradient-sync program under ``cfg`` (also
+        the candidate builder the autotune search recompiles with)."""
+        inner, outer = self.inner_axis, self.outer_axis
+        compressed = self.compressed
+        n_leaves = len(avals)
 
         def _mean(y):
             n = n_total
@@ -328,12 +394,9 @@ class CollectiveEngine:
             sync, name=f"gradient_sync[{cfg.backend}x{n_leaves}]",
             num_inputs=n_leaves * (2 if compressed else 1))
         in_avals = avals + (avals if compressed else ())
-        compiled = compiler.compile_rank_local(
+        return compiler.compile_rank_local(
             prog, inner, axis_size=sizes.get(inner), config=cfg,
             in_avals=in_avals, topology=self.topology(axis_size=sizes))
-        self._sync_cache[key] = compiled
-        self._last_sync = compiled
-        return compiled
 
     def last_sync_program(self):
         """The most recently compiled (or cache-hit) gradient-sync
@@ -386,15 +449,39 @@ class CollectiveEngine:
         topo = self.topology(mesh, axis_size=axis_size)
         if isinstance(axis_size, dict):
             axis_size = axis_size.get(ax)
+        cfg = self.config
+        if cfg.autotune and in_avals is not None:
+            # candidates are scored on rank-local plans (cheap analytic
+            # replay); the winning config then drives the real compile,
+            # mesh-wrapped or not
+            from repro import tune
+            from repro.core import program as _program
+            from repro.core import tracing
+
+            name = getattr(prog, "name", None) \
+                or getattr(prog, "__name__", "program")
+            if not isinstance(prog, (_program.DagProgram,
+                                     _program.SwitchProgram)):
+                # trace once, not once per search candidate — and in_avals
+                # fixes the arity for *args-signature programs, which
+                # trace() alone cannot infer
+                prog = tracing.trace(prog, num_inputs=len(in_avals))
+            cfg = tune.tuned_config(
+                cfg,
+                lambda c: compiler.compile_rank_local(
+                    prog, ax, axis_size=axis_size, config=c,
+                    in_avals=in_avals, topology=topo),
+                key=tune.plan_key(name, in_avals, topo, cfg),
+                db_path=cfg.tune_db)
         if mesh is None:
             return compiler.compile_rank_local(
-                prog, ax, axis_size=axis_size, config=self.config,
+                prog, ax, axis_size=axis_size, config=cfg,
                 in_avals=in_avals, topology=topo)
         if in_specs is None or out_specs is None:
             raise ValueError("mesh compilation needs in_specs and out_specs")
         return compiler.compile_program(
             prog, mesh, ax, in_specs, out_specs, jit=jit,
-            config=self.config, in_avals=in_avals, topology=topo)
+            config=cfg, in_avals=in_avals, topology=topo)
 
 
 def make_engine(backend: str = "xla", *, inner_axis: str = "data",

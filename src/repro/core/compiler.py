@@ -260,7 +260,7 @@ class Stage:
             else f"Stage({self.kind})"
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(eq=False)
 class CompiledProgram:
     """Rank-local executable: stages run over a value environment following
     an explicit :class:`~repro.core.executor.ExecutionPlan`.
@@ -351,16 +351,31 @@ class CompiledProgram:
     def stage_placements(self) -> list:
         return [s.placement for s in self.stages]
 
-    def explain(self) -> str:
+    def explain(self, trace=None) -> str:
         """Readable per-stage table: what was fused, which wave of the
         execution plan it runs in (stages sharing a wave are independent
         and may overlap), over which axis, on which ring schedule, with
         which wire codec, and where the compute body landed (CGRA
-        placement or explicit host fallback)."""
+        placement or explicit host fallback).
+
+        With ``trace`` (a :class:`repro.tune.trace.ProgramTrace` — or
+        anything with a ``stages`` list of records carrying ``stage`` and
+        ``duration``), three more columns compare the recording against
+        the analytic model — measured µs, model µs and their ratio — and
+        a footer summarizes the mispredict ratio over the priced stages.
+        """
         wave_of = {i: w for w, grp in enumerate(self.plan.waves)
                    for i in grp}
-        rows = [("#", "wave", "kind", "axis", "schedule", "codec",
-                 "placement")]
+        measured: dict[int, float] = {}
+        if trace is not None:
+            for ts in getattr(trace, "stages", trace):
+                measured.setdefault(ts.stage, ts.duration)
+        header = ("#", "wave", "kind", "axis", "schedule", "codec",
+                  "placement")
+        if trace is not None:
+            header += ("meas_us", "model_us", "ratio")
+        rows = [header]
+        ratios: list[tuple[float, int]] = []
         for i, st in enumerate(self.stages):
             codec = "-"
             if st.ir is not None:
@@ -372,8 +387,20 @@ class CompiledProgram:
                         codec = f"ef[{nd.op.ef.compressor}]"
             pl = st.placement.describe() if st.placement is not None \
                 else "-"
-            rows.append((str(i), str(wave_of.get(i, "-")), st.kind,
-                         st.axis or "-", st.schedule or "-", codec, pl))
+            row = (str(i), str(wave_of.get(i, "-")), st.kind,
+                   st.axis or "-", st.schedule or "-", codec, pl)
+            if trace is not None:
+                meas = measured.get(i)
+                model = netmodel.plan_stage_time(st, self.topology)
+                m_s = f"{meas * 1e6:.1f}" if meas is not None else "-"
+                t_s = f"{model * 1e6:.1f}" if model is not None else "-"
+                r_s = "-"
+                if meas is not None and model:
+                    r = meas / model
+                    ratios.append((r, i))
+                    r_s = f"x{r:.2f}"
+                row += (m_s, t_s, r_s)
+            rows.append(row)
         ncols = len(rows[0]) - 1         # last column stays ragged
         widths = [max(len(r[c]) for r in rows) for c in range(ncols)]
         lines = [f"program {self.source.name!r} "
@@ -388,6 +415,13 @@ class CompiledProgram:
             if j == 0:
                 lines.append("  " + "-" * (sum(widths) + 2 * ncols
                                            + len(r[ncols])))
+        if ratios:
+            mean = sum(r for r, _ in ratios) / len(ratios)
+            worst = max(ratios, key=lambda t: max(t[0], 1.0 / t[0]))
+            lines.append(
+                f"  mispredict ratio (meas/model): mean x{mean:.2f}, "
+                f"worst x{worst[0]:.2f} @ stage {worst[1]} "
+                f"({len(ratios)}/{len(self.stages)} stages priced)")
         return "\n".join(lines)
 
     def program_time(self, topology: Optional[Topology] = None) -> float:
@@ -405,11 +439,15 @@ class CompiledProgram:
                 seen.append(s.axis)
         return seen
 
-    def __call__(self, *xs: PyTree, arenas: Optional[tuple] = None) -> tuple:
+    def __call__(self, *xs: PyTree, arenas: Optional[tuple] = None,
+                 instrument: Optional[list] = None) -> tuple:
         """Run the plan.  Without ``arenas``: the output tuple.  With
         ``arenas`` (from :meth:`make_arenas`, or the previous call's
         second result): ``(outputs, new_arenas)`` — thread and donate the
-        arenas so the bucket packs write in place."""
+        arenas so the bucket packs write in place.  ``instrument`` is the
+        stage-trace recorder hook (see
+        :func:`repro.core.executor.execute`); only meaningful on eager
+        runs."""
         n_in = self.source.num_inputs
         if len(xs) == 1 and n_in > 1 and isinstance(xs[0], (tuple, list)):
             xs = tuple(xs[0])      # chain-shim spelling: one tuple argument
@@ -436,7 +474,8 @@ class CompiledProgram:
                         "program (make_arenas / engine.init_arenas with "
                         "matching grad dtypes)")
         return executor.execute(self.plan, xs, arenas=arenas,
-                                overlapped=self.overlap)
+                                overlapped=self.overlap,
+                                instrument=instrument)
 
 
 # ---------------------------------------------------------------------------
@@ -820,7 +859,10 @@ class Coalesce:
         buckets = self._form_buckets(units, ctx, override, dag)
         if not buckets:
             return dag
-        return self._rewrite(dag, buckets)
+        hoist = True
+        if ctx.config is not None:
+            hoist = getattr(ctx.config, "epilogue_hoist", True)
+        return self._rewrite(dag, buckets, hoist=hoist)
 
     # -- unit discovery ------------------------------------------------------
 
@@ -1127,11 +1169,15 @@ class Coalesce:
         return epilogues, epi_outs
 
     def _rewrite(self, dag: DagProgram,
-                 buckets: list[list[_ReduceUnit]]) -> DagProgram:
+                 buckets: list[list[_ReduceUnit]], *,
+                 hoist: bool = True) -> DagProgram:
         claimed_outs = {nd.out for b in buckets for u in b
                         for nd in u.nodes}
-        epilogues, epi_outs = self._find_epilogues(dag, buckets,
-                                                   claimed_outs)
+        # epilogue hoist is a tunable (CollectiveConfig.epilogue_hoist):
+        # per-leaf epilogues trade one big kernel for wave-level overlap
+        epilogues, epi_outs = (
+            self._find_epilogues(dag, buckets, claimed_outs)
+            if hoist else ({}, {}))
         producers: dict[int, tuple] = {}
         for nd in dag.nodes:
             if nd.out not in claimed_outs:

@@ -212,7 +212,8 @@ def _issue_order(groups) -> list[int]:
 
 def execute(plan: ExecutionPlan, args: Sequence[PyTree], *,
             arenas: Optional[Sequence] = None,
-            overlapped: bool = True) -> tuple:
+            overlapped: bool = True,
+            instrument: Optional[list] = None) -> tuple:
     """Run the plan over rank-local values, wave by wave.
 
     ``overlapped=True`` (the default) issues each wave as one merged
@@ -232,9 +233,20 @@ def execute(plan: ExecutionPlan, args: Sequence[PyTree], *,
     into a fresh buffer.  When given, returns ``(outputs, new_arenas)``
     with the written buffers, so the caller can donate them back on the
     next call; otherwise returns just the output tuple.
+
+    ``instrument`` is the stage-trace recorder hook: a list that receives
+    one record dict per executed stage (``stage``/``kind``/``axis``/
+    ``wave`` plus ``t_start``/``t_end`` ``perf_counter`` timestamps taken
+    around a ``block_until_ready`` on the stage's outputs).  Only
+    meaningful when the plan runs eagerly — under ``jit``/``shard_map``
+    tracing the timestamps measure trace time, not run time; use the
+    interleaved harness in :mod:`repro.tune.trace` for jitted programs.
+    Instrumented stages synchronize per stage, so the recorded run is a
+    serial measurement even in overlapped dispatch mode.
     """
     env: dict[int, PyTree] = dict(enumerate(args))
     new_arenas = list(arenas) if arenas is not None else None
+    wave_of = {i: w for w, ws in enumerate(plan.waves) for i in ws}
 
     def run_stage(i: int, prev_outs: tuple) -> tuple:
         st = plan.stages[i]
@@ -242,11 +254,23 @@ def execute(plan: ExecutionPlan, args: Sequence[PyTree], *,
         if overlapped and prev_outs:
             ins = _barrier_tie(prev_outs, ins)
         slot = getattr(st, "arena_slot", None)
+        if instrument is not None:
+            import time
+
+            import jax
+            jax.block_until_ready(ins)
+            t0 = time.perf_counter()
         if slot is not None and new_arenas is not None:
             outs = st.run(ins, st.axis, arena=new_arenas[slot])
             new_arenas[slot] = outs[0]
         else:
             outs = st.run(ins, st.axis)
+        if instrument is not None:
+            jax.block_until_ready(outs)
+            instrument.append({
+                "stage": i, "kind": st.kind, "axis": st.axis,
+                "wave": wave_of.get(i, 0), "schedule": st.schedule,
+                "t_start": t0, "t_end": time.perf_counter()})
         for vid, o in zip(st.out_vids, outs):
             env[vid] = o
         return outs

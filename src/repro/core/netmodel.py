@@ -460,6 +460,171 @@ def stage_time(kind: str, n: int, m: int, p: NetParams = PAPER, *,
 
 
 # ---------------------------------------------------------------------------
+# per-stage linear decomposition (repro.tune.fit least-squares design)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class StageTerms:
+    """:func:`stage_time` decomposed over the fittable unknowns.
+
+    For the ring-schedule kinds the stage time is linear in the link
+    parameters::
+
+        t = hops · (fpga_link + port)
+          + wire_bytes / bw
+          + compute_bytes / accel_rate(p, placement)
+          + detours · (2·pcie + mpi_overhead)
+          + host_bytes / host_bw
+          + mpi_msgs · mpi_overhead
+
+    which is what lets :mod:`repro.tune.fit` recover per-tier latency and
+    bandwidth (and the host-fallback detour) from recorded traces by
+    least squares.  ``compute_bytes`` and ``mpi_msgs`` are charged at
+    their prior rates by the fit (the CGRA device is not a wire).
+    """
+
+    hops: float = 0.0
+    wire_bytes: float = 0.0
+    compute_bytes: float = 0.0
+    detours: float = 0.0
+    host_bytes: float = 0.0
+    mpi_msgs: float = 0.0
+
+    def __add__(self, other: "StageTerms") -> "StageTerms":
+        return StageTerms(*(a + b for a, b in
+                            zip(dataclasses.astuple(self),
+                                dataclasses.astuple(other))))
+
+    def time(self, p: NetParams, placement=None) -> float:
+        """Re-assemble the stage time under ``p`` — matches
+        :func:`stage_time` exactly for every decomposable kind."""
+        hop = p.fpga_link + p.port
+        return self.hops * hop + self.wire_bytes / p.bw \
+            + (self.compute_bytes / accel_rate(p, placement)
+               if self.compute_bytes else 0.0) \
+            + self.detours * (2 * p.pcie + p.mpi_overhead) \
+            + self.host_bytes / p.host_bw \
+            + self.mpi_msgs * p.mpi_overhead
+
+
+def stage_time_terms(kind: str, n: int, m: int, *, schedule: str = "",
+                     codec_ratio: float = 1.0, fallback: bool = False,
+                     m_parts: Optional[tuple] = None
+                     ) -> Optional[StageTerms]:
+    """The :class:`StageTerms` decomposition of :func:`stage_time`.
+
+    Mirrors the per-kind formulas above term by term (a unit test pins
+    the two against each other); returns None for kinds with no linear
+    form.  ``fallback=True`` selects the host-detour branch of the kind.
+    """
+    T = StageTerms
+    wire = m * codec_ratio
+    L = math.ceil(math.log2(max(n, 2)))
+    ring = max(n - 1, 0)
+
+    def host(extra_host: float = 0.0) -> StageTerms:
+        # host_fallback_time: 2·pcie + mpi + m/host_bw
+        return T(detours=1.0, host_bytes=m + extra_host)
+
+    def mpi_ar(mm: float) -> StageTerms:
+        # mpi_allreduce: 2L software messages + ring RS/AG wire + endpoint
+        return T(wire_bytes=2 * ring / max(n, 1) * mm, host_bytes=mm,
+                 mpi_msgs=2 * L)
+
+    if kind == "map":
+        return host() if fallback else T(compute_bytes=m)
+    if kind in ("allreduce", "map+allreduce"):
+        if fallback:
+            return host() + mpi_ar(wire)
+        if n <= 1:
+            return T()
+        if schedule == "latency":
+            return T(hops=ring, wire_bytes=ring * wire,
+                     compute_bytes=ring * wire)
+        return T(hops=2 * ring, wire_bytes=2 * ring * (wire / n),
+                 compute_bytes=ring * (wire / n))
+    if kind in ("reduce_scatter", "map+reduce_scatter"):
+        rs = T() if n <= 1 else T(hops=ring, wire_bytes=ring * (wire / n),
+                                  compute_bytes=ring * (wire / n))
+        return host() + rs if fallback else rs
+    if kind == "allgather":
+        return T() if n <= 1 else T(hops=ring, wire_bytes=ring * m)
+    if kind == "allgather+map":
+        ag = T() if n <= 1 else T(hops=ring, wire_bytes=ring * m)
+        return host() + ag if fallback else ag + T(compute_bytes=ring * m)
+    if kind == "alltoall":
+        return T() if n <= 1 else T(hops=ring, wire_bytes=ring * (m / n))
+    if kind == "bcast":
+        return T(hops=L, wire_bytes=L * m)
+    if kind == "scan":
+        base = T(hops=L, wire_bytes=L * m)
+        return host() + base if fallback \
+            else base + T(compute_bytes=L * m)
+    if kind == "scan+allgather":
+        sc = stage_time_terms("scan", n, m, fallback=fallback)
+        return sc + stage_time_terms("allgather", n, m)
+    if kind == "delivered":
+        return host() if fallback else T(compute_bytes=m)
+    if kind == "ef_allreduce":
+        if fallback:
+            return host() + mpi_ar(m)
+        s = max(m // 256, 4)
+        half = m // 2
+        scale = T() if n <= 1 else T(hops=ring, wire_bytes=ring * s,
+                                     compute_bytes=ring * s)
+        rs_ag = T() if n <= 1 else T(hops=2 * ring,
+                                     wire_bytes=2 * ring * (half / n),
+                                     compute_bytes=ring * (half / n))
+        return T(compute_bytes=m) + scale + rs_ag
+    if kind == "allreduce+alltoall":
+        m_hist, m_keys = (m_parts if m_parts and len(m_parts) == 2
+                          else (m // 2, m // 2))
+        if fallback:
+            # mpi_allreduce(hist) + mpi_alltoall(keys)
+            return host() + mpi_ar(m_hist) \
+                + T(wire_bytes=ring * (m_keys / n), mpi_msgs=ring)
+        return T() if n <= 1 else T(
+            hops=ring, wire_bytes=ring * (m_keys / n + m_hist),
+            compute_bytes=ring * m_hist)
+    return None
+
+
+def plan_stage_terms(st, topo=None) -> Optional[tuple]:
+    """``(tier, terms, placement)`` for one emitted plan stage, or None.
+
+    The per-stage analogue of :func:`plan_stage_time` that
+    :mod:`repro.tune.fit` builds its least-squares design rows from:
+    ``tier`` names the link whose (hop, 1/bw) columns the stage loads,
+    ``placement`` fixes the compute rate the fit charges at its prior.
+    """
+    ir = getattr(st, "ir", None)
+    m = getattr(ir, "bytes_in", None)
+    if m is None:
+        return None
+    n = 1
+    if st.axis:
+        if topo is None or topo.size(st.axis) is None:
+            return None
+        n = topo.size(st.axis)
+    placement = st.placement
+    if st.kind in _MAP_KINDS and placement is None:
+        return None
+    fallback = placement is not None and not getattr(placement, "fits",
+                                                     True)
+    ratio = 1.0
+    for nd in getattr(ir, "nodes", ()):
+        codec = nd.op.codec
+        if getattr(codec, "wire_ratio", 1.0) != 1.0:
+            ratio = float(codec.wire_ratio)
+    terms = stage_time_terms(st.kind, n, m, schedule=st.schedule,
+                             codec_ratio=ratio, fallback=fallback,
+                             m_parts=getattr(ir, "bytes_parts", None))
+    if terms is None:
+        return None
+    return _tier_of(st.axis, topo), terms, (None if fallback else placement)
+
+
+# ---------------------------------------------------------------------------
 # program-level cost (ExecutionPlan critical path with per-tier overlap)
 # ---------------------------------------------------------------------------
 

@@ -74,12 +74,17 @@ def hierarchical_all_reduce(
     # size the schedule from it, and the per-axis ring sizes are read
     # live (we are inside the caller's shard_map region at trace time)
     sizes = api.live_axis_sizes((inner_axis, outer_axis))
+    engine = api.make_engine("acis", inner_axis=inner_axis,
+                             outer_axis=outer_axis)
+    # the config fields the compiled structure depends on key the cache
+    # too (engine.compile may apply tuned overrides — bucket sizes,
+    # dispatch mode — and a tuned program must not collide with the
+    # default's entry)
     key = (inner_axis, outer_axis, monoid.name, outer_codec.name, mean,
-           tuple(x.shape), str(x.dtype), tuple(sorted(sizes.items())))
+           tuple(x.shape), str(x.dtype), tuple(sorted(sizes.items())),
+           engine.config.cache_key())
     compiled = _COMPILE_CACHE.get(key)
     if compiled is None:
-        engine = api.make_engine("acis", inner_axis=inner_axis,
-                                 outer_axis=outer_axis)
 
         def _mean(y):
             n = lax.axis_size(inner_axis)

@@ -1,0 +1,487 @@
+"""repro.tune: stage traces, NetParams fitting, replay, plan search.
+
+The whole loop runs against the dataplane simulator (simulated traces
+use the same StageTrace format as wall-clock recordings), so record →
+fit → replay → search is testable without hardware.
+"""
+
+import dataclasses
+import importlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.tune as tune
+from repro.cgra.device import HostFallback
+from repro.cgra.simulate import SwitchSim
+from repro.core import ADD, make_engine, netmodel, tracing
+
+search_mod = importlib.import_module("repro.tune.search")
+
+AV = jax.ShapeDtypeStruct
+
+
+def _sync_program(sizes, engine, axis_sizes):
+    """Mean-sync over a flat list of f32 leaves (the execplan shape)."""
+    n_total = 1
+    for v in axis_sizes.values():
+        n_total *= v
+
+    def _mean(y):
+        return y / n_total
+
+    def sync(*gs):
+        return tuple(
+            tracing.map(_mean, tracing.reduce(g, axis="auto"),
+                        name="mean", elementwise=True) for g in gs)
+
+    prog = tracing.trace(sync, name=f"sync[{len(sizes)}]",
+                         num_inputs=len(sizes))
+    avals = tuple(AV((s,), jnp.float32) for s in sizes)
+    return engine.compile(prog, in_avals=avals, axis_size=axis_sizes)
+
+
+# ---------------------------------------------------------------------------
+# StageTerms ≡ stage_time
+# ---------------------------------------------------------------------------
+
+class TestStageTerms:
+    KINDS = ["allreduce", "reduce_scatter", "allgather", "alltoall",
+             "bcast", "scan", "scan+allgather", "ef_allreduce",
+             "allreduce+alltoall"]
+
+    @pytest.mark.parametrize("kind", KINDS)
+    @pytest.mark.parametrize("n", [1, 2, 4, 8])
+    @pytest.mark.parametrize("m", [256, 1 << 16])
+    def test_matches_stage_time(self, kind, n, m):
+        p = netmodel.PAPER
+        for schedule in ("", "latency", "bandwidth"):
+            t_ref = netmodel.stage_time(kind, n, m, p, schedule=schedule)
+            terms = netmodel.stage_time_terms(kind, n, m,
+                                              schedule=schedule)
+            assert terms is not None
+            assert terms.time(p) == pytest.approx(t_ref, rel=1e-12)
+
+    @pytest.mark.parametrize("kind", ["map", "allreduce",
+                                      "reduce_scatter", "scan",
+                                      "ef_allreduce",
+                                      "allreduce+alltoall"])
+    def test_matches_fallback_branch(self, kind):
+        p = netmodel.PAPER
+        hf = HostFallback("test")
+        n, m = 4, 1 << 15
+        t_ref = netmodel.stage_time(kind, n, m, p, placement=hf)
+        terms = netmodel.stage_time_terms(kind, n, m, fallback=True)
+        assert terms.time(p) == pytest.approx(t_ref, rel=1e-12)
+
+    def test_codec_ratio_scales_wire(self):
+        p = netmodel.PAPER
+        t_ref = netmodel.stage_time("allreduce", 8, 1 << 20, p,
+                                    codec_ratio=0.25)
+        terms = netmodel.stage_time_terms("allreduce", 8, 1 << 20,
+                                          codec_ratio=0.25)
+        assert terms.time(p) == pytest.approx(t_ref, rel=1e-12)
+
+    def test_plan_stage_terms_matches_plan_stage_time(self):
+        """Over every stage of a real compiled sync (maps with
+        placements, bucket packs, ring collectives), the decomposition
+        reassembles to exactly what plan_stage_time prices."""
+        eng = make_engine("acis")
+        c = _sync_program([4096, 131072, 300, 65536], eng, {"data": 4})
+        priced = 0
+        for st in c.stages:
+            got = netmodel.plan_stage_terms(st, c.topology)
+            if got is None:
+                continue
+            tier, terms, placement = got
+            net = c.topology.net(st.axis) if st.axis else netmodel.PAPER
+            t_ref = netmodel.plan_stage_time(st, c.topology, netmodel.PAPER)
+            assert terms.time(net, placement) == pytest.approx(
+                t_ref, rel=1e-12)
+            priced += 1
+        assert priced > 0
+
+
+# ---------------------------------------------------------------------------
+# trace recording + JSONL round trip
+# ---------------------------------------------------------------------------
+
+class TestTrace:
+    def _compiled(self, sizes=(4096, 131072, 65536), data=4):
+        eng = make_engine("acis")
+        c = _sync_program(list(sizes), eng, {"data": data})
+        return c, list(sizes), data
+
+    def test_sim_trace_shape(self):
+        c, sizes, data = self._compiled()
+        rng = np.random.default_rng(0)
+        ins = [rng.standard_normal((data, s)).astype(np.float32)
+               for s in sizes]
+        outs, trace, report = tune.record_sim(
+            c, SwitchSim(c.topology), *ins)
+        assert len(trace.stages) == len(c.stages)
+        assert trace.source == "sim"
+        assert trace.t_end == report.t_end
+        for ts in trace.stages:
+            assert ts.t_end >= ts.t_start >= 0.0
+            assert ts.kind == c.stages[ts.stage].kind
+
+    def test_jsonl_round_trip(self, tmp_path):
+        c, sizes, data = self._compiled()
+        rng = np.random.default_rng(0)
+        ins = [rng.standard_normal((data, s)).astype(np.float32)
+               for s in sizes]
+        _, trace, _ = tune.record_sim(c, SwitchSim(c.topology), *ins)
+        path = tmp_path / "trace.jsonl"
+        tune.save_jsonl(path, trace)
+        back = tune.load_jsonl(path)
+        assert len(back) == 1
+        assert back[0].stages == trace.stages
+        assert back[0].t_end == trace.t_end
+        assert back[0].axes == trace.axes
+
+    def test_loader_rejects_other_schema(self, tmp_path):
+        path = tmp_path / "bad.jsonl"
+        path.write_text(
+            '{"record": "program", "schema": 999, "name": "x", '
+            '"axes": {}, "t_end": 0.0, "source": "sim"}\n')
+        with pytest.raises(ValueError, match="schema"):
+            tune.load_jsonl(path)
+
+    def test_loader_rejects_headerless_stage(self, tmp_path):
+        path = tmp_path / "bad.jsonl"
+        path.write_text('{"record": "stage", "stage": 0, "kind": "map"}\n')
+        with pytest.raises(ValueError, match="header"):
+            tune.load_jsonl(path)
+
+    def test_instrumented_eager_map_program(self):
+        """The executor's instrument hook: an axis-less (eager) program
+        records one StageTrace per stage with real timestamps."""
+        eng = make_engine("acis")
+
+        def prog(x, y):
+            a = tracing.map(lambda v: v * 2.0, x, name="double")
+            return (tracing.map(jnp.add, a, y, name="add"),)
+
+        c = eng.compile(prog, in_avals=(AV((1024,), jnp.float32),) * 2)
+        out, trace = tune.record_instrumented(
+            c, jnp.ones(1024), jnp.ones(1024))
+        assert trace.source == "instrumented"
+        assert len(trace.stages) == len(c.stages)
+        assert trace.t_end > 0.0
+        assert all(s.t_end >= s.t_start for s in trace.stages)
+        np.testing.assert_allclose(np.asarray(out[0]), 3.0)
+
+
+# ---------------------------------------------------------------------------
+# replay: the two fixed points + determinism
+# ---------------------------------------------------------------------------
+
+class TestReplay:
+    def _recorded(self, sizes=(4096, 131072, 65536), data=4):
+        eng = make_engine("acis")
+        c = _sync_program(list(sizes), eng, {"data": data})
+        rng = np.random.default_rng(0)
+        ins = [rng.standard_normal((data, s)).astype(np.float32)
+               for s in sizes]
+        _, trace, report = tune.record_sim(
+            c, SwitchSim(c.topology), *ins)
+        return c, trace, report
+
+    def test_empty_trace_is_program_time(self):
+        c, _, _ = self._recorded()
+        r = tune.replay(c.plan, None, c.topology)
+        assert r.matched == 0
+        assert r.t_end == pytest.approx(
+            netmodel.program_time(c.plan, c.topology), rel=1e-12)
+
+    def test_self_replay_reproduces_recording(self):
+        """Acceptance: self-replay fidelity within 5% (here: exact, the
+        replayer's wave merge is the simulator's)."""
+        c, trace, report = self._recorded()
+        r = tune.replay(c.plan, trace, c.topology)
+        assert r.match_fraction == 1.0
+        assert abs(r.t_end - report.t_end) <= 0.05 * report.t_end
+
+    def test_deterministic(self):
+        c, trace, _ = self._recorded()
+        r1 = tune.replay(c.plan, trace, c.topology)
+        r2 = tune.replay(c.plan, trace, c.topology)
+        assert r1.t_end == r2.t_end
+        assert r1.stages == r2.stages
+
+    def test_serial_mode_sums_chains(self):
+        c, trace, _ = self._recorded()
+        r_ov = tune.replay(c.plan, trace, c.topology, overlapped=True)
+        r_ser = tune.replay(c.plan, trace, c.topology, overlapped=False)
+        assert r_ser.t_end >= r_ov.t_end
+
+    def test_mismatched_stages_fall_back_to_model(self):
+        """A candidate plan the recording doesn't cover scores on the
+        analytic model — replay stays defined across plan changes."""
+        c, trace, _ = self._recorded()
+        eng = make_engine("acis", bucket_bytes=0)
+        c2 = _sync_program([4096, 131072, 65536], eng, {"data": 4})
+        r = tune.replay(c2.plan, trace, c2.topology)
+        assert r.modeled > 0
+        assert r.t_end > 0.0
+
+
+# ---------------------------------------------------------------------------
+# fit: NetParams recovery from simulated traces
+# ---------------------------------------------------------------------------
+
+class TestFit:
+    def _perturbed_samples(self, *, bw_scale=0.5, link_scale=2.0):
+        """Per-leaf sync (diverse payload sizes → hop and 1/bw columns
+        separate) simulated under perturbed ici link parameters."""
+        sizes = [4096, 65536, 131072, 524288, 8192, 262144]
+        eng = make_engine("acis", bucket_bytes=0)
+        c = _sync_program(sizes, eng, {"data": 4})
+        sim = SwitchSim(c.topology)
+        true = dataclasses.replace(
+            sim.nets["data"], bw=sim.nets["data"].bw * bw_scale,
+            fpga_link=sim.nets["data"].fpga_link * link_scale)
+        sim.nets["data"] = true
+        rng = np.random.default_rng(0)
+        ins = [rng.standard_normal((4, s)).astype(np.float32)
+               for s in sizes]
+        _, trace, _ = tune.record_sim(c, sim, *ins)
+        return [(c.plan, c.topology, trace)], true
+
+    def test_recovers_perturbed_link_params(self):
+        """Acceptance: fit.py recovers the simulator's NetParams."""
+        samples, true = self._perturbed_samples()
+        fit = tune.fit_net_params(samples, tiers=("ici",))
+        got = fit.tiers["ici"]
+        assert got.bw == pytest.approx(true.bw, rel=0.05)
+        assert got.fpga_link == pytest.approx(true.fpga_link, rel=0.05)
+        assert fit.residual < 1e-6
+
+    def test_unobserved_tier_drops_to_prior(self):
+        """Single-axis traces cannot identify the dci columns: the fit
+        drops them (fit_tier_overlap's drop-and-resolve) and keeps the
+        prior values rather than inventing numbers."""
+        samples, _ = self._perturbed_samples()
+        fit = tune.fit_net_params(samples, tiers=("ici", "dci"))
+        assert "dci.hop" in fit.dropped
+        assert "dci.invbw" in fit.dropped
+        assert fit.tiers["dci"].bw == netmodel.TIERS["dci"].bw
+
+    def test_collinear_columns_drop_and_resolve(self):
+        """Every recorded stage carrying the same payload makes hop and
+        1/bw collinear — one column must fall back to its prior and the
+        other still solve, exactly like fit_tier_overlap's degenerate
+        handling."""
+        sizes = [65536, 65536, 65536]
+        eng = make_engine("acis", bucket_bytes=0)
+        c = _sync_program(sizes, eng, {"data": 4})
+        rng = np.random.default_rng(0)
+        ins = [rng.standard_normal((4, s)).astype(np.float32)
+               for s in sizes]
+        _, trace, _ = tune.record_sim(c, SwitchSim(c.topology), *ins)
+        fit = tune.fit_net_params([(c.plan, c.topology, trace)],
+                                  tiers=("ici",))
+        assert "ici.hop" in fit.dropped or "ici.invbw" in fit.dropped
+        # the solved system still reproduces the recorded stage times
+        assert fit.residual < 1e-6
+
+    def test_fit_traces_overlap_special_case(self):
+        """fit_traces = link fit + fit_tier_overlap under the fitted
+        params; on unperturbed single-axis traces both halves stay at
+        their calibrated values."""
+        sizes = [4096, 131072, 65536]
+        eng = make_engine("acis")
+        c = _sync_program(sizes, eng, {"data": 4})
+        rng = np.random.default_rng(0)
+        ins = [rng.standard_normal((4, s)).astype(np.float32)
+               for s in sizes]
+        _, trace, _ = tune.record_sim(c, SwitchSim(c.topology), *ins)
+        fit = tune.fit_traces([(c.plan, c.topology, trace)],
+                              tiers=("ici",))
+        assert set(fit.overlap) >= {"ici", "dci", "local"}
+        prior = netmodel.TIERS["ici"]
+        assert fit.tiers["ici"].bw == pytest.approx(prior.bw, rel=0.05)
+
+    def test_fitted_params_flow_into_replay(self):
+        """Replaying under a fit prices model stages with the fitted
+        link parameters: halved bandwidth → longer modeled time."""
+        samples, true = self._perturbed_samples()
+        fit = tune.fit_net_params(samples, tiers=("ici",))
+        plan, topo, _ = samples[0]
+        r_prior = tune.replay(plan, None, topo)
+        r_fit = tune.replay(plan, None, topo, fit=fit)
+        assert r_fit.t_end > r_prior.t_end
+
+
+# ---------------------------------------------------------------------------
+# search + tuning DB
+# ---------------------------------------------------------------------------
+
+def _tail_sizes(n=64):
+    rng = np.random.default_rng(7)
+    return [int(rng.integers(1 << 8, 1 << 13)) for _ in range(n)]
+
+
+class TestSearch:
+    def _build(self, sizes, axis_sizes):
+        def build(cfg):
+            eng = make_engine("acis")
+            eng.config = cfg
+            return _sync_program(sizes, eng, axis_sizes)
+        return build
+
+    def test_search_beats_default_on_ragged_tail(self):
+        """Acceptance: the searched config's analytic program_time beats
+        the default bucket_bytes config on the 64-leaf ragged sync."""
+        base = make_engine("acis").config
+        build = self._build(_tail_sizes(), {"data": 8})
+        res = tune.search(build, base=base)
+        assert res.overrides, "search found nothing to change"
+        assert res.score < res.default_score
+        tuned = build(dataclasses.replace(base, **res.overrides))
+        default = build(base)
+        assert tuned.program_time() < default.program_time()
+
+    def test_search_is_deterministic(self):
+        base = make_engine("acis").config
+        build = self._build(_tail_sizes(16), {"data": 4})
+        r1 = tune.search(build, base=base)
+        r2 = tune.search(build, base=base)
+        assert r1.overrides == r2.overrides
+        assert r1.score == r2.score
+
+    def test_tunedb_round_trip(self, tmp_path):
+        db = tune.TuneDB(str(tmp_path / "db.json"))
+        db.store("k1", {"bucket_bytes": 0}, score=1.0)
+        assert db.lookup("k1")["overrides"] == {"bucket_bytes": 0}
+        db2 = tune.TuneDB(str(tmp_path / "db.json"))
+        assert db2.lookup("k1")["overrides"] == {"bucket_bytes": 0}
+        assert db2.lookup("nope") is None
+
+    def test_tunedb_ignores_foreign_schema(self, tmp_path):
+        path = tmp_path / "db.json"
+        path.write_text('{"schema": 999, "entries": {"k": {}}}')
+        assert tune.TuneDB(str(path)).lookup("k") is None
+
+    def test_autotune_hits_db_without_research(self, tmp_path):
+        """Acceptance: the second engine compile of the same (pytree,
+        topology) with autotune on hits the DB — no second search."""
+        db = str(tmp_path / "tune.json")
+        sizes = _tail_sizes(16)
+        avals = tuple(AV((s,), jnp.float32) for s in sizes)
+        treedef = jax.tree_util.tree_structure([0] * len(sizes))
+
+        n0 = search_mod.SEARCHES_RUN
+        e1 = make_engine("acis", autotune=True, tune_db=db)
+        c1 = e1._sync_program(treedef, avals, None,
+                              axis_sizes={"data": 8})
+        assert search_mod.SEARCHES_RUN == n0 + 1
+        e2 = make_engine("acis", autotune=True, tune_db=db)
+        c2 = e2._sync_program(treedef, avals, None,
+                              axis_sizes={"data": 8})
+        assert search_mod.SEARCHES_RUN == n0 + 1, "DB hit re-searched"
+        assert [s.kind for s in c2.stages] == [s.kind for s in c1.stages]
+        # the tuned program is what the default would NOT have built
+        e3 = make_engine("acis")
+        c3 = e3._sync_program(treedef, avals, None,
+                              axis_sizes={"data": 8})
+        assert c1.program_time() < c3.program_time()
+
+    def test_autotuned_sync_matches_default_numerics(self, mesh8):
+        """gradient_sync under autotune returns the same mean as the
+        untuned path — tuning changes the plan, not the math."""
+        import tempfile
+
+        db = tempfile.mktemp(suffix=".json")
+        sizes = _tail_sizes(8)
+        rng = np.random.default_rng(3)
+        grads = [jnp.asarray(rng.standard_normal((8, s))
+                             .astype(np.float32)) for s in sizes]
+
+        def run(engine):
+            def step(*gs):
+                synced, _ = engine.gradient_sync(
+                    [g[0] for g in gs], None)
+                return tuple(s[None] for s in synced)
+            from jax.sharding import PartitionSpec as P
+            fn = jax.jit(jax.shard_map(
+                step, mesh=mesh8, in_specs=(P("data"),) * len(sizes),
+                out_specs=(P("data"),) * len(sizes), check_vma=False))
+            return fn(*grads)
+
+        want = run(make_engine("acis"))
+        got = run(make_engine("acis", autotune=True, tune_db=db))
+        for w, g in zip(want, got):
+            np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                       rtol=1e-5, atol=1e-5)
+
+    def test_autotune_compile_star_args_program(self, tmp_path):
+        """engine.compile with autotune on must handle ``*args``-signature
+        programs: the arity comes from in_avals (trace() alone cannot
+        infer it), and the program is traced once, not per candidate."""
+        eng = make_engine("acis", autotune=True,
+                          tune_db=str(tmp_path / "tune.json"))
+        sizes = _tail_sizes(6)
+        c = eng.compile(
+            lambda *vs: tuple(tracing.reduce(v, ADD, axis="data")
+                              for v in vs),
+            in_avals=tuple(AV((s,), jnp.float32) for s in sizes),
+            axis_size={"data": 8})
+        assert len(c.plan.stages) > 0
+        xs = [np.ones((8, s), np.float32) for s in sizes]
+        outs, _ = SwitchSim(c.topology).run(c, *xs)
+        for s, o in zip(sizes, outs):
+            np.testing.assert_allclose(np.asarray(o)[0],
+                                       np.full((s,), 8.0), rtol=1e-6)
+
+    def test_sync_cache_keys_on_config_fields(self):
+        """The cache-key fix: the same engine re-pointed at a config
+        differing only in tuned fields must not return the stale
+        program (pre-fix, the key ignored every config field)."""
+        sizes = [4096, 131072, 65536, 8192]
+        avals = tuple(AV((s,), jnp.float32) for s in sizes)
+        treedef = jax.tree_util.tree_structure([0] * len(sizes))
+        eng = make_engine("acis")
+        c1 = eng._sync_program(treedef, avals, None,
+                               axis_sizes={"data": 4})
+        eng.config = dataclasses.replace(eng.config, bucket_bytes=0)
+        c2 = eng._sync_program(treedef, avals, None,
+                               axis_sizes={"data": 4})
+        assert len(c2.stages) != len(c1.stages)
+
+    def test_arena_cache_keys_on_program(self):
+        """Arenas are keyed by the compiled program: per-leaf and
+        bucketized configs over one pytree get distinct (here: absent
+        vs present) arena sets."""
+        sizes = _tail_sizes(16)
+        grads = [np.zeros(s, np.float32) for s in sizes]
+        e1 = make_engine("acis")
+        a1 = e1.init_arenas(grads, axis_sizes={"data": 4})
+        e2 = make_engine("acis", bucket_bytes=0)
+        a2 = e2.init_arenas(grads, axis_sizes={"data": 4})
+        assert a1 is not None
+        assert a2 is None  # per-leaf sync has no bucket packs
+
+
+# ---------------------------------------------------------------------------
+# explain(trace=...)
+# ---------------------------------------------------------------------------
+
+class TestExplainTrace:
+    def test_measured_vs_model_columns(self):
+        eng = make_engine("acis")
+        sizes = [4096, 131072, 65536]
+        c = _sync_program(sizes, eng, {"data": 4})
+        rng = np.random.default_rng(0)
+        ins = [rng.standard_normal((4, s)).astype(np.float32)
+               for s in sizes]
+        _, trace, _ = tune.record_sim(c, SwitchSim(c.topology), *ins)
+        text = c.explain(trace)
+        assert "meas_us" in text
+        assert "model_us" in text
+        assert "mispredict ratio" in text
+        # the plain table still renders without a trace
+        assert "meas_us" not in c.explain()
