@@ -157,10 +157,12 @@ def wallclock_rows() -> list[tuple]:
     multi-axis {pod: 2, data: 4} mesh: the PR-4-style serial path
     (stage-ordered dispatch, per-leaf means, fresh concat per pack) vs
     the overlapped runtime (merged wave dispatch, hoisted bucket mean,
-    donated arenas).  Two workloads: the standard mixed ragged pytree
-    (bulk ring movement dominates — both paths move identical bytes, so
-    the mechanics land within noise) and the all-tail ragged pytree
-    (dispatch-bound — the regime the overlapped runtime targets).
+    donated arenas, batched same-axis ring launches).  Two workloads:
+    the standard mixed ragged pytree (bulk ring movement dominates —
+    identical bytes either way, but batching collapses the per-bucket
+    ring launches into one walk per axis) and the all-tail ragged
+    pytree (dispatch-bound — the regime the overlapped runtime
+    targets).
     Interleaved median-of-N timing; ``jax_*`` rows are recorded but not
     CI-gated (wall-clock noise).
     """
@@ -220,7 +222,8 @@ def wallclock_rows() -> list[tuple]:
                         overlap_dispatch=False),
             sizes, leaves, shared_mean=False, arenas=False)
         c_over, run_over = build(
-            make_engine("acis", inner_axis="data", outer_axis="pod"),
+            make_engine("acis", inner_axis="data", outer_axis="pod",
+                        batch_rings=True),
             sizes, leaves, shared_mean=True, arenas=True)
         run_serial(); run_over()               # compile + warm
         ts, to = [], []

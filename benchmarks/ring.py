@@ -1,0 +1,156 @@
+"""Pallas bulk data path microbenchmarks.
+
+Three A/Bs, one per tentpole piece:
+
+* **batched launch** — k independent same-axis allreduces priced as k
+  separate rings vs one ring over the chunk-aligned stacked buffer
+  (:func:`repro.core.netmodel.batched_ring_times`), plus the measured
+  jit wall-clock of both lowerings on the 8-device host mesh;
+* **RS/AG bucketing** — per-leaf reduce-scatter / all-gather vs the
+  single bucket collective
+  (:func:`repro.core.netmodel.bucketed_collective_times`);
+* **fused pack** — the arena pack as one aliased Pallas launch
+  (interpret mode on CPU) vs the per-part dynamic_update_slice loop,
+  measured wall-clock.
+
+The analytic rows are deterministic and CI-gated through
+``benchmarks/check_regression.py``; the ``jax_*`` wall-clock rows are
+recorded-but-not-gated like every other real measurement.  On CPU the
+fused-pack kernel runs under the Pallas interpreter, so its wall-clock
+row documents the correctness vehicle, not silicon performance.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+AXIS = 8                       # host devices on the benchmark mesh
+K = 8                          # independent rings merged per launch
+RING_KB = 32                   # per-ring payload
+
+
+def _median_us(run, iters: int = 12) -> float:
+    run()                      # warm / compile
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        run()
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts)) * 1e6
+
+
+def analytic_rows() -> list[tuple]:
+    from repro.core import netmodel
+
+    p = netmodel.PAPER
+    out = []
+
+    # k same-axis rings, ragged payloads spanning the small-bucket regime
+    sizes = [(1 << 14) + 1024 * i for i in range(K)]
+    sep, bat = netmodel.batched_ring_times(AXIS, sizes, p)
+    out.append((f"ring_batched_launch_k{K}", bat * 1e6,
+                f"speedup={sep / bat:.2f}"
+                f",separate_us={sep * 1e6:.2f},n={AXIS}"))
+
+    # per-leaf RS / AG vs one bucket collective, 16-leaf ragged tail
+    rng = np.random.default_rng(7)
+    leaf_sizes = [int(rng.integers(1 << 8, 1 << 13)) * AXIS
+                  for _ in range(16)]
+    for kind, tag in (("reduce_scatter", "rs"), ("allgather", "ag")):
+        sep, tot = netmodel.bucketed_collective_times(
+            kind, AXIS, leaf_sizes, p)
+        out.append((f"ring_bucket_{tag}16", tot * 1e6,
+                    f"speedup={sep / tot:.2f}"
+                    f",per_leaf_us={sep * 1e6:.2f},n={AXIS}"))
+    return out
+
+
+def _ring_wallclock_rows() -> list[tuple]:
+    """Measured: K independent same-axis rings, per-program dispatch vs
+    one batched launch (identical bytes; the delta is launch count)."""
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+
+    from repro.core import make_engine, tracing
+
+    mesh = jax.make_mesh((AXIS,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    sizes = [RING_KB * 256 + 64 * i for i in range(K)]   # f32 elements
+    avals = tuple(jax.ShapeDtypeStruct((s,), jnp.float32) for s in sizes)
+    rng = np.random.default_rng(0)
+    xs = [jnp.asarray(rng.standard_normal((AXIS, s)).astype(np.float32))
+          for s in sizes]
+
+    def prog(*gs):
+        return tuple(tracing.reduce(g, axis="data") for g in gs)
+
+    spec = P("data", None)
+    runs = {}
+    for br in (False, True):
+        eng = make_engine("acis", batch_rings=br, bucket_bytes=0)
+        c = eng.compile(tracing.trace(prog, num_inputs=K),
+                        in_avals=avals, axis_size=AXIS)
+
+        def body(*ls, _c=c):
+            return tuple(o[None] for o in _c(*[l[0] for l in ls]))
+
+        fn = jax.jit(jax.shard_map(body, mesh=mesh, in_specs=(spec,) * K,
+                                   out_specs=(spec,) * K, check_vma=False))
+        runs[br] = (lambda _fn=fn: jax.block_until_ready(_fn(*xs)), c)
+
+    t_per = _median_us(runs[False][0])
+    t_bat = _median_us(runs[True][0])
+    kinds = runs[True][1].stage_kinds()
+    return [
+        (f"jax_ring_batched_k{K}_per_program", t_per,
+         f"collectives={K}"),
+        (f"jax_ring_batched_k{K}_batched", t_bat,
+         f"speedup={t_per / t_bat:.2f}"
+         f",batched_stages={kinds.count('batched_allreduce')}"),
+    ]
+
+
+def _pack_wallclock_rows() -> list[tuple]:
+    """Measured: the bucket pack into a persistent arena — per-part
+    dynamic_update_slice loop vs one aliased pack_combine launch
+    (Pallas interpreter on CPU)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import switchops
+
+    switchops.load_kernels()
+    rng = np.random.default_rng(1)
+    part_sizes = [int(rng.integers(1 << 10, 1 << 14)) for _ in range(12)]
+    arena = jnp.zeros((sum(part_sizes),), jnp.float32)
+    parts = [jnp.asarray(rng.standard_normal((s,)).astype(np.float32))
+             for s in part_sizes]
+    op = switchops.get("pack_combine")
+
+    @jax.jit
+    def unfused(a, *ps):
+        off = 0
+        for x in ps:
+            a = jax.lax.dynamic_update_slice(a, x, (off,))
+            off += x.shape[0]
+        return a
+
+    fused = jax.jit(lambda a, *ps: op(a, *ps, use_kernel=True))
+
+    t_loop = _median_us(
+        lambda: jax.block_until_ready(unfused(arena, *parts)))
+    t_fused = _median_us(
+        lambda: jax.block_until_ready(fused(arena, *parts)))
+    return [
+        ("jax_ring_pack_unfused", t_loop,
+         f"parts={len(part_sizes)}"),
+        ("jax_ring_pack_fused", t_fused,
+         f"speedup={t_loop / t_fused:.2f},interpret=cpu"),
+    ]
+
+
+def rows() -> list[tuple]:
+    return analytic_rows() + _ring_wallclock_rows() + _pack_wallclock_rows()

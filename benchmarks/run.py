@@ -67,6 +67,11 @@ def main() -> None:
     from benchmarks import execplan
     rows += execplan.rows()
 
+    # Pallas bulk data path: batched ring launches, RS/AG bucketing,
+    # fused arena pack
+    from benchmarks import ring
+    rows += ring.rows()
+
     # autotuning loop: self-replay fidelity, fit recovery, tuned vs
     # default search, replay-vs-rerun agreement
     from benchmarks import tune

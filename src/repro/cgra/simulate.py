@@ -402,7 +402,11 @@ class SwitchSim:
         size = flat[0].shape[0]
         pad = (-size) % n
         if pad:
-            flat = [np.concatenate([f, np.zeros((pad,), f.dtype)])
+            # mirror ring.pad_to_multiple(..., monoid=): pad lanes carry
+            # the monoid identity, not literal zeros
+            fill = np.asarray(monoid.identity(
+                jax.ShapeDtypeStruct((), flat[0].dtype)))
+            flat = [np.concatenate([f, np.full((pad,), fill, f.dtype)])
                     for f in flat]
         red = self._ring_rs(flat, combine)
         full = self._ring_ag(red)
@@ -513,6 +517,11 @@ class SwitchSim:
             self._charge_ring(st, clock, m)                  # RS half
             self._charge_ring(st, clock, m, compute=False)   # AG half
         return tuple(out)
+
+    # a batched ring (Coalesce batch_rings) is one ring over the stacked
+    # payload — identical dataplane walk, so the analytic/simulated
+    # agreement for "allreduce" carries over unchanged
+    _run_batched_allreduce = _run_allreduce
 
     def _run_map_allreduce(self, st, args, clock):
         mp = st.ir.nodes[0].op

@@ -32,6 +32,7 @@ few streaming buckets executed over an explicit
 from __future__ import annotations
 
 import dataclasses
+import os
 from typing import Any, Optional
 
 import jax
@@ -97,6 +98,27 @@ class CollectiveConfig:
     # to one bucket-sized kernel; False keeps per-leaf epilogues.  A
     # tunable: the hoist trades kernel count against wave-level overlap.
     epilogue_hoist: bool = True
+    # route the bulk data path through the Pallas kernels (switchops
+    # registry): the Coalesce bucket pack becomes one fused arena-aliased
+    # launch and ring hop combines run the registered kernels.  Whether a
+    # kernel compiles (Mosaic on TPU) or interprets (CPU — tier-1 numerics
+    # validation) is decided per call by kernels/ops._interpret_default,
+    # overridable via $ACIS_KERNEL_INTERPRET.  Default comes from
+    # $ACIS_USE_KERNELS (the CI kernels leg sets it).
+    use_kernels: bool = dataclasses.field(
+        default_factory=lambda: os.environ.get(
+            "ACIS_USE_KERNELS", "") not in ("", "0"))
+    # merge a wave's independent same-axis allreduces (plain elementwise
+    # monoid, identity codec) into ONE ring over a chunk-aligned stacked
+    # buffer — k ring launches collapse to one, amortizing the per-launch
+    # hop latency.  Bit-compatible with per-program launches (each lane
+    # keeps its chunk index, hence its fold order).  A tunable.
+    batch_rings: bool = False
+    # per-merged-launch payload cap in bytes for batch_rings; None =
+    # the compiler default (a few MB), 0 = uncapped.  Bounds the
+    # synchronization/cache cost of one giant stacked buffer while
+    # still amortizing launches across small rings.
+    batch_rings_bytes: Optional[int] = None
     # consult (and on a miss, populate) the on-disk tuning DB
     # (repro.tune.search) at compile: the stored winning overrides for
     # this (program structure, topology) are applied transparently.
@@ -121,7 +143,8 @@ class CollectiveConfig:
         return (self.backend, self.codec, self.compressor,
                 self.topk_ratio, self.latency_optimal_below,
                 self.bucket_bytes, self.overlap_dispatch,
-                self.epilogue_hoist)
+                self.epilogue_hoist, self.use_kernels,
+                self.batch_rings, self.batch_rings_bytes)
 
 
 class CollectiveEngine:

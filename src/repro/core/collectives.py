@@ -38,6 +38,7 @@ def all_reduce(
     backend: str = "acis",
     codec: WireCodec = IDENTITY,
     latency_optimal: bool = False,
+    hop_combine: Optional[Callable] = None,
 ) -> jax.Array:
     """All-reduce ``x`` over ``axis_name`` with an arbitrary monoid & codec.
 
@@ -58,6 +59,7 @@ def all_reduce(
 
     if codec is IDENTITY:
         return ring.ring_all_reduce(x, axis_name, monoid,
+                                    hop_combine=hop_combine,
                                     latency_optimal=latency_optimal)
 
     # Wire-coded path: encode once, combine in the encoded domain per hop
@@ -69,6 +71,7 @@ def all_reduce(
     # Fallback: cast-style codec (bf16/fp8) — encode before hops, decode after.
     enc = codec.encode(x)
     red = ring.ring_all_reduce(enc, axis_name, monoid,
+                               hop_combine=hop_combine,
                                latency_optimal=latency_optimal)
     return codec.decode(red).astype(x.dtype)
 

@@ -68,7 +68,8 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from repro.core import collectives, executor, fused, lookaside, netmodel, ring
+from repro.core import (collectives, executor, fused, lookaside, netmodel,
+                        ring, switchops)
 from repro.core.program import (AUTO_AXIS, COLLECTIVE_KINDS, DagNode,
                                 DagProgram, Node, OpKind, SwitchProgram)
 from repro.core.tracing import trace
@@ -580,16 +581,29 @@ class Legalize:
 # Pass 2: LowerTopology — resolve axes, lower compound reductions
 # ---------------------------------------------------------------------------
 
-def _flatten_pad(inner_axes: tuple[str, ...]) -> Callable:
+def _flatten_pad(inner_axes: tuple[str, ...],
+                 monoid=None, quant_safe: bool = False) -> Callable:
     """Flatten to 1-D and pad to a multiple of the product of the inner
     axis sizes, so the reduce-scatter chain can chunk evenly.  Runs inside
     shard_map, where ``lax.axis_size`` is concrete — no static size needed
-    at compile time."""
+    at compile time.
+
+    Pad lanes carry the reduce monoid's identity so per-hop combines never
+    see invented values (a literal 0 clamps ``min`` / annihilates ``prod``).
+    ``quant_safe`` forces a zero fill instead: a blockwise-quant codec on
+    the outer hop shares one scale per block, and a huge identity element
+    (e.g. max's -3.4e38) in the tail block would absorb the real lanes'
+    resolution — the pad lanes themselves are sliced off by hier_unpad.
+    """
     def fn(x):
         n = 1
         for ax in inner_axes:
             n *= lax.axis_size(ax)
-        return ring.pad_to_multiple(x.reshape(-1), n)[0]
+        m = None if quant_safe else monoid
+        return ring.pad_to_multiple(x.reshape(-1), n, monoid=m)[0]
+    # the axis query makes fn opaque to jax.eval_shape; expose the axes
+    # so _propagate_avals can compute the padded shape statically
+    fn.inner_axes = tuple(inner_axes)
     return fn
 
 
@@ -680,8 +694,11 @@ class LowerTopology:
             codec = ctx.default_wire_codec()
         # pad/unpad are shape bookkeeping, not chunk-local compute — they
         # must not be hop-fused into the ring schedules
-        p = emit(Node(OpKind.MAP, fn=_flatten_pad(inner), name="hier_pad",
-                      fusable=False), (vin,))
+        quant_safe = codec.combine_encoded is not None
+        p = emit(Node(OpKind.MAP,
+                      fn=_flatten_pad(inner, monoid=op.monoid,
+                                      quant_safe=quant_safe),
+                      name="hier_pad", fusable=False), (vin,))
         for ax in inner:
             p = emit(Node(OpKind.REDUCE_SCATTER, monoid=op.monoid, axis=ax),
                      (p,))
@@ -726,6 +743,22 @@ def _propagate_avals(dag: DagProgram,
             try:
                 out = jax.eval_shape(nd.op.fn, *ins)
             except Exception:
+                # hier_pad queries lax.axis_size (opaque to eval_shape)
+                # but advertises its axes — compute the pad statically
+                inner = getattr(nd.op.fn, "inner_axes", None)
+                if inner:
+                    n = 1
+                    for ax in inner:
+                        sz = ctx.size_of(ax)
+                        if not sz:
+                            n = None
+                            break
+                        n *= sz
+                    if n:
+                        flat = int(math.prod(ins[0].shape)) \
+                            if ins[0].shape else 1
+                        avals[nd.out] = jax.ShapeDtypeStruct(
+                            (-(-flat // n) * n,), ins[0].dtype)
                 continue
             if hasattr(out, "shape") and hasattr(out, "dtype"):
                 avals[nd.out] = jax.ShapeDtypeStruct(tuple(out.shape),
@@ -795,6 +828,79 @@ def _split_fn(offset: int, size: int) -> Callable:
     return split
 
 
+def _rs_pack_fn(sizes: tuple[int, ...], n: int) -> Callable:
+    """Layout-aware pack for a REDUCE_SCATTER bucket.
+
+    Chunk boundaries must align with the scatter axis: each flat leaf is
+    viewed as ``(n, size/n)`` and the leaves are concatenated chunk-wise
+    (axis 1), so rank ``j``'s scattered share of the bucket is exactly
+    the concatenation of every leaf's own chunk ``j`` — pure data
+    movement, bit-identical to the per-leaf scatters."""
+    def pack(*xs):
+        _check_pack_sizes(xs, sizes)
+        return jnp.concatenate([x.reshape(n, -1) for x in xs],
+                               axis=1).reshape(-1)
+    return pack
+
+
+def _rs_split_fn(offset: int, chunk: int, n: int) -> Callable:
+    """Slice one leaf's scattered chunk back out of a bucket RS result
+    (the bucket output is one rank-chunk: ``sum(size_i / n)`` long)."""
+    def split(b, orig):
+        shp = (orig.shape[0] // n,) + tuple(orig.shape[1:])
+        return b[offset:offset + chunk].reshape(shp)
+    return split
+
+
+def _ag_split_fn(offset: int, size: int, n: int) -> Callable:
+    """Slice one leaf's gathered result out of a bucket AG output: the
+    output is n rank-copies of the flat bucket back to back, so leaf
+    ``i`` is column block ``[offset, offset+size)`` of the (n, S) view."""
+    def split(b, orig):
+        shp = (orig.shape[0] * n,) + tuple(orig.shape[1:])
+        return b.reshape(n, -1)[:, offset:offset + size].reshape(shp)
+    return split
+
+
+def _ring_batch_pack_fn(sizes: tuple[int, ...], chunks: tuple[int, ...],
+                        n: int, monoid) -> Callable:
+    """Pack k independent same-axis allreduce payloads into ONE
+    chunk-aligned stacked buffer (the batched ring launch).
+
+    Each flat leaf is padded to ``n * chunk_i`` with the monoid identity
+    — the same pad :func:`repro.core.ring.pad_to_multiple` would apply
+    inside its own ring — viewed as ``(n, chunk_i)`` and concatenated
+    along axis 1.  Every lane therefore keeps its original chunk index,
+    hence its exact per-hop fold order: the batched ring is
+    *bit-identical* to the k separate rings (for both the bandwidth RS∘AG
+    walk, whose fold path is chunk-indexed, and the latency log-step,
+    whose fold order is lane-independent)."""
+    def pack(*xs):
+        _check_pack_sizes(xs, sizes)
+        cols = []
+        for x, c in zip(xs, chunks):
+            flat = x.reshape(-1)
+            pad = n * c - flat.shape[0]
+            if pad:
+                fill = monoid.identity(
+                    jax.ShapeDtypeStruct((), flat.dtype))
+                flat = jnp.concatenate(
+                    [flat, jnp.full((pad,), fill, flat.dtype)])
+            cols.append(flat.reshape(n, c))
+        return jnp.concatenate(cols, axis=1).reshape(-1)
+    return pack
+
+
+def _ring_batch_split_fn(offset: int, chunk: int, size: int,
+                         n: int) -> Callable:
+    """Recover one payload from a batched-ring result: take its column
+    block of the (n, C) view, drop the identity pad lanes, reshape."""
+    def split(b, orig):
+        col = b.reshape(n, -1)[:, offset:offset + chunk]
+        return col.reshape(-1)[:size].reshape(orig.shape)
+    return split
+
+
 @dataclasses.dataclass
 class _ReduceUnit:
     """One bucketable per-leaf reduction — a plain REDUCE, an
@@ -803,7 +909,7 @@ class _ReduceUnit:
     All three are elementwise across ranks and shape-preserving end to
     end, which is exactly what makes concat-then-split legal."""
 
-    kind: str                       # "reduce" | "ef" | "hier"
+    kind: str                       # "reduce" | "ef" | "hier" | "rs" | "ag"
     vin: int                        # the leaf value feeding the unit
     out_red: int                    # the unit's reduced output value
     out_dlv: Optional[int]          # DELIVERED sibling output (ef only)
@@ -852,24 +958,29 @@ class Coalesce:
         override = self.bucket_bytes
         if override is None and ctx.config is not None:
             override = getattr(ctx.config, "bucket_bytes", None)
-        if override == 0 or ctx.in_avals is None:
+        if ctx.in_avals is None:
             return dag
-        avals = _propagate_avals(dag, ctx)
-        units = self._find_units(dag, avals)
-        buckets = self._form_buckets(units, ctx, override, dag)
-        if not buckets:
-            return dag
-        hoist = True
-        if ctx.config is not None:
-            hoist = getattr(ctx.config, "epilogue_hoist", True)
-        return self._rewrite(dag, buckets, hoist=hoist)
+        if override != 0:
+            avals = _propagate_avals(dag, ctx)
+            units = self._find_units(dag, avals, ctx)
+            buckets = self._form_buckets(units, ctx, override, dag)
+            if buckets:
+                hoist = True
+                if ctx.config is not None:
+                    hoist = getattr(ctx.config, "epilogue_hoist", True)
+                dag = self._rewrite(dag, buckets, hoist=hoist)
+        if ctx.config is not None and getattr(ctx.config, "batch_rings",
+                                              False):
+            dag = self._batch_rings(dag, ctx)
+        return dag
 
     # -- unit discovery ------------------------------------------------------
 
-    def _find_units(self, dag: DagProgram,
-                    avals: dict) -> list[_ReduceUnit]:
+    def _find_units(self, dag: DagProgram, avals: dict,
+                    ctx: CompileContext) -> list[_ReduceUnit]:
         users = dag.users()
         out_set = set(dag.outputs)
+        producer_of = {nd.out: nd for nd in dag.nodes}
         claimed: set[int] = set()
 
         def sole_user(vid: int) -> Optional[DagNode]:
@@ -900,6 +1011,10 @@ class Coalesce:
                     u = self._match_reduce(nd, aval)
                 elif nd.op.kind == OpKind.MAP and nd.op.name == "hier_pad":
                     u = self._match_hier(nd, aval, sole_user)
+                elif nd.op.kind == OpKind.REDUCE_SCATTER:
+                    u = self._match_rs(nd, aval, users, ctx)
+                elif nd.op.kind == OpKind.ALLGATHER:
+                    u = self._match_ag(nd, aval, users, producer_of, ctx)
             if u is not None:
                 units.append(u)
                 claimed.update(g.out for g in u.nodes)
@@ -917,6 +1032,61 @@ class Coalesce:
                dt)
         return _ReduceUnit("reduce", nd.inputs[0], nd.out, None, (nd,),
                            key, nbytes, size, shape, {"red": nd.op}, dt)
+
+    def _match_rs(self, nd: DagNode, aval, users,
+                  ctx: CompileContext) -> Optional[_ReduceUnit]:
+        """Standalone REDUCE_SCATTER leaf (sharded-optimizer style).
+
+        Bucketizable because the pack is chunk-aligned with the scatter
+        axis (see :func:`_rs_pack_fn`) — each rank's share of the bucket
+        is the concat of its per-leaf shares.  Requires the leading dim
+        divisible by the axis size (otherwise the per-leaf op itself
+        defines the ragged split and we leave it alone)."""
+        if nd.op.ef is not None:
+            return None
+        ax = nd.op.axis
+        if not isinstance(ax, str) or ax == AUTO_AXIS:
+            return None
+        n = ctx.size_of(ax)
+        if not n or n < 2 or not aval.shape or aval.shape[0] % n:
+            return None
+        us = users.get(nd.out, [])
+        if len(us) == 1 and us[0].op.kind == OpKind.ALLGATHER \
+                and us[0].op.axis == ax:
+            # RS feeding a same-axis AG is FuseHops' RsAgPattern — the
+            # pair rebuilds the bandwidth-optimal allreduce; don't split
+            # the pattern across a bucket boundary
+            return None
+        nbytes, size, shape, dt = self._leaf_meta(aval)
+        key = ("rs", ax, nd.op.monoid.name, nd.op.codec.name, dt)
+        return _ReduceUnit("rs", nd.inputs[0], nd.out, None, (nd,), key,
+                           nbytes, size, shape,
+                           {"red": nd.op, "n": n}, dt)
+
+    def _match_ag(self, nd: DagNode, aval, users, producer_of,
+                  ctx: CompileContext) -> Optional[_ReduceUnit]:
+        """Standalone ALLGATHER leaf — pure data movement, so a plain
+        concat bucket gathers once and the splits de-interleave the
+        (n, bucket) result per leaf."""
+        ax = nd.op.axis
+        if not isinstance(ax, str) or ax == AUTO_AXIS:
+            return None
+        n = ctx.size_of(ax)
+        if not n or n < 2 or not aval.shape:
+            return None
+        prod = producer_of.get(nd.inputs[0])
+        if prod is not None and prod.op.kind == OpKind.REDUCE_SCATTER \
+                and prod.op.axis == ax:
+            return None                     # RsAgPattern territory
+        us = users.get(nd.out, [])
+        if len(us) == 1 and us[0].op.kind == OpKind.MAP \
+                and us[0].op.fusable and len(us[0].inputs) == 1:
+            return None                     # GatherMapPattern territory
+        nbytes, size, shape, dt = self._leaf_meta(aval)
+        key = ("ag", ax, dt)
+        return _ReduceUnit("ag", nd.inputs[0], nd.out, None, (nd,), key,
+                           nbytes, size, shape,
+                           {"red": nd.op, "n": n}, dt)
 
     def _match_ef(self, nd: DagNode, delivered: dict, aval,
                   claimed: set, sole_user) -> Optional[_ReduceUnit]:
@@ -1220,13 +1390,24 @@ class Coalesce:
             emitted.add(bi)
             us = buckets[bi]
             ins = tuple(get(u.vin) for u in us)
-            pack = emit(Node(OpKind.MAP,
-                             fn=_pack_fn(tuple(u.size for u in us),
-                                         us[0].dtype),
-                             name="bucket_pack", fusable=False), ins)
             ops = us[0].ops
+            if us[0].kind == "rs":
+                # scatter-axis-aligned interleave, NOT the arena concat
+                # layout — no bucket_sizes attr, so Emit never hands
+                # this pack an arena
+                pack = emit(Node(OpKind.MAP,
+                                 fn=_rs_pack_fn(
+                                     tuple(u.size for u in us),
+                                     ops["n"]),
+                                 name="bucket_pack_rs", fusable=False),
+                            ins)
+            else:
+                pack = emit(Node(OpKind.MAP,
+                                 fn=_pack_fn(tuple(u.size for u in us),
+                                             us[0].dtype),
+                                 name="bucket_pack", fusable=False), ins)
             v_dlv = None
-            if us[0].kind == "reduce":
+            if us[0].kind in ("reduce", "rs", "ag"):
                 v_red = emit(ops["red"], (pack,))
             elif us[0].kind == "ef":
                 v_red = emit(ops["red"], (pack,))
@@ -1247,8 +1428,18 @@ class Coalesce:
             off = 0
             for k, u in enumerate(us):
                 orig = vmap[u.vin]      # runtime shape donor for the slice
-                split = Node(OpKind.MAP, fn=_split_fn(off, u.size),
-                             name="bucket_split", fusable=False)
+                if u.kind == "rs":
+                    chunk = u.size // ops["n"]
+                    split = Node(OpKind.MAP,
+                                 fn=_rs_split_fn(off, chunk, ops["n"]),
+                                 name="bucket_split", fusable=False)
+                elif u.kind == "ag":
+                    split = Node(OpKind.MAP,
+                                 fn=_ag_split_fn(off, u.size, ops["n"]),
+                                 name="bucket_split", fusable=False)
+                else:
+                    split = Node(OpKind.MAP, fn=_split_fn(off, u.size),
+                                 name="bucket_split", fusable=False)
                 if v_epi is not None:
                     # the hoisted epilogue replaced every per-leaf map:
                     # the split of the epilogued bucket IS that map's
@@ -1260,11 +1451,267 @@ class Coalesce:
                     dsplit = Node(OpKind.MAP, fn=_split_fn(off, u.size),
                                   name="bucket_split", fusable=False)
                     vmap[u.out_dlv] = emit(dsplit, (v_dlv, orig))
-                off += u.size
+                # rs split offsets walk the per-rank chunk, not the leaf
+                off += u.size // ops["n"] if u.kind == "rs" else u.size
 
         for nd in dag.nodes:
             p = producers.get(nd.out)
             if p is not None and p[0] == "node":
+                get(nd.out)
+        for v in dag.outputs:
+            get(v)
+        return DagProgram(dag.num_inputs, tuple(nodes_out),
+                          tuple(vmap[v] for v in dag.outputs), dag.name)
+
+    # -- batched same-axis ring launch ---------------------------------------
+
+    _BATCHABLE_MONOIDS = ("add", "max", "min", "prod")
+
+    # default per-member payload cap for batching.  Merging amortizes
+    # the fixed per-launch hop walk, which only matters while a ring is
+    # latency-bound; a bandwidth-bound member gains nothing and loses
+    # twice — it can no longer pipeline against its siblings, and the
+    # stacked buffer spills the per-hop working set out of cache
+    # (measured: merging MB-scale bucket rings on the host backend is a
+    # slowdown, merging tens-of-KB rings is ~2x).  So: members above the
+    # cap keep their own launch, members below it merge, and one merged
+    # launch's total payload is bounded at 8x the cap.
+    _BATCH_RINGS_BYTES = 256 << 10
+
+    @staticmethod
+    def _cap_groups(g: list, cap: Optional[int]) -> list[list]:
+        """Partition a batch group under the payload cap: drop members
+        above ``cap`` bytes (they stay per-program launches), greedily
+        pack the rest smallest-first into sub-groups of at most
+        ``8 * cap`` total.  ``cap`` 0/None = merge everything.  Only
+        sub-groups of >= 2 survive — a singleton batches nothing."""
+        if not cap:
+            return [g] if len(g) >= 2 else []
+        small = [t for t in g if _aval_bytes(t[2]) <= cap]
+        out: list[list] = []
+        cur: list = []
+        cur_bytes = 0
+        for t in sorted(small, key=lambda t: _aval_bytes(t[2])):
+            b = _aval_bytes(t[2])
+            if cur and cur_bytes + b > 8 * cap:
+                out.append(cur)
+                cur, cur_bytes = [], 0
+            cur.append(t)
+            cur_bytes += b
+        out.append(cur)
+        return [s for s in out if len(s) >= 2]
+
+    @staticmethod
+    def _drop_group_cycles(merges: list, anc: dict) -> list:
+        """Dissolve batch groups knotted into a cycle through other
+        groups' members (same policy as :meth:`_drop_cyclic`): members
+        are independent *within* a group, but group A may feed group B
+        through intermediates while B feeds A — merging both would
+        deadlock; per-program launches stay legal."""
+        while len(merges) > 1:
+            k = len(merges)
+            outs = [{nd.out for nd, _, _ in g} for _, g in merges]
+            indeg = [0] * k
+            succs: list[list[int]] = [[] for _ in range(k)]
+            for i in range(k):
+                for j in range(k):
+                    if i != j and any(
+                            (anc.get(nd.inputs[0], set())
+                             | {nd.inputs[0]}) & outs[i]
+                            for nd, _, _ in merges[j][1]):
+                        succs[i].append(j)
+                        indeg[j] += 1
+            ready = [i for i, d in enumerate(indeg) if d == 0]
+            seen = 0
+            while ready:
+                i = ready.pop()
+                seen += 1
+                for s in succs[i]:
+                    indeg[s] -= 1
+                    if indeg[s] == 0:
+                        ready.append(s)
+            if seen == k:
+                break
+            drop = next(i for i, d in enumerate(indeg) if d > 0)
+            merges = merges[:drop] + merges[drop + 1:]
+        return merges
+
+    def _batch_rings(self, dag: DagProgram,
+                     ctx: CompileContext) -> DagProgram:
+        """Merge a program's independent same-axis ring collectives —
+        allreduces, reduce-scatters, all-gathers — into ONE launch per
+        (kind, axis, monoid, dtype) over a chunk-aligned stacked buffer.
+
+        After bucketing, a big sync is a handful of bucket allreduces on
+        the same axis — each still a separate ring launch paying the full
+        per-hop dispatch latency.  When the combine is a plain
+        elementwise Type 1 monoid and the codec is identity, k of them
+        collapse into a single launch: pack (chunk-aligned, identity-
+        padded — see :func:`_ring_batch_pack_fn`), one REDUCE tagged
+        ``batched_ring:k``, k splits.  Bit-compatible with the separate
+        launches because every lane keeps its chunk index, hence its
+        per-hop fold order.  (When group members would straddle the
+        latency/bandwidth crossover, the batched buffer makes one
+        schedule decision for all of them — same numerics up to float
+        reassociation, which is the usual schedule-choice caveat.)
+        """
+        avals = _propagate_avals(dag, ctx)
+        anc = self._value_ancestors(dag)
+        groups: dict[tuple, list] = {}
+        for nd in dag.nodes:
+            op = nd.op
+            if (op.name or "").startswith("batched_ring"):
+                continue
+            ax = op.axis
+            if not isinstance(ax, str) or ax == AUTO_AXIS:
+                continue
+            n = ctx.size_of(ax)
+            if not n or n < 2:
+                continue
+            aval = avals.get(nd.inputs[0])
+            if aval is None:
+                continue
+            dt = str(jnp.dtype(aval.dtype))
+            if op.kind == OpKind.REDUCE:
+                if (op.ef is not None or op.codec.name != "identity"
+                        or op.monoid.name not in self._BATCHABLE_MONOIDS):
+                    continue
+                key = ("red", ax, op.monoid.name, dt)
+            elif op.kind == OpKind.REDUCE_SCATTER:
+                # same chunk-aligned layout as the RS bucket pack; the
+                # merged op needs every leading dim divisible by n
+                if (op.ef is not None or op.codec.name != "identity"
+                        or op.monoid.name not in self._BATCHABLE_MONOIDS
+                        or not aval.shape or aval.shape[0] % n):
+                    continue
+                key = ("rs", ax, op.monoid.name, dt)
+            elif op.kind == OpKind.ALLGATHER:
+                if not aval.shape:
+                    continue
+                key = ("ag", ax, dt)
+            else:
+                continue
+            groups.setdefault(key, []).append((nd, n, aval))
+
+        cap = getattr(ctx.config, "batch_rings_bytes", None) \
+            if ctx.config is not None else None
+        if cap is None:
+            cap = self._BATCH_RINGS_BYTES
+        merges: list[tuple[str, list]] = []
+        for key, g in groups.items():
+            outs = {nd.out for nd, _, _ in g}
+            # keep only mutually independent members: a collective whose
+            # input (transitively) needs another member's output cannot
+            # share its launch
+            indep = [t for t in g
+                     if not ((anc.get(t[0].inputs[0], set())
+                              | {t[0].inputs[0]}) & outs)]
+            for sub in self._cap_groups(indep, cap):
+                merges.append((key[0], sub))
+        merges = self._drop_group_cycles(merges, anc)
+        if not merges:
+            return dag
+
+        member: dict[int, int] = {}
+        for gi, (_, g) in enumerate(merges):
+            for nd, _, _ in g:
+                member[nd.out] = gi
+        producers: dict[int, tuple] = {}
+        for nd in dag.nodes:
+            if nd.out in member:
+                producers[nd.out] = ("group", member[nd.out])
+            else:
+                producers[nd.out] = ("node", nd)
+
+        nodes_out: list[DagNode] = []
+        vmap: dict[int, int] = {i: i for i in range(dag.num_inputs)}
+        next_vid = [dag.num_inputs]
+        emitted: set[int] = set()
+
+        def emit(op: Node, ins: Sequence[int]) -> int:
+            vid = next_vid[0]
+            next_vid[0] += 1
+            nodes_out.append(DagNode(op, tuple(ins), vid))
+            return vid
+
+        def get(vid: int) -> int:
+            got = vmap.get(vid)
+            if got is not None:
+                return got
+            tag, obj = producers[vid]
+            if tag == "node":
+                ins = tuple(get(v) for v in obj.inputs)
+                vmap[vid] = emit(obj.op, ins)
+            else:
+                emit_group(obj)
+            return vmap[vid]
+
+        def emit_group(gi: int) -> None:
+            if gi in emitted:
+                return
+            emitted.add(gi)
+            ckind, g = merges[gi]
+            n = g[0][1]
+            op0 = g[0][0].op
+            sizes = tuple(
+                int(math.prod(a.shape)) if a.shape else 1
+                for _, _, a in g)
+            ins = tuple(get(nd.inputs[0]) for nd, _, _ in g)
+            if ckind == "red":
+                chunks = tuple(-(-s // n) for s in sizes)
+                pack = emit(Node(OpKind.MAP,
+                                 fn=_ring_batch_pack_fn(sizes, chunks, n,
+                                                        op0.monoid),
+                                 name="ring_batch_pack", fusable=False),
+                            ins)
+                red = emit(dataclasses.replace(
+                    op0, name=f"batched_ring:{len(g)}"), (pack,))
+                off = 0
+                for (nd, _, _), s, c in zip(g, sizes, chunks):
+                    split = Node(OpKind.MAP,
+                                 fn=_ring_batch_split_fn(off, c, s, n),
+                                 name="ring_batch_split", fusable=False)
+                    vmap[nd.out] = emit(split,
+                                        (red, vmap[nd.inputs[0]]))
+                    off += c
+            elif ckind == "rs":
+                # chunk-aligned stacking (the RS bucket layout): rank
+                # j's share of the merged buffer is the concat of its
+                # per-member shares
+                pack = emit(Node(OpKind.MAP, fn=_rs_pack_fn(sizes, n),
+                                 name="ring_batch_pack_rs",
+                                 fusable=False), ins)
+                red = emit(dataclasses.replace(
+                    op0, name=f"batched_ring_rs:{len(g)}"), (pack,))
+                off = 0
+                for (nd, _, _), s in zip(g, sizes):
+                    split = Node(OpKind.MAP,
+                                 fn=_rs_split_fn(off, s // n, n),
+                                 name="ring_batch_split_rs",
+                                 fusable=False)
+                    vmap[nd.out] = emit(split,
+                                        (red, vmap[nd.inputs[0]]))
+                    off += s // n
+            else:                                      # "ag"
+                pack = emit(Node(OpKind.MAP,
+                                 fn=lambda *xs: jnp.concatenate(
+                                     [x.reshape(-1) for x in xs]),
+                                 name="ring_batch_pack_ag",
+                                 fusable=False), ins)
+                red = emit(dataclasses.replace(
+                    op0, name=f"batched_ring_ag:{len(g)}"), (pack,))
+                off = 0
+                for (nd, _, _), s in zip(g, sizes):
+                    split = Node(OpKind.MAP,
+                                 fn=_ag_split_fn(off, s, n),
+                                 name="ring_batch_split_ag",
+                                 fusable=False)
+                    vmap[nd.out] = emit(split,
+                                        (red, vmap[nd.inputs[0]]))
+                    off += s
+
+        for nd in dag.nodes:
+            if producers[nd.out][0] == "node":
                 get(nd.out)
         for v in dag.outputs:
             get(v)
@@ -1585,6 +2032,12 @@ class FuseHops:
             return StageIR("ef_allreduce", (nd,), nd.inputs, (nd.out,),
                            axis=_stage_axis(nd))
         kind = _SINGLE_KINDS.get(nd.op.kind)
+        if nd.op.kind == OpKind.REDUCE \
+                and (nd.op.name or "").startswith("batched_ring"):
+            # Coalesce-merged same-axis ring batch: same lowering as a
+            # plain allreduce, but a distinct stage kind so the executor
+            # can prioritize it and the cost model can amortize launches
+            kind = "batched_allreduce"
         if kind is None:
             raise ValueError(f"cannot lower node {nd.op}")
         return StageIR(kind, (nd,), nd.inputs, (nd.out,),
@@ -1618,7 +2071,7 @@ class FuseHops:
 # Pass 5: SelectSchedule — latency- vs bandwidth-optimal rings
 # ---------------------------------------------------------------------------
 
-_RESCHEDULABLE = {"allreduce", "map+allreduce"}
+_RESCHEDULABLE = {"allreduce", "map+allreduce", "batched_allreduce"}
 
 
 class SelectSchedule:
@@ -1814,6 +2267,23 @@ class PlaceCGRA:
 # Pass 7: Emit
 # ---------------------------------------------------------------------------
 
+def _use_kernels(ctx: CompileContext) -> bool:
+    return bool(getattr(ctx.config, "use_kernels", False))
+
+
+def _hop_combine_kernel(monoid) -> Optional[Callable]:
+    """The registered Pallas combine for a Type 1 monoid, as a ring
+    ``hop_combine(incoming, local)`` hook; None when the monoid has no
+    kernel (the ring then folds with the plain monoid combine)."""
+    if monoid.name not in ("add", "max", "min"):
+        return None
+    sop = switchops.get(monoid.name)
+
+    def hop(incoming, local, _sop=sop):
+        return _sop(incoming, local, use_kernel=True)
+    return hop
+
+
 class Emit:
     """Lower every StageIR to a rank-local callable.
 
@@ -1827,6 +2297,10 @@ class Emit:
     name = "emit"
 
     def run(self, groups: list[StageIR], ctx: CompileContext) -> list[Stage]:
+        if _use_kernels(ctx):
+            # bind the Pallas implementations onto the registry once so the
+            # emitted closures' `use_kernel=True` calls actually hit them
+            switchops.load_kernels()
         stages = []
         n_arenas = 0
         for g in groups:
@@ -1838,7 +2312,7 @@ class Emit:
         return stages
 
     def _emit(self, g: StageIR, ctx: CompileContext) -> Stage:
-        run = getattr(self, "_" + g.kind.replace("+", "_"))(g)
+        run = getattr(self, "_" + g.kind.replace("+", "_"))(g, ctx)
         axis = g.axis
         if not axis:
             coll = [nd.op for nd in g.nodes
@@ -1869,7 +2343,7 @@ class Emit:
     # -- fused stages --------------------------------------------------------
 
     @staticmethod
-    def _scan_allgather(g: StageIR):
+    def _scan_allgather(g: StageIR, ctx: CompileContext):
         scan_op = g.nodes[1].op
 
         def run(args, ax, _m=scan_op.monoid, _ex=scan_op.exclusive):
@@ -1880,14 +2354,14 @@ class Emit:
         return run
 
     @staticmethod
-    def _allreduce_alltoall(g: StageIR):
+    def _allreduce_alltoall(g: StageIR, ctx: CompileContext):
         def run(args, ax):
             hist, keys = args
             return fused.fused_allreduce_alltoall(hist, keys, ax)
         return run
 
     @staticmethod
-    def _map_allreduce(g: StageIR):
+    def _map_allreduce(g: StageIR, ctx: CompileContext):
         mp, red = g.nodes[0].op, g.nodes[1].op
         lat = g.schedule == "latency"
 
@@ -1898,7 +2372,7 @@ class Emit:
         return run
 
     @staticmethod
-    def _map_reduce_scatter(g: StageIR):
+    def _map_reduce_scatter(g: StageIR, ctx: CompileContext):
         mp, rs = g.nodes[0].op, g.nodes[1].op
 
         def run(args, ax, _f=mp.fn, _m=rs.monoid, _c=rs.codec):
@@ -1907,7 +2381,7 @@ class Emit:
         return run
 
     @staticmethod
-    def _allgather_map(g: StageIR):
+    def _allgather_map(g: StageIR, ctx: CompileContext):
         mp = g.nodes[1].op
 
         def run(args, ax, _f=mp.fn):
@@ -1916,7 +2390,7 @@ class Emit:
         return run
 
     @staticmethod
-    def _ef_allreduce(g: StageIR):
+    def _ef_allreduce(g: StageIR, ctx: CompileContext):
         """Error-feedback compressed all-reduce (Type 3 look-aside): one
         compression yields both the lossy total and, when the DELIVERED
         sibling survived DCE, this rank's delivered contribution."""
@@ -1931,7 +2405,7 @@ class Emit:
         return run
 
     @staticmethod
-    def _delivered(g: StageIR):
+    def _delivered(g: StageIR, ctx: CompileContext):
         # standalone DELIVERED (its reduce was DCE'd) — rare; reuse the
         # full look-aside op and keep only the local-feedback half
         ef = g.nodes[0].op.ef
@@ -1945,7 +2419,7 @@ class Emit:
     # -- single-node lowerings ----------------------------------------------
 
     @staticmethod
-    def _map(g: StageIR):
+    def _map(g: StageIR, ctx: CompileContext):
         op = g.nodes[0].op
         sizes = getattr(op.fn, "bucket_sizes", None)
         if sizes is None:
@@ -1956,11 +2430,19 @@ class Emit:
         # Coalesce bucket pack: without an arena, the plain concat; with
         # one, flatten every leaf into the persistent buffer in place —
         # the same layout, but the destination is a donated buffer the
-        # caller keeps across steps instead of a fresh allocation
-        def run(args, ax, arena=None, _f=op.fn, _sizes=sizes):
+        # caller keeps across steps instead of a fresh allocation.  With
+        # kernels on, the N per-leaf dynamic_update_slice calls collapse
+        # into ONE arena-aliased Pallas launch (switchops "pack_combine").
+        uk = _use_kernels(ctx)
+
+        def run(args, ax, arena=None, _f=op.fn, _sizes=sizes, _uk=uk):
             if arena is None:
                 return (_f(*args),)
             _check_pack_sizes(args, _sizes)
+            if _uk:
+                parts = [x.reshape(-1).astype(arena.dtype) for x in args]
+                return (switchops.get("pack_combine")(
+                    arena, *parts, use_kernel=True),)
             buf = arena
             off = 0
             for x, s in zip(args, _sizes):
@@ -1971,42 +2453,51 @@ class Emit:
         return run
 
     @staticmethod
-    def _allreduce(g: StageIR):
+    def _allreduce(g: StageIR, ctx: CompileContext):
         op = g.nodes[-1].op if g.nodes[-1].op.kind == OpKind.REDUCE \
             else g.nodes[0].op           # RS∘AG group: monoid/codec on RS
         lat = g.schedule == "latency"
+        hop = _hop_combine_kernel(op.monoid) if _use_kernels(ctx) else None
 
-        def run(args, ax, _m=op.monoid, _c=op.codec, _l=lat):
+        def run(args, ax, _m=op.monoid, _c=op.codec, _l=lat, _h=hop):
             (x,) = args
             return (collectives.all_reduce(x, ax, _m, codec=_c,
-                                           latency_optimal=_l),)
+                                           latency_optimal=_l,
+                                           hop_combine=_h),)
         return run
 
+    # batched same-axis ring: k independent allreduces already merged into
+    # one chunk-aligned stacked buffer by Coalesce — the lowering is the
+    # plain allreduce of that buffer
+    _batched_allreduce = _allreduce
+
     @staticmethod
-    def _reduce_scatter(g: StageIR):
+    def _reduce_scatter(g: StageIR, ctx: CompileContext):
         op = g.nodes[0].op
+        hop = _hop_combine_kernel(op.monoid) if _use_kernels(ctx) else None
 
-        def run(args, ax, _m=op.monoid, _c=op.codec):
+        def run(args, ax, _m=op.monoid, _c=op.codec, _h=hop):
             (x,) = args
-            return (collectives.reduce_scatter(x, ax, _m, codec=_c),)
+            return (collectives.reduce_scatter(x, ax, _m, codec=_c,
+                                               hop_combine=_h),)
         return run
 
     @staticmethod
-    def _allgather(g: StageIR):
+    def _allgather(g: StageIR, ctx: CompileContext):
         def run(args, ax):
             (x,) = args
             return (collectives.all_gather(x, ax),)
         return run
 
     @staticmethod
-    def _alltoall(g: StageIR):
+    def _alltoall(g: StageIR, ctx: CompileContext):
         def run(args, ax):
             (x,) = args
             return (collectives.all_to_all(x, ax),)
         return run
 
     @staticmethod
-    def _scan(g: StageIR):
+    def _scan(g: StageIR, ctx: CompileContext):
         op = g.nodes[0].op
 
         def run(args, ax, _m=op.monoid, _e=op.exclusive):
@@ -2015,7 +2506,7 @@ class Emit:
         return run
 
     @staticmethod
-    def _bcast(g: StageIR):
+    def _bcast(g: StageIR, ctx: CompileContext):
         op = g.nodes[0].op
 
         def run(args, ax, _r=op.root):

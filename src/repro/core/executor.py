@@ -134,6 +134,12 @@ def _axis_groups(stages: Sequence,
     form one serialized group, in plan order.  Axis-less stages (local
     maps) are each their own singleton group — nothing serializes free
     compute.
+
+    Within an axis group, batched ring launches (``batched_allreduce``)
+    are issued first: the merged ring is the group's long pole, and
+    leading with it lets the leftover per-program launches hide behind
+    it.  Stages within one wave are mutually independent (same Kahn
+    level), so the stable reorder cannot break a dependency.
     """
     by_axis: dict[str, list[int]] = {}
     groups: list[tuple[str, tuple[int, ...]]] = []
@@ -146,7 +152,15 @@ def _axis_groups(stages: Sequence,
             by_axis[ax] = []
             groups.append((ax, by_axis[ax]))  # placeholder; fixed below
         by_axis[ax].append(i)
-    return tuple((ax, tuple(idxs) if isinstance(idxs, list) else idxs)
+
+    def batched_first(idxs):
+        return tuple(sorted(
+            idxs,
+            key=lambda i: getattr(stages[i], "kind", "")
+            != "batched_allreduce"))
+
+    return tuple((ax, batched_first(idxs) if isinstance(idxs, list)
+                  else idxs)
                  for ax, idxs in groups)
 
 

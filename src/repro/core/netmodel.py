@@ -295,6 +295,48 @@ def ring_all_gather_time(n: int, m: int, p: NetParams = PAPER) -> float:
     return (n - 1) * ((m / n) / p.bw + hop)
 
 
+def batched_ring_times(n: int, sizes, p: NetParams = PAPER, *,
+                       latency_optimal: bool = False
+                       ) -> tuple[float, float]:
+    """(separate, batched) wall time of k same-axis ring all-reduces.
+
+    ``separate`` launches one ring per payload — k full hop walks;
+    ``batched`` is ONE ring over the stacked payload (the Coalesce
+    ``batch_rings`` rewrite), paying the walk once.  The gap is the
+    launch amortization: ``(k-1) · hops · (fpga_link + port)`` plus the
+    per-launch bandwidth remainder of ragged chunking.
+    """
+    sizes = [float(m) for m in sizes]
+    separate = sum(ring_allreduce_time(n, m, p,
+                                       latency_optimal=latency_optimal)
+                   for m in sizes)
+    batched = ring_allreduce_time(n, sum(sizes), p,
+                                  latency_optimal=latency_optimal)
+    return separate, batched
+
+
+def bucketed_collective_times(kind: str, n: int, sizes,
+                              p: NetParams = PAPER) -> tuple[float, float]:
+    """(separate, bucketed) wall time of k same-axis RS or AG leaves.
+
+    ``kind`` ∈ {"reduce_scatter", "allgather"}.  The Coalesce RS/AG
+    bucket runs one collective over the concatenated payload; like the
+    allreduce buckets, the saving is the k-1 amortized hop walks.  For
+    AG, ``sizes`` are per-rank *input* shard bytes (the model's AG kind
+    convention: the gathered payload is ``n · m``).
+    """
+    sizes = [float(m) for m in sizes]
+    if kind == "reduce_scatter":
+        sep = sum(ring_reduce_scatter_time(n, m, p) for m in sizes)
+        tot = ring_reduce_scatter_time(n, sum(sizes), p)
+    elif kind == "allgather":
+        sep = sum(ring_all_gather_time(n, n * m, p) for m in sizes)
+        tot = ring_all_gather_time(n, n * sum(sizes), p)
+    else:
+        raise ValueError(f"bucketed_collective_times: unknown {kind!r}")
+    return sep, tot
+
+
 def hierarchical_allreduce_time(d: int, pods: int, m: int, *,
                                 inner: NetParams = ICI,
                                 outer: NetParams = DCI) -> float:
@@ -401,7 +443,10 @@ def stage_time(kind: str, n: int, m: int, p: NetParams = PAPER, *,
     if kind == "map":
         return host_fallback_time(m, p) if fallback \
             else m / accel_rate(p, pl)
-    if kind in ("allreduce", "map+allreduce"):
+    if kind in ("allreduce", "map+allreduce", "batched_allreduce"):
+        # a batched_allreduce IS one ring over the stacked payload — the
+        # amortization (k-1 launch walks saved) is already in m being the
+        # sum of the merged payloads
         if fallback:
             return host_fallback_time(m, p) + mpi_allreduce(n, wire, p)
         return ring_allreduce_time(n, wire, p, latency_optimal=lat,
@@ -533,7 +578,7 @@ def stage_time_terms(kind: str, n: int, m: int, *, schedule: str = "",
 
     if kind == "map":
         return host() if fallback else T(compute_bytes=m)
-    if kind in ("allreduce", "map+allreduce"):
+    if kind in ("allreduce", "map+allreduce", "batched_allreduce"):
         if fallback:
             return host() + mpi_ar(wire)
         if n <= 1:

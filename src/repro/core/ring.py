@@ -65,11 +65,21 @@ def _dyn_chunk(xs: jax.Array, idx: jax.Array) -> jax.Array:
     return lax.dynamic_index_in_dim(xs, idx, axis=0, keepdims=False)
 
 
-def pad_to_multiple(x: jax.Array, n: int, fill=0) -> tuple[jax.Array, int]:
-    """Pad flat array to a multiple of ``n``; returns (padded, original_len)."""
+def pad_to_multiple(
+    x: jax.Array, n: int, fill=0, *, monoid: Optional[Monoid] = None,
+) -> tuple[jax.Array, int]:
+    """Pad flat array to a multiple of ``n``; returns (padded, original_len).
+
+    ``monoid`` overrides ``fill`` with the monoid's identity element so the
+    pad lanes are invisible to per-hop combines (a literal ``0`` corrupts
+    non-add monoids: ``min`` over zeros clamps negative data, ``prod``
+    annihilates).
+    """
     size = x.shape[0]
     rem = (-size) % n
     if rem:
+        if monoid is not None:
+            fill = monoid.identity(jax.ShapeDtypeStruct((), x.dtype))
         x = jnp.concatenate([x, jnp.full((rem,) + x.shape[1:], fill, x.dtype)])
     return x, size
 
@@ -193,7 +203,7 @@ def ring_all_reduce(
 
     shape = x.shape
     flat = x.reshape(-1)
-    padded, size = pad_to_multiple(flat, n)
+    padded, size = pad_to_multiple(flat, n, monoid=monoid)
     red = ring_reduce_scatter(padded, axis_name, monoid, hop_combine=hop_combine)
     full = ring_all_gather(red, axis_name)
     return full[:size].reshape(shape)

@@ -72,6 +72,15 @@ def _ref_scatter_accum(dense, idx, vals):
 register("topk_accumulate", _ref_scatter_accum)
 
 
+def _ref_pack_combine(arena, *parts, op=None):
+    from repro.kernels import ref
+
+    return ref.pack_combine(arena, *parts, op=op)
+
+
+register("pack_combine", _ref_pack_combine)
+
+
 def load_kernels() -> None:
     """Bind the Pallas kernels onto the registry (idempotent)."""
     from repro.kernels import ops as kops  # local import: keep core light
@@ -82,3 +91,4 @@ def load_kernels() -> None:
     attach_kernel("mac", kops.combine_mac)
     attach_kernel("prefix_sum", kops.prefix_sum)
     attach_kernel("topk_accumulate", kops.topk_accumulate)
+    attach_kernel("pack_combine", kops.pack_combine)

@@ -8,19 +8,25 @@ signature-compatible implementation of its `repro.kernels.ref` oracle.
 
 from __future__ import annotations
 
-import functools
+import os
 
 import jax
 
 from repro.kernels import fused_combine as _fc
+from repro.kernels import pack_combine as _pc
 from repro.kernels import quant_combine as _qc
 from repro.kernels import topk_accum as _ta
 from repro.kernels import chunk_scan as _cs
 from repro.kernels import rwkv6_recurrence as _rw
 
 
-@functools.cache
 def _interpret_default() -> bool:
+    # Re-checked per call: the active backend can change after import
+    # (tests force JAX_PLATFORMS), so caching the first answer is wrong.
+    # ACIS_KERNEL_INTERPRET=0/1 overrides the backend heuristic.
+    env = os.environ.get("ACIS_KERNEL_INTERPRET")
+    if env is not None and env != "":
+        return env not in ("0", "false", "False")
     return jax.default_backend() != "tpu"
 
 
@@ -39,6 +45,11 @@ def combine_min(x, y):
 def combine_mac(acc, x, alpha: float = 1.0):
     return _fc.fused_combine(acc, x, op="mac", alpha=float(alpha),
                              interpret=_interpret_default())
+
+
+def pack_combine(arena, *parts, op=None):
+    return _pc.fused_pack(arena, *parts, op=op,
+                          interpret=_interpret_default())
 
 
 def quant_combine(qa, sa, qb, sb):

@@ -1,0 +1,79 @@
+"""Fused bucket pack (+ optional combine) writing in place into an arena.
+
+The Coalesce pass packs N gradient leaves into one flat bucket before the
+ring collective; the emitted default path is one ``dynamic_update_slice``
+per leaf — N small XLA kernels and a full copy of the arena per leaf at
+worst.  This kernel lowers the whole pack to **one** Pallas launch whose
+output aliases the arena input (``input_output_aliases={0: 0}``): with the
+arena donated at the jit boundary the leaves land in place, no transient.
+
+``op`` additionally fuses the per-hop combine into the same launch
+(``arena[seg] = combine(arena[seg], leaf)``) — the pack+combine round trip
+of a ring hop (combine → copy → slice) collapses to one kernel.
+
+Leaf sizes and segment offsets are static (they come from the compile-time
+avals), so the kernel body uses static slices — Mosaic-compilable on TPU,
+validated in interpret mode on CPU (see ``kernels/ops._interpret_default``).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_COMBINE = {
+    "add": jnp.add,
+    "max": jnp.maximum,
+    "min": jnp.minimum,
+}
+
+
+def _pack_kernel(a_ref, *refs, sizes, op):
+    p_refs, o_ref = refs[:-1], refs[-1]
+    # carry the arena through: lanes outside the packed segments (a bucket
+    # padded past sum(sizes)) must survive the aliased write
+    o_ref[...] = a_ref[...]
+    off = 0
+    for p, s in zip(p_refs, sizes):
+        x = p[...].astype(o_ref.dtype)
+        if op is not None:
+            x = _COMBINE[op](a_ref[off:off + s], x)
+        o_ref[off:off + s] = x
+        off += s
+
+
+@functools.partial(jax.jit, static_argnames=("op", "interpret"))
+def fused_pack(arena: jax.Array, *parts: jax.Array,
+               op: Optional[str] = None,
+               interpret: bool = True) -> jax.Array:
+    """Write ``parts`` (flat, pre-cast to the arena dtype) into ``arena``
+    back to back, in one Pallas launch aliased onto the arena buffer.
+
+    ``op=None`` is the pure pack; ``op in {"add", "max", "min"}`` combines
+    each part into the arena's current segment contents instead (the fused
+    pack+combine hop).  Returns the updated arena.
+    """
+    if not parts:
+        return arena
+    sizes = tuple(int(p.shape[0]) for p in parts)
+    if sum(sizes) > arena.shape[0]:
+        raise ValueError(
+            f"pack of {sum(sizes)} elements overflows arena of "
+            f"{arena.shape[0]}")
+    kern = functools.partial(_pack_kernel, sizes=sizes, op=op)
+    return pl.pallas_call(
+        kern,
+        out_shape=jax.ShapeDtypeStruct(arena.shape, arena.dtype),
+        input_output_aliases={0: 0},
+        interpret=interpret,
+    )(arena, *parts)
+
+
+def pack_parts(xs: Sequence[jax.Array], dtype) -> list[jax.Array]:
+    """Flatten + cast leaves to the arena's flat dtype (the pre-kernel
+    normalization both the kernel and its oracle share)."""
+    return [x.reshape(-1).astype(dtype) for x in xs]

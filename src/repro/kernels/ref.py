@@ -32,6 +32,33 @@ def combine_mac(acc: jax.Array, x: jax.Array, alpha: float = 1.0) -> jax.Array:
 
 
 # ---------------------------------------------------------------------------
+# pack_combine — bucket pack (+ optional combine) into a flat arena
+# ---------------------------------------------------------------------------
+
+_PACK_COMBINE = {
+    "add": lambda a, b: a + b,
+    "max": jnp.maximum,
+    "min": jnp.minimum,
+}
+
+
+def pack_combine(arena: jax.Array, *parts: jax.Array,
+                 op: str | None = None) -> jax.Array:
+    """Write flat ``parts`` back to back into ``arena``; with ``op`` set,
+    combine each part into the arena's current segment instead."""
+    off = 0
+    for p in parts:
+        p = p.reshape(-1).astype(arena.dtype)
+        s = p.shape[0]
+        if op is not None:
+            p = _PACK_COMBINE[op](jax.lax.dynamic_slice(arena, (off,), (s,)),
+                                  p)
+        arena = jax.lax.dynamic_update_slice(arena, p, (off,))
+        off += s
+    return arena
+
+
+# ---------------------------------------------------------------------------
 # quant_combine — encoded-domain int8 combine (dequant-add-requant)
 # ---------------------------------------------------------------------------
 

@@ -38,7 +38,8 @@ DB_ENV_VAR = "ACIS_TUNE_DB"
 # the CollectiveConfig fields the tuner varies — exactly the fields the
 # compiled-program cache keys must include (api.CollectiveConfig.cache_key)
 TUNABLE_FIELDS = ("bucket_bytes", "latency_optimal_below",
-                  "overlap_dispatch", "epilogue_hoist")
+                  "overlap_dispatch", "epilogue_hoist",
+                  "use_kernels", "batch_rings", "batch_rings_bytes")
 
 # candidate values per field; None in bucket_bytes = the netmodel-derived
 # default, 0 = bucketing off.  Coordinate descent keeps evaluations at
@@ -48,6 +49,13 @@ DEFAULT_SPACE = {
     "latency_optimal_below": (0, 16384, 1 << 17),
     "overlap_dispatch": (True, False),
     "epilogue_hoist": (True, False),
+    # Pallas bulk data path: fused pack+combine kernels on/off, and
+    # merging a wave's same-axis rings into one batched launch.  The
+    # bytes knob bounds which members merge: None = compiler default
+    # per-member cap, 0 = merge everything regardless of size.
+    "use_kernels": (False, True),
+    "batch_rings": (False, True),
+    "batch_rings_bytes": (None, 1 << 18, 0),
 }
 
 # incremented per executed search — how the tests assert a DB hit did
