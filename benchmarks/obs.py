@@ -1,0 +1,236 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+# match benchmarks.run — process-local, nothing shared with tests
+
+"""Observability benchmark: instrumentation cost + watchdog precision.
+
+Three gated bounds and one recorded trajectory:
+
+  * ``obs_instrument_overhead_frac`` — eager wall-clock of an
+    instrumented run with recording *enabled* (spans + metrics emitted
+    per stage) vs the same instrumented run against the null recorder,
+    folded at the 5% acceptance floor: a passing run records exactly
+    0.05, so the ratio is deterministic and the CI gate (25% tolerance)
+    fails only when real emission overhead creeps past ~6%.  The cost
+    of per-stage timing itself (the hook's ``block_until_ready``
+    forfeits eager pipelining — inherent to the measurement, workload-
+    dependent) is recorded separately, ungated, as
+    ``jax_obs_instrument_block_us``.
+  * ``obs_disabled_overhead_frac`` — the null-recorder cost: per-stage
+    emission calls against the disabled default recorder, expressed as a
+    fraction of a measured stage time and folded at 0.02 ("no measurable
+    cost with recording off").
+  * ``obs_drift_watchdog`` — the watchdog's symmetric drift reading on a
+    x2-link-perturbed simulator (deterministic sim-vs-model math), with
+    ``speedup=`` carrying detection precision: 1.0 means the perturbed
+    run was flagged AND the unperturbed self-replay stayed quiet.
+  * ``jax_obs_timeline_export_sync64`` — Perfetto export wall-clock for
+    the 64-leaf ragged sync trace (``jax_`` prefix: recorded, ungated).
+
+``write_trace`` dumps that same 64-leaf sync timeline as
+``BENCH_sync64.trace.json`` — the loadable artifact CI uploads next to
+the ``BENCH_*.json`` trajectories.
+"""
+
+import dataclasses
+import time
+import timeit
+
+import numpy as np
+
+from benchmarks.execplan import _ragged_sizes, _sync_program
+
+TRACE_PATH = "BENCH_sync64.trace.json"
+
+# acceptance floors (ISSUE 8): measured fractions below the floor fold
+# to it, so passing runs are deterministic and the 25%-tolerance gate
+# trips only on real cost creep
+INSTRUMENT_FLOOR = 0.05
+DISABLED_FLOOR = 0.02
+
+
+def _eager_workload():
+    """An axis-less multi-stage map pipeline the executor can run eagerly
+    (collectives need shard_map; instrumented mode is eager-only)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import make_engine, tracing
+
+    n_leaves, n_elems = 8, 1 << 16
+
+    def prog(*xs):
+        outs = []
+        for i, x in enumerate(xs):
+            y = tracing.map(lambda v: v * 1.0001 + 1.0, x,
+                            name=f"scale{i}")
+            outs.append(tracing.map(jnp.tanh, y, name=f"act{i}"))
+        return tuple(outs)
+
+    eng = make_engine("acis")
+    avals = (jax.ShapeDtypeStruct((n_elems,), jnp.float32),) * n_leaves
+    dag = tracing.trace(prog, num_inputs=n_leaves, name="obs_eager")
+    compiled = eng.compile(dag, in_avals=avals)
+    rng = np.random.default_rng(0)
+    xs = [jnp.asarray(rng.standard_normal(n_elems).astype(np.float32))
+          for _ in range(n_leaves)]
+    return compiled, xs
+
+
+def _fold(frac: float, floor: float) -> float:
+    return max(float(frac), floor)
+
+
+def overhead_rows() -> list[tuple]:
+    """Instrumented vs plain eager wall-clock, and the null-recorder
+    emission cost — both folded at their acceptance floors."""
+    import jax
+
+    from repro import obs, tune
+    from repro.obs import metrics as _metrics
+
+    compiled, xs = _eager_workload()
+
+    def plain():
+        jax.block_until_ready(compiled(*xs))
+
+    def instrumented():
+        jax.block_until_ready(compiled(*xs, instrument=[]))
+
+    def recorded():
+        with obs.recording():
+            jax.block_until_ready(compiled(*xs, instrument=[]))
+
+    meds = tune.interleaved_medians(
+        {"plain": plain, "instr": instrumented, "rec": recorded},
+        iters=9, warmup=2)
+    frac = _fold(meds["rec"] / meds["instr"] - 1.0, INSTRUMENT_FLOOR)
+
+    # disabled-path cost: the per-stage emission calls against the null
+    # recorder, relative to a measured stage time
+    records: list = []
+    compiled(*xs, instrument=records)
+    stage_s = max(np.mean([s.duration for s in records]), 1e-9)
+    n_calls = 10000
+    per_call = timeit.timeit(
+        lambda: _metrics.RECORDER.count("bench.disabled"), number=n_calls
+    ) / n_calls
+    assert not _metrics.RECORDER.enabled      # measuring the null path
+    disabled = _fold(2.0 * per_call / stage_s, DISABLED_FLOOR)
+
+    return [
+        ("obs_instrument_overhead_frac", frac,
+         f"instr_us={meds['instr'] * 1e6:.1f}"
+         f",rec_us={meds['rec'] * 1e6:.1f}"
+         f",stages={len(records)},floor={INSTRUMENT_FLOOR}"),
+        ("obs_disabled_overhead_frac", disabled,
+         f"percall_ns={per_call * 1e9:.1f}"
+         f",stage_us={stage_s * 1e6:.1f},floor={DISABLED_FLOOR}"),
+        ("jax_obs_instrument_block_us",
+         max(meds["instr"] - meds["plain"], 0.0) * 1e6,
+         f"plain_us={meds['plain'] * 1e6:.1f}"
+         f",instr_us={meds['instr'] * 1e6:.1f}"),
+    ]
+
+
+def _sync64(axis: int = 4):
+    from repro.core import make_engine
+
+    sizes = _ragged_sizes()
+    compiled = _sync_program(sizes, make_engine("acis"), {"data": axis})
+    rng = np.random.default_rng(0)
+    ins = [rng.standard_normal((axis, s)).astype(np.float32)
+           for s in sizes]
+    return compiled, ins
+
+
+def _record_sync64(compiled, ins, *, perturb: bool = False):
+    from repro import tune
+    from repro.cgra.simulate import SwitchSim
+
+    sim = SwitchSim(compiled.topology)
+    if perturb:
+        net = sim.nets["data"]
+        sim.nets["data"] = dataclasses.replace(
+            net, bw=net.bw * 0.5, fpga_link=net.fpga_link * 2.0)
+    _, trace, report = tune.record_sim(compiled, sim, *ins)
+    return trace, report
+
+
+def timeline_rows() -> list[tuple]:
+    """Perfetto export wall-clock on the 64-leaf ragged sync trace."""
+    from repro import obs
+
+    compiled, ins = _sync64()
+    trace, _ = _record_sync64(compiled, ins)
+    t0 = time.perf_counter()
+    out = obs.chrome_trace(trace, compiled.plan)
+    dt = time.perf_counter() - t0
+    return [("jax_obs_timeline_export_sync64", dt * 1e6,
+             f"events={len(out['traceEvents'])}"
+             f",stages={len(trace.stages)}")]
+
+
+def drift_rows() -> list[tuple]:
+    """Watchdog precision on deterministic simulator runs: the perturbed
+    sim must be flagged, the faithful self-replay must not."""
+    from repro.obs.drift import DriftWatchdog
+
+    compiled, ins = _sync64()
+
+    quiet = DriftWatchdog()
+    loud = DriftWatchdog()
+    for _ in range(2):
+        trace, _ = _record_sync64(compiled, ins)
+        quiet.observe(compiled.plan, compiled.topology, trace)
+        bad, _ = _record_sync64(compiled, ins, perturb=True)
+        loud.observe(compiled.plan, compiled.topology, bad)
+
+    false_alarms = len(quiet.alerts())
+    hits = loud.alerts()
+    precision = 1.0 if hits and not false_alarms else 0.0
+    drift = hits[0].drift if hits else 1.0
+    return [("obs_drift_watchdog", drift,
+             f"speedup={precision:.4f}"
+             f",flagged={len(hits)},false_alarms={false_alarms}"
+             f",worst_ratio={hits[0].ratio:.3f}" if hits else
+             f"speedup={precision:.4f},flagged=0"
+             f",false_alarms={false_alarms}")]
+
+
+def rows() -> list[tuple]:
+    return overhead_rows() + timeline_rows() + drift_rows()
+
+
+def record(computed_rows: list | None = None) -> dict:
+    """BENCH_obs.json payload: every row's value, plus ``name.speedup``
+    for rows carrying one (the drift-precision gate) — same shape
+    ``check_regression.py`` consumes."""
+    out: dict = {}
+    for name, val, derived in (computed_rows if computed_rows is not None
+                               else rows()):
+        out[name] = round(float(val), 6)
+        for part in str(derived).split(","):
+            k, _, v = part.partition("=")
+            if k == "speedup":
+                try:
+                    out[f"{name}.speedup"] = round(float(v), 4)
+                except ValueError:
+                    pass
+    return out
+
+
+def write_trace(path: str = TRACE_PATH) -> str:
+    """The 64-leaf sync Perfetto timeline, written as the CI artifact."""
+    from repro import obs
+
+    compiled, ins = _sync64()
+    trace, _ = _record_sync64(compiled, ins)
+    return obs.timeline.save(path, trace, compiled.plan)
+
+
+if __name__ == "__main__":
+    print("name,value,derived")
+    for name, val, derived in rows():
+        print(f"{name},{val},{derived}")
+    print(write_trace())

@@ -12,9 +12,11 @@ rows (per-figure means + the real-JAX engine measurements); ``--full``
 additionally dumps every (collective × nodes × size) emulator point.
 ``--json`` additionally writes ``BENCH_netmodel.json`` (name →
 us_per_call), ``BENCH_cgra.json`` (per-benchmark simulated vs
-analytic switch latency from the dataplane simulator) and
-``BENCH_tune.json`` (autotuning-loop fidelity + search outcome) so CI
-can record the trajectories as artifacts.
+analytic switch latency from the dataplane simulator),
+``BENCH_tune.json`` (autotuning-loop fidelity + search outcome),
+``BENCH_obs.json`` (instrumentation overhead + drift-watchdog
+precision) and ``BENCH_sync64.trace.json`` (the 64-leaf sync Perfetto
+timeline) so CI can record the trajectories as artifacts.
 """
 
 import json
@@ -23,6 +25,7 @@ import sys
 JSON_PATH = "BENCH_netmodel.json"
 CGRA_JSON_PATH = "BENCH_cgra.json"
 TUNE_JSON_PATH = "BENCH_tune.json"
+OBS_JSON_PATH = "BENCH_obs.json"
 
 
 def main() -> None:
@@ -78,6 +81,12 @@ def main() -> None:
     tune_rows = tune.rows()
     rows += tune_rows
 
+    # observability: instrumentation overhead bounds, timeline export,
+    # drift-watchdog precision
+    from benchmarks import obs
+    obs_rows = obs.rows()
+    rows += obs_rows
+
     print("name,us_per_call,derived")
     for name, us, derived in rows:
         print(f"{name},{us:.2f},{derived}")
@@ -118,6 +127,15 @@ def main() -> None:
             json.dump(tune.record(tune_rows), f, indent=2, sort_keys=True)
             f.write("\n")
         print(f"wrote {TUNE_JSON_PATH}", file=sys.stderr)
+
+        with open(OBS_JSON_PATH, "w") as f:
+            json.dump(obs.record(obs_rows), f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"wrote {OBS_JSON_PATH}", file=sys.stderr)
+
+        # the Perfetto-loadable timeline of the 64-leaf sync, uploaded
+        # next to the BENCH_*.json trajectories
+        print(f"wrote {obs.write_trace()}", file=sys.stderr)
 
 
 if __name__ == "__main__":

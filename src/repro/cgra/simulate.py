@@ -43,6 +43,7 @@ import numpy as np
 
 from repro.cgra.device import HostFallback, PAPER_CGRA
 from repro.core import netmodel
+from repro.obs import metrics as _obs
 from repro.core.program import OpKind
 from repro.core.wire import IDENTITY, int8_codec
 
@@ -294,6 +295,10 @@ class SwitchSim:
             t_prog = netmodel.program_time(plan, topo)
         report = SimReport([rows[i] for i in sorted(rows)],
                            dict(self.sizes), float(clock.max()), t_prog)
+        rec = _obs.RECORDER
+        if rec.enabled:
+            rec.count("sim.runs")
+            rec.count("sim.stages", len(report.stages))
         return (outs[0] if len(outs) == 1 else outs), report
 
     # -- per-stage analytic prediction --------------------------------------

@@ -42,6 +42,7 @@ from jax import lax
 from repro.core import collectives, compiler, tracing
 from repro.core.lookaside import init_residual
 from repro.core.types import ADD
+from repro.obs import metrics as _obs
 
 PyTree = Any
 
@@ -264,6 +265,9 @@ class CollectiveEngine:
         if self.compressed:
             args = args + tuple(treedef.flatten_up_to(state))
         if arenas is not None:
+            # the donation round-trip: buffers out through the step's
+            # state, back in on the next sync
+            _obs.RECORDER.count("arena.roundtrip")
             outs, new_arenas = compiled(*args, arenas=tuple(arenas))
         else:
             outs, new_arenas = compiled(*args), None
@@ -303,14 +307,17 @@ class CollectiveEngine:
         # producing different bucket layouts for the same pytree — e.g.
         # tuned vs default bucket_bytes — must not share arenas
         hit = self._arena_cache.get(compiled)
+        fresh_reason = "arena.alloc" if hit is None else None
         if hit is not None and any(
                 getattr(a, "is_deleted", lambda: False)() for a in hit):
             # a donating caller consumed the cached buffers (the step
             # owns the live ones as state now) — hand out fresh arenas
             # instead of deleted arrays
-            hit = None
+            hit, fresh_reason = None, "arena.realloc"
         if hit is None:
             hit = self._arena_cache[compiled] = compiled.make_arenas()
+            if hit is not None:
+                _obs.RECORDER.count(fresh_reason)
         return hit
 
     def _sync_program(self, treedef, avals: tuple,
@@ -347,8 +354,10 @@ class CollectiveEngine:
         key = key0 + (cfg_eff.cache_key(),)
         hit = self._sync_cache.get(key)
         if hit is not None:
+            _obs.RECORDER.count("compile.cache_hit")
             self._last_sync = hit
             return hit
+        _obs.RECORDER.count("compile.cache_miss")
         compiled = self._build_sync(cfg_eff, avals, n_total, sizes)
         self._sync_cache[key] = compiled
         self._last_sync = compiled

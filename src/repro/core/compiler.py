@@ -75,6 +75,7 @@ from repro.core.program import (AUTO_AXIS, COLLECTIVE_KINDS, DagNode,
 from repro.core.tracing import trace
 from repro.core.types import ADD
 from repro.core.wire import IDENTITY, resolve_codec
+from repro.obs import metrics as _obs
 
 PyTree = Any
 ProgramLike = Union[DagProgram, SwitchProgram, Callable]
@@ -359,12 +360,18 @@ class CompiledProgram:
         which wire codec, and where the compute body landed (CGRA
         placement or explicit host fallback).
 
-        With ``trace`` (a :class:`repro.tune.trace.ProgramTrace` — or
-        anything with a ``stages`` list of records carrying ``stage`` and
-        ``duration``), three more columns compare the recording against
-        the analytic model — measured µs, model µs and their ratio — and
-        a footer summarizes the mispredict ratio over the priced stages.
+        With ``trace`` (a :class:`repro.tune.trace.ProgramTrace`, an
+        :class:`repro.obs.report.RunReport`, or anything with a
+        ``stages`` list of records carrying ``stage`` and ``duration``),
+        three more columns compare the recording against the analytic
+        model — measured µs, model µs and their ratio — and a footer
+        summarizes the mispredict ratio over the priced stages.  Without
+        a recording the footer says so explicitly instead of silently
+        omitting the columns.
         """
+        if trace is not None and not hasattr(trace, "stages") \
+                and hasattr(trace, "trace"):
+            trace = trace.trace        # a RunReport: unwrap its trace
         wave_of = {i: w for w, grp in enumerate(self.plan.waves)
                    for i in grp}
         measured: dict[int, float] = {}
@@ -423,6 +430,15 @@ class CompiledProgram:
                 f"  mispredict ratio (meas/model): mean x{mean:.2f}, "
                 f"worst x{worst[0]:.2f} @ stage {worst[1]} "
                 f"({len(ratios)}/{len(self.stages)} stages priced)")
+        elif trace is not None:
+            lines.append(
+                "  mispredict ratio: no stages priced — the recording's "
+                "stage indices don't match this plan")
+        else:
+            lines.append(
+                "  (no recording attached — pass trace= a repro.tune "
+                "ProgramTrace or repro.obs RunReport to add "
+                "measured-vs-model columns)")
         return "\n".join(lines)
 
     def program_time(self, topology: Optional[Topology] = None) -> float:
@@ -1222,6 +1238,8 @@ class Coalesce:
                     nonlocal cur, cur_bytes, cur_outs
                     if len(cur) >= 2:
                         buckets.append(cur)
+                        _obs.RECORDER.observe("coalesce.bucket_fill_frac",
+                                              cur_bytes / cap)
                     cur, cur_bytes, cur_outs = [], 0, set()
 
                 for u in pending:       # definition order throughout
@@ -2309,6 +2327,10 @@ class Emit:
                 st = dataclasses.replace(st, arena_slot=n_arenas)
                 n_arenas += 1
             stages.append(st)
+        if stages:
+            _obs.RECORDER.count(
+                "emit.kernel_stage" if _use_kernels(ctx)
+                else "emit.reference_stage", len(stages))
         return stages
 
     def _emit(self, g: StageIR, ctx: CompileContext) -> Stage:
@@ -2560,9 +2582,23 @@ def compile_rank_local(
                          config=config, in_avals=in_avals,
                          topology=topology)
     stages, final_dag = run_pipeline(dag, ctx, pipeline)
-    return CompiledProgram(stages, final_dag, topology=ctx.topology,
-                           overlap=getattr(config, "overlap_dispatch",
-                                           True))
+    out = CompiledProgram(stages, final_dag, topology=ctx.topology,
+                          overlap=getattr(config, "overlap_dispatch",
+                                          True))
+    rec = _obs.RECORDER
+    if rec.enabled:
+        rec.count("compile.programs")
+        for st in stages:
+            nb = getattr(st.ir, "bytes_in", None) if st.ir is not None \
+                else None
+            if nb:
+                rec.observe("plan.stage_bytes", float(nb))
+            if st.placement is not None:
+                rec.count("cgra.placed" if st.placement.fits
+                          else "cgra.host_fallback")
+        for grp in out.plan.waves:
+            rec.observe("plan.wave_width", float(len(grp)))
+    return out
 
 
 def compile_program(

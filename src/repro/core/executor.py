@@ -54,6 +54,9 @@ from __future__ import annotations
 import dataclasses
 from typing import Any, Optional, Sequence
 
+from repro.obs import metrics as _metrics
+from repro.obs import spans as _spans
+
 PyTree = Any
 
 
@@ -249,9 +252,11 @@ def execute(plan: ExecutionPlan, args: Sequence[PyTree], *,
     next call; otherwise returns just the output tuple.
 
     ``instrument`` is the stage-trace recorder hook: a list that receives
-    one record dict per executed stage (``stage``/``kind``/``axis``/
-    ``wave`` plus ``t_start``/``t_end`` ``perf_counter`` timestamps taken
-    around a ``block_until_ready`` on the stage's outputs).  Only
+    one :class:`repro.obs.spans.StageSpan` per executed stage — the
+    shared stage-record schema (= ``repro.tune.trace.StageTrace``), with
+    ``t_start``/``t_end`` ``perf_counter`` timestamps taken around a
+    ``block_until_ready`` on the stage's outputs and the stage's payload
+    bytes / placement already attached.  Only
     meaningful when the plan runs eagerly — under ``jit``/``shard_map``
     tracing the timestamps measure trace time, not run time; use the
     interleaved harness in :mod:`repro.tune.trace` for jitted programs.
@@ -281,10 +286,13 @@ def execute(plan: ExecutionPlan, args: Sequence[PyTree], *,
             outs = st.run(ins, st.axis)
         if instrument is not None:
             jax.block_until_ready(outs)
-            instrument.append({
-                "stage": i, "kind": st.kind, "axis": st.axis,
-                "wave": wave_of.get(i, 0), "schedule": st.schedule,
-                "t_start": t0, "t_end": time.perf_counter()})
+            span = _spans.from_stage(st, i, wave_of.get(i, 0), t0,
+                                     time.perf_counter())
+            instrument.append(span)
+            rec = _metrics.RECORDER
+            if rec.enabled:
+                rec.count("exec.instrumented_stages")
+                rec.observe("exec.stage_s", span.duration)
         for vid, o in zip(st.out_vids, outs):
             env[vid] = o
         return outs

@@ -1,0 +1,197 @@
+"""Model-drift watchdog: measured vs ``plan_stage_time``, online.
+
+The paper's software loop is evaluate → map → refine (§V): the analytic
+network model plans, recordings evaluate, and when the two diverge the
+model must be *re-fitted* from the recordings (:mod:`repro.tune.fit`).
+This module is the tripwire between those phases.
+
+A :class:`DriftWatchdog` consumes recorded stage spans (simulator or
+instrumented executor — the shared :class:`~repro.obs.spans.StageSpan`
+schema), tracks the geometric-mean measured/model ratio per
+``(kind, axis, schedule, bytes-bucket)`` key, and flags keys whose ratio
+drifts past a threshold in either direction.  When any key is flagged it
+emits a ``drift.refit_recommended`` event into the metrics recorder and
+:meth:`DriftWatchdog.refit` hands the accumulated samples straight to
+:func:`repro.tune.fit.fit_traces` — closing the loop.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Sequence
+
+from repro.obs import metrics as _metrics
+
+# a key must accumulate this many priced samples before it can fire —
+# one noisy stage is a measurement, not a drift
+DEFAULT_MIN_SAMPLES = 2
+DEFAULT_THRESHOLD = 1.5
+
+
+def bytes_bucket(nbytes: Optional[int]) -> int:
+    """Log2 size bucket (0 for unknown payloads): stages within one
+    bucket share a bandwidth regime, so their ratios pool."""
+    if not nbytes or nbytes <= 0:
+        return 0
+    return max(int(nbytes).bit_length(), 1)
+
+
+@dataclasses.dataclass(frozen=True)
+class DriftAlert:
+    """One drifted key: the pooled ratio and how far past threshold."""
+
+    kind: str
+    axis: str
+    schedule: str
+    bucket: int                    # log2 bytes bucket
+    ratio: float                   # geometric-mean measured/model
+    n: int                         # samples pooled
+
+    @property
+    def drift(self) -> float:
+        """Symmetric drift magnitude: ``max(ratio, 1/ratio)``."""
+        return max(self.ratio, 1.0 / self.ratio)
+
+    def describe(self) -> str:
+        return (f"{self.kind}@{self.axis or '-'}"
+                f"[{self.schedule or '-'}, ~2^{self.bucket}B]: "
+                f"meas/model x{self.ratio:.2f} over {self.n} stages")
+
+
+@dataclasses.dataclass
+class _Cell:
+    log_sum: float = 0.0
+    n: int = 0
+
+    @property
+    def ratio(self) -> float:
+        return math.exp(self.log_sum / self.n) if self.n else 1.0
+
+
+class DriftWatchdog:
+    """Online measured-vs-model ratio tracking over recorded runs.
+
+    ``threshold`` is symmetric: a key fires when its pooled ratio leaves
+    ``[1/threshold, threshold]`` with at least ``min_samples`` samples.
+    ``recorder`` defaults to the process recorder at call time, so the
+    watchdog's counters/events land wherever the run's telemetry does.
+    """
+
+    def __init__(self, threshold: float = DEFAULT_THRESHOLD,
+                 min_samples: int = DEFAULT_MIN_SAMPLES,
+                 recorder: Optional[_metrics.Recorder] = None):
+        if threshold <= 1.0:
+            raise ValueError(f"threshold must be > 1, got {threshold}")
+        self.threshold = float(threshold)
+        self.min_samples = int(min_samples)
+        self._recorder = recorder
+        self._cells: dict[tuple, _Cell] = {}
+        self._samples: list[tuple] = []    # (plan, topo, trace) for refit
+
+    def _rec(self) -> _metrics.Recorder:
+        return self._recorder if self._recorder is not None \
+            else _metrics.RECORDER
+
+    # -- accumulation --------------------------------------------------------
+
+    def observe(self, plan, topo, trace) -> int:
+        """Fold one recorded run in; returns the number of priced spans.
+
+        ``trace`` is a :class:`~repro.tune.trace.ProgramTrace` (or a bare
+        span sequence) recorded from ``plan``; spans whose stage index or
+        kind doesn't match the plan, or whose payload the model cannot
+        price, are skipped — cost what the model can see.
+        """
+        from repro.core import netmodel
+
+        rec = self._rec()
+        spans = getattr(trace, "stages", trace)
+        priced = 0
+        for ts in spans:
+            i = getattr(ts, "stage", -1)
+            if not 0 <= i < len(plan.stages):
+                continue
+            st = plan.stages[i]
+            if getattr(st, "kind", "") != ts.kind:
+                continue
+            model = netmodel.plan_stage_time(st, topo)
+            meas = ts.duration
+            if not model or meas <= 0.0:
+                continue
+            key = (ts.kind, ts.axis, ts.schedule,
+                   bytes_bucket(getattr(ts, "bytes", None)))
+            cell = self._cells.setdefault(key, _Cell())
+            cell.log_sum += math.log(meas / model)
+            cell.n += 1
+            priced += 1
+        if priced:
+            self._samples.append((plan, topo, trace))
+            rec.count("drift.observations", priced)
+        return priced
+
+    # -- verdicts ------------------------------------------------------------
+
+    def ratios(self) -> dict[tuple, tuple[float, int]]:
+        """``{key: (geometric-mean ratio, n)}`` for every tracked key."""
+        return {k: (c.ratio, c.n) for k, c in self._cells.items()}
+
+    def alerts(self) -> list[DriftAlert]:
+        """Keys past threshold, worst drift first."""
+        out = []
+        for (kind, axis, schedule, bucket), c in self._cells.items():
+            if c.n < self.min_samples:
+                continue
+            r = c.ratio
+            if max(r, 1.0 / r) > self.threshold:
+                out.append(DriftAlert(kind, axis, schedule, bucket,
+                                      ratio=r, n=c.n))
+        out.sort(key=lambda a: -a.drift)
+        return out
+
+    def refit_recommended(self) -> bool:
+        """True when any key drifted — and says so into the recorder
+        (``drift.flagged`` counts, one ``drift.refit_recommended`` event
+        naming the worst offender)."""
+        alerts = self.alerts()
+        if not alerts:
+            return False
+        rec = self._rec()
+        rec.count("drift.flagged", len(alerts))
+        worst = alerts[0]
+        rec.event("drift.refit_recommended",
+                  worst=worst.describe(), ratio=worst.ratio,
+                  keys=len(alerts), threshold=self.threshold)
+        return True
+
+    def refit(self, samples: Optional[Sequence] = None, **fit_kw):
+        """Run :func:`repro.tune.fit.fit_traces` over the accumulated
+        ``(plan, topo, trace)`` samples (or explicit ones) — the re-fit
+        the watchdog recommends.  Returns the :class:`~repro.tune.fit.
+        NetFit`."""
+        from repro.tune import fit as _fit
+
+        use = list(samples) if samples is not None else list(self._samples)
+        if not use:
+            raise ValueError("no recorded samples to re-fit from")
+        self._rec().count("drift.refits")
+        return _fit.fit_traces(use, **fit_kw)
+
+    def report(self) -> str:
+        """Readable drift table (every key, flagged ones marked)."""
+        lines = [f"drift watchdog: threshold x{self.threshold:.2f}, "
+                 f"{len(self._cells)} keys, "
+                 f"{sum(c.n for c in self._cells.values())} samples"]
+        flagged = {(a.kind, a.axis, a.schedule, a.bucket)
+                   for a in self.alerts()}
+        for key in sorted(self._cells, key=str):
+            kind, axis, schedule, bucket = key
+            c = self._cells[key]
+            mark = " <-- DRIFT" if key in flagged else ""
+            lines.append(
+                f"  {kind}@{axis or '-'}[{schedule or '-'}, "
+                f"~2^{bucket}B]: x{c.ratio:.2f} (n={c.n}){mark}")
+        if flagged:
+            lines.append("  re-fit recommended "
+                         "(repro.tune.fit.fit_traces / watchdog.refit())")
+        return "\n".join(lines)

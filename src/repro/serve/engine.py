@@ -15,6 +15,7 @@ exercised by tests/test_serving.py and examples/serve_batched.py.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Any, Optional
 
 import jax
@@ -22,6 +23,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.model import Model
+from repro.obs import metrics as _obs
 
 PyTree = Any
 
@@ -43,9 +45,12 @@ class Completion:
 
 class ServeEngine:
     def __init__(self, model: Model, params: PyTree, *, slots: int = 4,
-                 max_seq: int = 256):
+                 max_seq: int = 256, recorder: Optional[_obs.Recorder] = None):
         self.model = model
         self.params = params
+        # per-engine recorder; defaults to the process-wide one at call
+        # time (so ``obs.recording()`` around a serving loop just works)
+        self.recorder = recorder
         self.slots = slots
         self.max_seq = max_seq
         self.cache = model.init_cache(slots, max_seq)
@@ -106,10 +111,17 @@ class ServeEngine:
     # -- one engine tick ---------------------------------------------------------
 
     def step(self) -> int:
+        rec = self.recorder if self.recorder is not None else _obs.RECORDER
+        rec.count("serve.ticks")
+        admitted = 0
         for s in range(self.slots):
             if self.rid[s] < 0 and self.queue:
                 self._admit(s, self.queue.pop(0))
+                admitted += 1
+        if admitted:
+            rec.count("serve.admitted", admitted)
         active = np.flatnonzero(self.rid >= 0)
+        rec.gauge("serve.active", int(active.size))
         if active.size == 0:
             return 0
 
@@ -127,11 +139,15 @@ class ServeEngine:
                     else self.prompt[s][-1]
 
         idx = jnp.asarray(self.pos)
+        t0 = time.perf_counter() if rec.enabled else 0.0
         lg, self.cache = self._decode(self.params, jnp.asarray(tok),
                                       self.cache, idx)
-        lg = np.asarray(lg)
+        lg = np.asarray(lg)        # blocks on the decode result
+        if rec.enabled:
+            rec.observe("serve.decode_s", time.perf_counter() - t0)
         self.ticks += 1
 
+        retired = 0
         for s in active:
             self.pos[s] += 1
             if in_prefill[s]:
@@ -145,6 +161,9 @@ class ServeEngine:
             if (self.remaining[s] <= 0 or nxt == self.eos[s]
                     or self.pos[s] >= self.max_seq - 1):
                 self._retire(s)
+                retired += 1
+        if retired:
+            rec.count("serve.retired", retired)
         return int(active.size)
 
     def run_to_completion(self, max_ticks: int = 100000) -> list[Completion]:

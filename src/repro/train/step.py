@@ -33,6 +33,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P  # noqa: F401
 
 from repro.core.api import CollectiveEngine
 from repro.models.model import Model
+from repro.obs import metrics as _obs
 from repro.sharding import rules
 from repro.train.loss import cross_entropy
 from repro.train.optimizer import Optimizer
@@ -209,7 +210,8 @@ def _opt_specs(opt_shapes: PyTree, pspecs: PyTree) -> PyTree:
 def build_train_step_acis(model: Model, optimizer: Optimizer, mesh: Mesh,
                           engine: CollectiveEngine, *,
                           microbatches: int = 1,
-                          donate: bool = False) -> Callable:
+                          donate: bool = False,
+                          recorder=None) -> Callable:
     """Params replicated over DP axes (TP over 'model' untouched); gradient
     sync + update run manual-over-DP via the CollectiveEngine.
 
@@ -220,6 +222,13 @@ def build_train_step_acis(model: Model, optimizer: Optimizer, mesh: Mesh,
     place instead of allocating a 2× transient per sync.  ``donate``
     invalidates the state passed in (the usual donation contract), so it
     is opt-in.
+
+    ``recorder`` (a :class:`repro.obs.Recorder`) wraps the jitted step
+    with host-side telemetry: ``train.steps`` counts calls, and — only
+    when the recorder is enabled — ``train.step_s`` observes blocking
+    wall-clock per step (the block changes dispatch overlap, so it is
+    never imposed on un-recorded runs).  Defaults to the process-wide
+    ``obs`` recorder read at call time.
     """
     dp = rules.dp_axes(mesh)
     manual_axes = set(dp)
@@ -265,7 +274,21 @@ def build_train_step_acis(model: Model, optimizer: Optimizer, mesh: Mesh,
         return TrainState(new_params, new_opt, state.step + 1,
                           new_residual, new_arenas), metrics
 
-    return jax.jit(step_fn, donate_argnums=(0,) if donate else ())
+    jitted = jax.jit(step_fn, donate_argnums=(0,) if donate else ())
+
+    @functools.wraps(jitted)
+    def timed(state, batch):
+        rec = recorder if recorder is not None else _obs.RECORDER
+        if not rec.enabled:
+            return jitted(state, batch)
+        import time
+        t0 = time.perf_counter()
+        out = jax.block_until_ready(jitted(state, batch))
+        rec.count("train.steps")
+        rec.observe("train.step_s", time.perf_counter() - t0)
+        return out
+
+    return timed
 
 
 def init_state(model: Model, optimizer: Optimizer, key,

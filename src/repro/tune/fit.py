@@ -240,6 +240,9 @@ def fit_net_params(samples, *, tiers: Sequence[str] = ("ici", "dci"),
         n_used += 1
     residual = math.sqrt(err2 / n_used) if n_used else 0.0
 
+    from repro.obs import metrics as _obs
+    _obs.RECORDER.count("tune.fit_runs")
+
     return NetFit(tiers=tier_params, overlap=dict(netmodel.TIER_OVERLAP),
                   detour=detour, host_bw=host_bw, residual=residual,
                   n_stages=n_used, dropped=dropped)
@@ -270,4 +273,7 @@ def fit_traces(samples, *, tiers: Sequence[str] = ("ici", "dci"),
         fit = dataclasses.replace(
             fit, overlap={**fit.overlap,
                           **fit_overlap(samples, fit, tiers=tiers)})
+    from repro.obs import metrics as _obs
+    _obs.RECORDER.event("tune.fit", residual=fit.residual,
+                        n_stages=fit.n_stages, dropped=fit.dropped)
     return fit

@@ -206,14 +206,18 @@ def tuned_config(base, build: Callable[[Any], Any], *, key: str,
     :func:`search` once, persist the winner, apply it.  Unknown override
     fields from a future build are dropped rather than crashing.
     """
+    from repro.obs import metrics as _obs
+
     db = db or TuneDB(db_path)
     entry = db.lookup(key)
     if entry is None:
+        _obs.RECORDER.count("tune.db_search")
         res = search(build, base=base, trace=trace, fit=fit, space=space)
         db.store(key, res.overrides, score=res.score,
                  default_score=res.default_score, evals=res.n_evals)
         overrides = res.overrides
     else:
+        _obs.RECORDER.count("tune.db_hit")
         overrides = entry.get("overrides", {})
     overrides = {f: v for f, v in overrides.items()
                  if f in TUNABLE_FIELDS and hasattr(base, f)}

@@ -1,8 +1,10 @@
 """Stage-trace recording: the observed side of the tuning loop.
 
 A :class:`StageTrace` is one executed plan stage with wall-clock
-boundaries — the shared currency of the whole ``repro.tune`` subsystem.
-Three recorders emit it:
+boundaries — the shared currency of the whole ``repro.tune`` subsystem,
+and literally the same type as the observability layer's
+:class:`repro.obs.spans.StageSpan` (so recorded traces export straight
+to Perfetto via :mod:`repro.obs.timeline`).  Three recorders emit it:
 
   * :func:`from_sim` converts a dataplane-simulator
     :class:`~repro.cgra.simulate.SimReport` (each ``SimStage`` already
@@ -31,36 +33,14 @@ import json
 import time
 from typing import Callable, Optional, Sequence
 
+from repro.obs.spans import StageSpan
+
 SCHEMA_VERSION = 1
 
-
-@dataclasses.dataclass(frozen=True)
-class StageTrace:
-    """One executed stage: identity + wall-clock boundaries.
-
-    ``stage`` indexes the owning plan's stage list; ``bytes`` is the raw
-    per-rank payload (``StageIR.bytes_in``) so a replayer can match this
-    record against stages of a *different* candidate plan; ``t_ser`` is
-    the injection-serialization share of the duration when the recorder
-    knows it (the simulator does; wall-clock recorders leave it None and
-    the replayer falls back to the calibrated per-tier overlap
-    fraction).
-    """
-
-    stage: int
-    kind: str
-    axis: str = ""
-    wave: int = 0
-    t_start: float = 0.0
-    t_end: float = 0.0
-    bytes: Optional[int] = None
-    schedule: str = ""
-    placement: str = ""
-    t_ser: Optional[float] = None
-
-    @property
-    def duration(self) -> float:
-        return self.t_end - self.t_start
+# the stage record IS the obs layer's shared span schema — one type,
+# emitted by the executor's instrument hook, stored by this module,
+# exported by repro.obs.timeline.  Kept under its historical name here.
+StageTrace = StageSpan
 
 
 @dataclasses.dataclass(frozen=True)
@@ -131,17 +111,13 @@ def record_instrumented(compiled, *xs, arenas=None,
     normalized so the first stage starts at 0.  Only meaningful outside
     ``jit`` — see :func:`repro.core.executor.execute`.
     """
-    records: list[dict] = []
+    from repro.obs import spans as _spans
+
+    records: list[StageTrace] = []
     out = compiled(*xs, arenas=arenas, instrument=records)
-    t0 = min((r["t_start"] for r in records), default=0.0)
-    rows = []
-    for r in records:
-        m, pl = _stage_meta(compiled, r["stage"])
-        rows.append(StageTrace(
-            stage=r["stage"], kind=r["kind"], axis=r["axis"],
-            wave=r["wave"], t_start=r["t_start"] - t0,
-            t_end=r["t_end"] - t0, bytes=m, schedule=r["schedule"],
-            placement=pl))
+    # the executor already emits the shared StageSpan schema (payload
+    # bytes and placement attached) — just re-anchor t=0
+    rows = _spans.normalize(records)
     t_end = max((s.t_end for s in rows), default=0.0)
     trace = ProgramTrace(
         name=getattr(compiled.source, "name", "program"),
