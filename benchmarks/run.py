@@ -15,8 +15,11 @@ us_per_call), ``BENCH_cgra.json`` (per-benchmark simulated vs
 analytic switch latency from the dataplane simulator),
 ``BENCH_tune.json`` (autotuning-loop fidelity + search outcome),
 ``BENCH_obs.json`` (instrumentation overhead + drift-watchdog
-precision) and ``BENCH_sync64.trace.json`` (the 64-leaf sync Perfetto
-timeline) so CI can record the trajectories as artifacts.
+precision), ``BENCH_serve.json`` (compiled serving data path:
+decode-program vs per-op-ring switch time, fused MoE combine, and the
+measured compiled-vs-plain decode wall-clock) and
+``BENCH_sync64.trace.json`` (the 64-leaf sync Perfetto timeline) so CI
+can record the trajectories as artifacts.
 """
 
 import json
@@ -26,6 +29,7 @@ JSON_PATH = "BENCH_netmodel.json"
 CGRA_JSON_PATH = "BENCH_cgra.json"
 TUNE_JSON_PATH = "BENCH_tune.json"
 OBS_JSON_PATH = "BENCH_obs.json"
+SERVE_JSON_PATH = "BENCH_serve.json"
 
 
 def main() -> None:
@@ -87,6 +91,12 @@ def main() -> None:
     obs_rows = obs.rows()
     rows += obs_rows
 
+    # compiled serving data path: decode programs vs per-op rings, fused
+    # MoE combine, engine throughput over the shared program cache
+    from benchmarks import serve
+    serve_rows = serve.rows()
+    rows += serve_rows
+
     print("name,us_per_call,derived")
     for name, us, derived in rows:
         print(f"{name},{us:.2f},{derived}")
@@ -132,6 +142,11 @@ def main() -> None:
             json.dump(obs.record(obs_rows), f, indent=2, sort_keys=True)
             f.write("\n")
         print(f"wrote {OBS_JSON_PATH}", file=sys.stderr)
+
+        with open(SERVE_JSON_PATH, "w") as f:
+            json.dump(serve.record(serve_rows), f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"wrote {SERVE_JSON_PATH}", file=sys.stderr)
 
         # the Perfetto-loadable timeline of the 64-leaf sync, uploaded
         # next to the BENCH_*.json trajectories

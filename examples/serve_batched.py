@@ -1,10 +1,19 @@
-"""Batched serving demo: continuous batching with per-slot positions.
+"""Batched serving demo: continuous batching + the compiled data path.
 
     PYTHONPATH=src python examples/serve_batched.py
 
-Submits a burst of requests with heterogeneous prompt/generation lengths
-to a 4-slot engine over the ~100M model (reduced config for speed) and
-verifies every completion against an independent greedy decode.
+Part 1 submits a burst of requests with heterogeneous prompt/generation
+lengths to a 4-slot engine over the ~100M model (reduced config for
+speed) and verifies every completion against an independent greedy
+decode.
+
+Part 2 reruns the same burst with the decode collectives compiled
+through ``engine.compile``: the model runs rank-local under ``shard_map``
+over a 2-way tensor-parallel mesh and every per-layer all-reduce is a
+switch program from the process-wide :data:`repro.serve.PROGRAM_CACHE`.
+A second engine replica then shows the point of the shared cache — zero
+new compiles, all hits — and the decode program's ``explain()`` prints
+the schedule the switch compiler picked.
 """
 
 import os
@@ -16,9 +25,30 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro import configs
+from repro import configs, obs
 from repro.models import Model
-from repro.serve.engine import Request, ServeEngine
+from repro.serve import PROGRAM_CACHE, Request, ServeCollectives, ServeEngine
+
+
+def make_requests(cfg, rng, n=10):
+    return [Request(rid=i,
+                    prompt=rng.integers(0, cfg.vocab, 3 + (i * 3) % 9)
+                    .astype(np.int32),
+                    max_new_tokens=4 + (i * 5) % 12)
+            for i in range(n)]
+
+
+def run_burst(eng, reqs):
+    for r in reqs:
+        eng.submit(r)
+    t0 = time.time()
+    done = eng.run_to_completion()
+    dt = time.time() - t0
+    gen = sum(len(c.tokens) for c in done)
+    print(f"  {len(done)} completions, {gen} tokens, {eng.ticks} ticks "
+          f"in {dt:.1f}s ({gen / dt:.1f} tok/s, "
+          f"{gen / max(eng.ticks, 1):.2f} tok/tick)")
+    return done
 
 
 def main():
@@ -26,25 +56,11 @@ def main():
     model = Model(cfg)
     params = model.init(jax.random.key(0))
     rng = np.random.default_rng(42)
+    reqs = make_requests(cfg, rng)
 
+    print("plain transport (single jit, network free):")
     eng = ServeEngine(model, params, slots=4, max_seq=96)
-    reqs = [Request(rid=i,
-                    prompt=rng.integers(0, cfg.vocab, 3 + (i * 3) % 9)
-                    .astype(np.int32),
-                    max_new_tokens=4 + (i * 5) % 12)
-            for i in range(10)]
-    for r in reqs:
-        eng.submit(r)
-
-    t0 = time.time()
-    done = eng.run_to_completion()
-    dt = time.time() - t0
-    gen_tokens = sum(len(c.tokens) for c in done)
-    print(f"{len(done)} completions, {gen_tokens} tokens, "
-          f"{eng.ticks} engine ticks in {dt:.1f}s "
-          f"({gen_tokens / dt:.1f} tok/s, "
-          f"{gen_tokens / max(eng.ticks, 1):.2f} tok/tick — continuous "
-          f"batching keeps slots busy)")
+    done = run_burst(eng, reqs)
 
     # verify one completion against an oracle greedy decode
     req = reqs[3]
@@ -55,7 +71,31 @@ def main():
     want = toks[len(req.prompt):]
     got = next(c for c in done if c.rid == 3).tokens
     assert got == want, (got, want)
-    print("oracle check ✓")
+    print("  oracle check ✓")
+
+    print("\ncompiled transport (tp=2, switch programs from the shared "
+          "cache):")
+    with obs.recording() as rec:
+        sc = ServeCollectives(cfg, tp=2)
+        eng = ServeEngine(model, params, slots=4, max_seq=96,
+                          collectives=sc)
+        run_burst(eng, make_requests(cfg, rng))
+        print(f"  program cache: {PROGRAM_CACHE.stats()}")
+        print(f"  decode p50 {rec.gauges['serve.decode_p50_s']*1e3:.1f}ms "
+              f"p99 {rec.gauges['serve.decode_p99_s']*1e3:.1f}ms")
+
+        # a second replica reuses every program — no recompiles
+        miss0 = PROGRAM_CACHE.stats()["misses"]
+        eng2 = ServeEngine(model, params, slots=4, max_seq=96,
+                           collectives=ServeCollectives(cfg, tp=2))
+        run_burst(eng2, make_requests(cfg, rng))
+        stats = PROGRAM_CACHE.stats()
+        print(f"  replica 2: {stats['misses'] - miss0} new compiles, "
+              f"{stats['hits']} total hits")
+
+    name, prog, count = sc.decode_programs(4)[0]
+    print(f"\ndecode tick runs {count}× {name}:")
+    print(prog.explain())
 
 
 if __name__ == "__main__":

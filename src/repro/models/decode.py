@@ -25,6 +25,7 @@ from repro.models import attention as A
 from repro.models import layers as L
 from repro.models import mla as MLA
 from repro.models import moe as MOE
+from repro.models import parallel as TP
 from repro.models import rglru as RG
 from repro.models import rwkv6 as RW
 from repro.models.config import ModelConfig
@@ -82,6 +83,7 @@ def block_decode(p: PyTree, x: jax.Array, cache: PyTree, index: jax.Array,
                  ) -> tuple[jax.Array, PyTree]:
     akw = dict(n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, d_head=cfg.head_dim,
                qk_norm=cfg.qk_norm, rope_theta=cfg.rope_theta)
+    tp = TP.current()
     if kind in ("self", "dense_self", "moe_self"):
         xin = _norm(p["ln1"], x, cfg)
         if kind in ("dense_self", "moe_self") and cfg.mla is not None:
@@ -90,13 +92,18 @@ def block_decode(p: PyTree, x: jax.Array, cache: PyTree, index: jax.Array,
                                       rope_theta=cfg.rope_theta)
         else:
             h, cache = A.gqa_decode(p["attn"], xin, cache, index, **akw)
+        if tp is not None:
+            h = tp.attn_reduce(h)
         x = x + h
         if kind == "moe_self":
             y, _ = MOE.moe_ffn(p["moe"], _norm(p["ln2"], x, cfg), cfg.moe,
                                cfg.activation)
             x = x + y
         else:
-            x = x + L.ffn(p["ffn"], _norm(p["ln2"], x, cfg), cfg.activation)
+            f = L.ffn(p["ffn"], _norm(p["ln2"], x, cfg), cfg.activation)
+            if tp is not None:
+                f = tp.ffn_reduce(f)
+            x = x + f
     elif kind == "window":
         h, cache = A.window_decode(p["attn"], _norm(p["ln1"], x, cfg), cache,
                                    index, window=cfg.hybrid.window, **akw)

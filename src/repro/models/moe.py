@@ -23,6 +23,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.models import layers as L
+from repro.models import parallel as TP
 from repro.models.config import MoEConfig
 
 PyTree = Any
@@ -133,9 +134,21 @@ def moe_ffn(p: PyTree, x: jax.Array, cfg: MoEConfig, activation: str
     # (observed: 83 s/step collective time on qwen2-moe before this).
     xem = xe.transpose(1, 0, 2, 3).reshape(e, g * cap, d)
     xem = shard_act(xem, "tp", "dp", None)
+    tp = TP.current()
+    if tp is not None:                       # rank-local TP (serving path)
+        xem = tp.moe_dispatch(xem)           # [E, S, D] -> [E/tp, S, D]
     yem = _expert_ffn(p["experts"], xem, activation)
     yem = shard_act(yem, "tp", "dp", None)
     # expert-major -> group-major: the second all-to-all (bf16 on the wire)
+    shared_y = None
+    if tp is not None:
+        # the shared-expert partial (sliced FFN needing an all-reduce)
+        # rides the combine all-to-all: FuseHops merges the independent
+        # same-axis pair into one Type-4 allreduce+alltoall stage
+        part = L.ffn(p["shared"], xt, activation) if "shared" in p else None
+        yem, shared_y = tp.moe_combine(yem, part)
+    elif "shared" in p:
+        shared_y = L.ffn(p["shared"], xt, activation)
     ye = yem.reshape(e, g, cap, d).transpose(1, 0, 2, 3)
     ye = ye.reshape(g, n_slots, d)
     ye = jnp.concatenate([ye, jnp.zeros((g, 1, d), ye.dtype)], axis=1)
@@ -146,8 +159,8 @@ def moe_ffn(p: PyTree, x: jax.Array, cfg: MoEConfig, activation: str
         wj = (gate_vals[:, :, j] * keep[:, :, j].astype(jnp.float32))
         y = y + yj.astype(jnp.float32) * wj[..., None]
 
-    if "shared" in p:
-        y = y + L.ffn(p["shared"], xt, activation).astype(jnp.float32)
+    if shared_y is not None:
+        y = y + shared_y.astype(jnp.float32)
 
     # load-balance aux: E * sum_e f_e * p_e
     me = probs.mean(axis=(0, 1))

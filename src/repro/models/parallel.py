@@ -1,0 +1,80 @@
+"""Tensor-parallel hook — how serving communication reaches the models.
+
+The decode/prefill math in ``models/decode.py`` / ``models/transformer.py``
+/ ``models/moe.py`` is written rank-local: under tensor parallelism each
+rank holds a column slice of wq/wk/wv/wi (so attention and FFN partials
+are *partial sums* after wo) and a slice of the expert stack (so the MoE
+slot tensor must be resharded group-major -> expert-major).  Where those
+partials need the network, the model consults the active
+:class:`TensorParallel` hook instead of calling a collective directly —
+so the same model code runs
+
+  * unsharded (no hook installed: every method is identity),
+  * under GSPMD (``sharding/act.py`` constraints, hook absent),
+  * rank-local under ``shard_map`` with the hook supplying the
+    communication — XLA built-ins, direct acis rings, or compiled switch
+    programs (``repro.serve.collectives``).
+
+The hook is installed with :func:`tensor_parallel` around the *trace* of
+the decode program; the installed hook's methods run at trace time and
+stage whatever communication they choose into the jitted program.
+"""
+
+from __future__ import annotations
+
+import contextlib
+from typing import Optional
+
+import jax
+
+# Active-hook stack, consulted at trace time (mirrors tracing._ACTIVE:
+# installation brackets a trace, not a runtime call).
+_ACTIVE: list["TensorParallel"] = []
+
+
+class TensorParallel:
+    """Communication points the models expose under tensor parallelism.
+
+    The base class is the identity hook — every method returns its input
+    unchanged — so model code may call the active hook unconditionally.
+    Subclasses (see ``repro.serve.collectives``) override the methods
+    with real collectives over their mesh axis.
+    """
+
+    def attn_reduce(self, h: jax.Array) -> jax.Array:
+        """Sum attention-output partials [B, T, D] (after the sliced wo)."""
+        return h
+
+    def ffn_reduce(self, f: jax.Array) -> jax.Array:
+        """Sum dense-FFN output partials [B, T, D] (after the sliced wo)."""
+        return f
+
+    def moe_dispatch(self, xem: jax.Array) -> jax.Array:
+        """Reshard the MoE slot tensor expert-major: [E, S, D] with every
+        rank holding all tokens -> [E/tp, S, D] rows of this rank's
+        experts (the group->expert all-to-all)."""
+        return xem
+
+    def moe_combine(self, yem: jax.Array,
+                    shared_partial: Optional[jax.Array] = None):
+        """Inverse reshard of expert outputs [E/tp, S, D] -> [E, S, D]
+        (every rank again sees all experts' outputs), optionally fused
+        with the all-reduce of the shared-expert partial — the Type-4
+        AR+A2A pair.  Returns ``(yem_full, shared_reduced)`` where
+        ``shared_reduced`` is None iff ``shared_partial`` was."""
+        return yem, shared_partial
+
+
+def current() -> Optional[TensorParallel]:
+    """The innermost installed hook, or None (run unhooked)."""
+    return _ACTIVE[-1] if _ACTIVE else None
+
+
+@contextlib.contextmanager
+def tensor_parallel(hook: TensorParallel):
+    """Install ``hook`` for model calls traced inside the block."""
+    _ACTIVE.append(hook)
+    try:
+        yield hook
+    finally:
+        _ACTIVE.pop()

@@ -28,6 +28,7 @@ from repro.models import attention as A
 from repro.models import layers as L
 from repro.models import mla as MLA
 from repro.models import moe as MOE
+from repro.models import parallel as TP
 from repro.models import rglru as RG
 from repro.models import rwkv6 as RW
 from repro.models.config import ModelConfig
@@ -112,14 +113,20 @@ def apply_block(p: PyTree, x: jax.Array, cfg: ModelConfig, kind: str, *,
                qk_norm=cfg.qk_norm, rope_theta=cfg.rope_theta,
                chunk=cfg.attn_chunk, q_offset=q_offset,
                unroll=cfg.analysis_unroll)
+    tp = TP.current()
     if kind in ("self", "enc_self", "window"):
         h = A.gqa_attention(p["attn"], _norm(p["ln1"], x, cfg),
                             causal=(kind != "enc_self"),
                             window=cfg.hybrid.window if kind == "window"
                             else None,
                             use_rope=cfg.family not in ("encdec",), **akw)
+        if tp is not None:
+            h = tp.attn_reduce(h)
         x = x + h
-        x = x + L.ffn(p["ffn"], _norm(p["ln2"], x, cfg), cfg.activation)
+        f = L.ffn(p["ffn"], _norm(p["ln2"], x, cfg), cfg.activation)
+        if tp is not None:
+            f = tp.ffn_reduce(f)
+        x = x + f
     elif kind == "cross":
         h = A.gqa_attention(p["attn"], _norm(p["ln1"], x, cfg),
                             context=context, causal=False, **akw)
@@ -140,13 +147,18 @@ def apply_block(p: PyTree, x: jax.Array, cfg: ModelConfig, kind: str, *,
         else:
             h = A.gqa_attention(p["attn"], _norm(p["ln1"], x, cfg),
                                 causal=True, **akw)
+        if tp is not None:
+            h = tp.attn_reduce(h)
         x = x + h
         if kind == "moe_self":
             y, aux = MOE.moe_ffn(p["moe"], _norm(p["ln2"], x, cfg), cfg.moe,
                                  cfg.activation)
             x = x + y
         else:
-            x = x + L.ffn(p["ffn"], _norm(p["ln2"], x, cfg), cfg.activation)
+            f = L.ffn(p["ffn"], _norm(p["ln2"], x, cfg), cfg.activation)
+            if tp is not None:
+                f = tp.ffn_reduce(f)
+            x = x + f
     elif kind == "rwkv":
         x = x + RW.rwkv6_token_mix(p["tok"], _norm(p["ln1"], x, cfg),
                                    chunk=cfg.wkv_chunk,

@@ -35,7 +35,19 @@ sim.runs/sim.stages       counter     cgra.simulate.SwitchSim.run
 serve.ticks/admitted/     counter     serve.ServeEngine.step
   retired
 serve.active              gauge       active slots per tick
+serve.queue_depth         gauge       queued requests at tick start
 serve.decode_s            histogram   per-tick decode seconds (enabled only)
+serve.decode_p50_s/p99_s  gauge       tick-latency percentiles over the
+                                      sliding measurement window
+serve.host_sync           counter     the tick's one device->host block
+                                      (logits for sampling)
+serve.slo_rejected        counter     requests dropped at admission: the
+                                      SLOPolicy estimate misses deadline
+serve.admit_deferred      counter     admits postponed (prefill cap)
+serve.deadline_headroom_s gauge       min (deadline - elapsed) across
+                                      active deadline-carrying slots
+serve.program_cache_hit/  counter     serve.collectives.SwitchProgramCache
+  _miss                               get_or_build
 train.steps               counter     train step wrapper (recorder= passed)
 train.step_s              histogram   per-step seconds (enabled only)
 drift.observations        counter     obs.drift.DriftWatchdog.observe

@@ -1,1 +1,14 @@
-"""repro.serve — continuous-batching serving engine."""
+"""repro.serve — continuous-batching serving engine.
+
+``engine`` is the host-side control loop (slots, admission, SLO policy);
+``collectives`` is the compiled tensor-parallel data path — decode/prefill
+communication as switch programs from a process-wide
+:class:`~repro.serve.collectives.SwitchProgramCache`.
+"""
+
+from repro.serve.collectives import (PROGRAM_CACHE, ServeCollectives,
+                                     SwitchProgramCache)
+from repro.serve.engine import Completion, Request, ServeEngine, SLOPolicy
+
+__all__ = ["Completion", "PROGRAM_CACHE", "Request", "SLOPolicy",
+           "ServeCollectives", "ServeEngine", "SwitchProgramCache"]

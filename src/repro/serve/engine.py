@@ -7,13 +7,30 @@ queue; new prompts prefill *inside the running batch*: the new slot steps
 through its prompt tokens while other slots keep generating — one jitted
 decode program for everything, zero recompiles in steady state.
 
-On a real pod the decode program is SPMD over the mesh (cache sharded per
-sharding/rules.py); this driver is the host-side control loop and is
-exercised by tests/test_serving.py and examples/serve_batched.py.
+Two decode transports:
+
+  * plain (default) — a bare ``jax.jit`` over ``model.decode_step``; the
+    network is free (single host / GSPMD handles it).
+  * compiled — pass ``collectives=`` a
+    :class:`repro.serve.collectives.ServeCollectives`: decode runs
+    rank-local under ``shard_map`` over the ``tp`` mesh with every
+    per-layer all-reduce / MoE all-to-all a compiled switch program from
+    the process-wide program cache.
+
+Admission is SLO-aware when an :class:`SLOPolicy` is installed: requests
+carry deadlines, the prefill-vs-decode cost of admitting is estimated
+from measured tick times (falling back to the compiled prefill program's
+analytic ``program_time``), and requests that cannot make their deadline
+are rejected at admission instead of wasting slot ticks.
+
+This driver is the host-side control loop; it is exercised by
+tests/test_serving.py, tests/test_serve_collectives.py and
+examples/serve_batched.py.
 """
 
 from __future__ import annotations
 
+import collections
 import dataclasses
 import time
 from typing import Any, Optional
@@ -34,6 +51,10 @@ class Request:
     prompt: np.ndarray                 # [t] int32
     max_new_tokens: int = 16
     eos: Optional[int] = None
+    # SLO deadline in seconds from submit to last token; None = best-effort
+    deadline_s: Optional[float] = None
+    # stamped by ServeEngine.submit (time.monotonic)
+    t_submit: float = dataclasses.field(default=0.0, compare=False)
 
 
 @dataclasses.dataclass
@@ -43,9 +64,61 @@ class Completion:
     tokens: list[int]
 
 
+@dataclasses.dataclass
+class SLOPolicy:
+    """Admission policy for deadline-carrying requests.
+
+    ``decide`` returns one of
+
+      * ``"admit"``  — take the request into the free slot
+      * ``"reject"`` — it cannot make its deadline even if admitted now;
+        drop it at admission (``serve.slo_rejected``) instead of burning
+        decode ticks on a doomed sequence
+      * ``"defer"``  — leave it queued this tick
+        (``serve.admit_deferred``): too many slots are already
+        prefilling, so admitting would stretch everyone's tick
+
+    The per-tick cost estimate prefers the engine's measured tick times
+    (p50 over a sliding window); before any tick has run it falls back
+    to the analytic ``program_time`` of the compiled decode/prefill
+    programs — the prefill-vs-decode decision the compiled path makes
+    possible.
+    """
+
+    # admit at most this many concurrently-prefilling slots (None = no cap)
+    max_concurrent_prefills: Optional[int] = None
+    # safety factor on the completion-time estimate (>1 rejects earlier)
+    slack: float = 1.0
+
+    def decide(self, req: Request, engine: "ServeEngine",
+               n_prefilling: int) -> str:
+        if self.max_concurrent_prefills is not None \
+                and n_prefilling >= self.max_concurrent_prefills:
+            return "defer"
+        if req.deadline_s is None:
+            return "admit"
+        tick = engine.tick_time_estimate()
+        if tick is None:
+            return "admit"            # nothing to estimate with yet
+        waited = time.monotonic() - req.t_submit
+        # in-batch prefill pays one tick per prompt token; a dedicated
+        # batched prefill pass can never beat its compiled program's
+        # analytic switch time, so the estimate is the max of the two
+        ttft = len(req.prompt) * tick
+        sc = engine.collectives
+        if sc is not None:
+            ttft = max(ttft, sc.prefill_comm_time(
+                engine.slots, max(len(req.prompt), 1)))
+        est = waited + ttft + req.max_new_tokens * tick
+        if est * self.slack > req.deadline_s:
+            return "reject"
+        return "admit"
+
+
 class ServeEngine:
     def __init__(self, model: Model, params: PyTree, *, slots: int = 4,
-                 max_seq: int = 256, recorder: Optional[_obs.Recorder] = None):
+                 max_seq: int = 256, recorder: Optional[_obs.Recorder] = None,
+                 collectives=None, admission: Optional[SLOPolicy] = None):
         self.model = model
         self.params = params
         # per-engine recorder; defaults to the process-wide one at call
@@ -53,6 +126,8 @@ class ServeEngine:
         self.recorder = recorder
         self.slots = slots
         self.max_seq = max_seq
+        self.collectives = collectives
+        self.admission = admission
         self.cache = model.init_cache(slots, max_seq)
 
         # host-side slot state
@@ -62,10 +137,17 @@ class ServeEngine:
         self.eos = np.full(slots, -1, np.int64)
         self.prompt: list[Optional[np.ndarray]] = [None] * slots
         self.prompt_cursor = np.zeros(slots, np.int32)
+        self.deadline = np.full(slots, np.inf)
+        self.t_submit = np.zeros(slots)
         self.generated: list[list[int]] = [[] for _ in range(slots)]
-        self.queue: list[Request] = []
+        self.queue: collections.deque[Request] = collections.deque()
         self.done: list[Completion] = []
+        self.rejected: list[Request] = []
         self.ticks = 0
+        # per-tick wall times (measured; the decode host sync makes every
+        # tick a natural timing boundary) -> p50/p99 gauges + admission
+        self._tick_times: collections.deque[float] = collections.deque(
+            maxlen=256)
 
         # the KV cache is persistent, step-threaded state exactly like the
         # train path's bucket arenas: donate it so every decode tick's
@@ -73,33 +155,56 @@ class ServeEngine:
         # full cache copy per token (the engine always rebinds
         # ``self.cache`` to the returned cache, so the donated input is
         # never reused)
-        self._decode = jax.jit(
-            lambda p, tok, cache, idx: model.decode_step(p, tok, cache, idx),
-            donate_argnums=(2,))
+        if collectives is not None:
+            self._decode = collectives.decode_fn(params, self.cache)
+        else:
+            self._decode = jax.jit(
+                lambda p, tok, cache, idx: model.decode_step(
+                    p, tok, cache, idx),
+                donate_argnums=(2,))
 
     def submit(self, req: Request):
         assert len(req.prompt) + req.max_new_tokens < self.max_seq
+        req.t_submit = time.monotonic()
         self.queue.append(req)
+
+    def tick_time_estimate(self) -> Optional[float]:
+        """Seconds per engine tick: measured p50 when ticks have run,
+        else the compiled decode programs' analytic switch time, else
+        None (plain transport, nothing measured yet)."""
+        if self._tick_times:
+            return float(np.median(self._tick_times))
+        if self.collectives is not None:
+            return self.collectives.decode_comm_time(self.slots)
+        return None
 
     # -- slot management -------------------------------------------------------
 
-    def _reset_slot_cache(self, s: int):
+    def _reset_slot_caches(self, slot_ids: list[int]):
+        """Zero the cache rows of every slot admitted this tick in ONE
+        tree traversal (a full ``jax.tree.map`` per slot was O(admits ×
+        leaves) dispatches per tick)."""
+        idx = jnp.asarray(np.asarray(slot_ids, np.int32))
+
         def reset(leaf):
             if leaf.ndim >= 1 and leaf.shape[0] == self.slots:
                 fill = -1 if leaf.dtype == jnp.int32 and leaf.ndim == 2 \
                     else 0       # window 'pos' buffers use -1 = invalid
-                return leaf.at[s].set(fill)
+                return leaf.at[idx].set(fill)
             return leaf
         self.cache = jax.tree.map(reset, self.cache)
 
     def _admit(self, s: int, req: Request):
-        self._reset_slot_cache(s)
+        """Host-side slot bookkeeping; the cache rows are cleared by the
+        caller's batched :meth:`_reset_slot_caches`."""
         self.rid[s] = req.rid
         self.pos[s] = 0
         self.remaining[s] = req.max_new_tokens
         self.eos[s] = -1 if req.eos is None else req.eos
         self.prompt[s] = np.asarray(req.prompt, np.int32)
         self.prompt_cursor[s] = 0
+        self.deadline[s] = np.inf if req.deadline_s is None else req.deadline_s
+        self.t_submit[s] = req.t_submit
         self.generated[s] = []
 
     def _retire(self, s: int):
@@ -113,13 +218,37 @@ class ServeEngine:
     def step(self) -> int:
         rec = self.recorder if self.recorder is not None else _obs.RECORDER
         rec.count("serve.ticks")
-        admitted = 0
+        rec.gauge("serve.queue_depth", len(self.queue))
+        admitted_slots: list[int] = []
+        n_prefilling = sum(
+            1 for s in range(self.slots)
+            if self.rid[s] >= 0
+            and self.prompt_cursor[s] < len(self.prompt[s]))
+        deferred = False
         for s in range(self.slots):
-            if self.rid[s] < 0 and self.queue:
-                self._admit(s, self.queue.pop(0))
-                admitted += 1
-        if admitted:
-            rec.count("serve.admitted", admitted)
+            if self.rid[s] >= 0 or deferred:
+                continue
+            while self.queue:
+                req = self.queue[0]
+                verdict = "admit" if self.admission is None else \
+                    self.admission.decide(req, self, n_prefilling)
+                if verdict == "reject":
+                    self.queue.popleft()
+                    self.rejected.append(req)
+                    rec.count("serve.slo_rejected")
+                    continue
+                if verdict == "defer":
+                    rec.count("serve.admit_deferred")
+                    deferred = True
+                    break
+                self.queue.popleft()
+                self._admit(s, req)
+                admitted_slots.append(s)
+                n_prefilling += 1
+                break
+        if admitted_slots:
+            self._reset_slot_caches(admitted_slots)
+            rec.count("serve.admitted", len(admitted_slots))
         active = np.flatnonzero(self.rid >= 0)
         rec.gauge("serve.active", int(active.size))
         if active.size == 0:
@@ -139,12 +268,28 @@ class ServeEngine:
                     else self.prompt[s][-1]
 
         idx = jnp.asarray(self.pos)
-        t0 = time.perf_counter() if rec.enabled else 0.0
+        t0 = time.perf_counter()
         lg, self.cache = self._decode(self.params, jnp.asarray(tok),
                                       self.cache, idx)
-        lg = np.asarray(lg)        # blocks on the decode result
+        # the tick's ONE host sync: greedy sampling below needs the logits
+        # on the host whether or not recording is on — an explicit
+        # device->host block here, not a side effect of instrumentation
+        lg = np.asarray(lg)
+        dt = time.perf_counter() - t0
+        self._tick_times.append(dt)
         if rec.enabled:
-            rec.observe("serve.decode_s", time.perf_counter() - t0)
+            rec.count("serve.host_sync")
+            rec.observe("serve.decode_s", dt)
+            order = sorted(self._tick_times)
+            rec.gauge("serve.decode_p50_s", order[len(order) // 2])
+            rec.gauge("serve.decode_p99_s",
+                      order[min(len(order) - 1, int(len(order) * 0.99))])
+            live = self.deadline[active]
+            if np.isfinite(live).any():
+                now = time.monotonic()
+                headroom = (live - (now - self.t_submit[active]))
+                rec.gauge("serve.deadline_headroom_s",
+                          float(headroom[np.isfinite(live)].min()))
         self.ticks += 1
 
         retired = 0
