@@ -1,0 +1,223 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+# match benchmarks.run — process-local, nothing shared with tests
+
+"""Elasticity benchmark: masked-sync overhead, recompile reuse, and the
+sync-time-vs-dead-fraction degradation curve.
+
+Three gated bounds (ISSUE 10):
+
+  * ``elastic_masked_overhead`` — analytic ``program_time`` of the
+    compiled *masked* gradient sync over the unmasked one at zero
+    faults.  The masked lowering rides the same flat bucket ring (the
+    live-count is one extra lane in the pack), so the only cost is the
+    count lane plus the renormalize epilogue; the benchmark hard-asserts
+    the ratio stays ≤ ``MASKED_OVERHEAD_GATE`` (1.05x) before recording
+    it for the 25%-tolerance CI guard.
+  * ``elastic_recompile_reuse`` — fraction of programs + arenas reused
+    across shape-preserving rank dropout (``engine.recompile`` on a
+    :class:`~repro.elastic.TopologyDelta`).  Membership is a runtime
+    program input, so dropout must hit the caches 100%: the row
+    hard-asserts reuse == 1.0 and carries it as ``speedup=`` so the
+    guard treats it higher-is-better.
+  * ``elastic_sync_dead_{0,1_16,1_8,1_4}`` — simulated end-to-end time
+    of the masked sync on 16 ranks with 0/1/2/4 endpoint-dead ranks
+    (``FaultPlan``, detection timeout 0.25x the healthy run).  The
+    curve is hard-asserted monotone with no >2x adjacent cliff —
+    degradation is the linear detection charge plus the contracted
+    ring, not a collapse.
+
+``write_trace`` dumps the 4-dead-rank simulated run as
+``BENCH_faults.trace.json`` — the Perfetto artifact CI uploads next to
+the ``BENCH_*.json`` trajectories, showing the dead ranks' silent lanes
+and the live ranks' delayed start.
+"""
+
+import numpy as np
+
+TRACE_PATH = "BENCH_faults.trace.json"
+
+MASKED_OVERHEAD_GATE = 1.05
+N_RANKS = 16
+# (n_dead, row tag) — dead fractions 0, 1/16, 1/8, 1/4 of 16 ranks
+DEAD_STEPS = ((0, "0"), (1, "1_16"), (2, "1_8"), (4, "1_4"))
+
+# transformer-ish gradient pytree: two big matmul leaves, a small tail
+LEAF_SHAPES = {"wq": (1 << 18,), "ffn": (1 << 17,), "bias": (1 << 10,),
+               "norm": (1 << 8,)}
+
+
+def _grads():
+    import jax.numpy as jnp
+
+    return {k: jnp.zeros(s, jnp.float32) for k, s in LEAF_SHAPES.items()}
+
+
+def _sync_pair(engine, axis_sizes):
+    """(unmasked, masked) compiled sync programs for the same pytree."""
+    import jax
+
+    gl = _grads()
+    treedef = jax.tree_util.tree_structure(gl)
+    avals = tuple(jax.ShapeDtypeStruct(l.shape, l.dtype)
+                  for l in jax.tree_util.tree_leaves(gl))
+    plain = engine._sync_program(treedef, avals, None,
+                                 axis_sizes=axis_sizes, masked=False)
+    masked = engine._sync_program(treedef, avals, None,
+                                  axis_sizes=axis_sizes, masked=True)
+    return plain, masked
+
+
+def overhead_rows() -> list[tuple]:
+    """Masked vs unmasked analytic program_time at zero faults, on both
+    the flat and hierarchical pipelines — hard-gated at 1.05x."""
+    from repro.core import make_engine
+
+    out = []
+    for tag, backend, sizes in (
+            ("flat", "acis", {"data": 8}),
+            ("hier", "acis_hierarchical", {"data": 4, "pod": 2})):
+        kw = {"inner_axis": "data"}
+        if "pod" in sizes:
+            kw["outer_axis"] = "pod"
+        plain, masked = _sync_pair(make_engine(backend, **kw), sizes)
+        t_plain, t_masked = plain.program_time(), masked.program_time()
+        ratio = t_masked / t_plain
+        assert ratio <= MASKED_OVERHEAD_GATE, (
+            f"masked sync overhead {ratio:.4f}x exceeds the "
+            f"{MASKED_OVERHEAD_GATE}x gate ({tag})")
+        out.append((f"elastic_masked_overhead_{tag}", ratio,
+                    f"plain_us={t_plain * 1e6:.2f}"
+                    f",masked_us={t_masked * 1e6:.2f}"
+                    f",gate={MASKED_OVERHEAD_GATE}"
+                    f",stages={len(masked.stages)}"))
+    return out
+
+
+def recompile_rows() -> list[tuple]:
+    """Shape-preserving dropout must reuse 100% of programs + arenas;
+    a shape-moving delta must compile fresh."""
+    from repro.core import make_engine
+    from repro.elastic import Membership, TopologyDelta
+
+    eng = make_engine("acis_hierarchical", inner_axis="data",
+                      outer_axis="pod")
+    sizes = {"data": 4, "pod": 2}
+    gl = _grads()
+    # warm the program + arena caches, then drop ranks one at a time
+    eng.init_arenas(gl, axis_sizes=sizes, masked=True)
+    mem = Membership.all_alive(8)
+    reports = [eng.recompile(mem.delta(mem.drop(r)), gl, axis_sizes=sizes)
+               for r in (1, 5, 7)]
+    reuse = min(r.reuse_frac for r in reports)
+    assert reuse == 1.0 and not any(r.full_recompile for r in reports), \
+        f"shape-preserving dropout missed a cache: {reports}"
+    moved = eng.recompile(TopologyDelta(axis_sizes=(("data", 8),)), gl,
+                          axis_sizes=sizes)
+    assert moved.full_recompile, "shape-moving delta reused stale program"
+    return [("elastic_recompile_reuse", reuse,
+             f"speedup={reuse:.4f},drops={len(reports)}"
+             f",shape_moving_rebuilt={moved.programs_rebuilt}")]
+
+
+def _masked_program(n_ranks: int = N_RANKS):
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import make_engine, tracing
+
+    eng = make_engine("acis", inner_axis="data")
+
+    def prog(x, alive):
+        return tracing.masked_reduce(x, alive, axis="auto")
+
+    compiled = eng.compile(
+        prog, axis_size=n_ranks,
+        in_avals=(jax.ShapeDtypeStruct((1 << 14,), jnp.float32),
+                  jax.ShapeDtypeStruct((), jnp.float32)))
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal((n_ranks, 1 << 14)).astype(np.float32)
+    return compiled, x
+
+
+def _faulted_run(compiled, x, n_dead: int, timeout: float):
+    from repro.cgra.simulate import FaultPlan, SwitchSim
+    from repro import tune
+
+    n_ranks = x.shape[0]
+    dead = frozenset(range(n_dead))
+    alive = np.ones((n_ranks,), np.float32)
+    alive[list(dead)] = 0.0
+    faults = (FaultPlan(dead=dead, detect_timeout_s=timeout)
+              if n_dead else None)
+    sim = SwitchSim(compiled.topology, faults=faults)
+    (val, cnt), trace, report = tune.record_sim(compiled, sim, x, alive)
+    # live ranks must hold the masked mean over the survivors
+    want = x[n_dead:].mean(0)
+    np.testing.assert_allclose(np.asarray(val)[n_ranks - 1], want,
+                               atol=1e-5)
+    assert float(np.asarray(cnt)[n_ranks - 1]) == n_ranks - n_dead
+    return trace, report
+
+
+def degradation_rows() -> list[tuple]:
+    """Simulated masked-sync t_end at 0/1/2/4 dead of 16 — monotone,
+    no >2x adjacent cliff."""
+    compiled, x = _masked_program()
+    _, healthy = _faulted_run(compiled, x, 0, 0.0)
+    timeout = 0.25 * healthy.t_end
+
+    out, prev = [], None
+    for n_dead, tag in DEAD_STEPS:
+        _, report = _faulted_run(compiled, x, n_dead, timeout)
+        t = report.t_end
+        if prev is not None:
+            assert t >= prev * 0.999, \
+                f"degradation not monotone at {tag}: {prev} -> {t}"
+            assert t <= 2.0 * prev, \
+                f"degradation cliff at {tag}: {prev} -> {t}"
+        prev = t
+        out.append((f"elastic_sync_dead_{tag}", t * 1e6,
+                    f"n_dead={n_dead},n_live={N_RANKS - n_dead}"
+                    f",timeout_us={timeout * 1e6:.2f}"))
+    return out
+
+
+def rows() -> list[tuple]:
+    return overhead_rows() + recompile_rows() + degradation_rows()
+
+
+def record(computed_rows: list | None = None) -> dict:
+    """BENCH_elastic.json payload: every row's value, plus
+    ``name.speedup`` for rows carrying one (the recompile-reuse gate) —
+    same shape ``check_regression.py`` consumes."""
+    out: dict = {}
+    for name, val, derived in (computed_rows if computed_rows is not None
+                               else rows()):
+        out[name] = round(float(val), 6)
+        for part in str(derived).split(","):
+            k, _, v = part.partition("=")
+            if k == "speedup":
+                try:
+                    out[f"{name}.speedup"] = round(float(v), 4)
+                except ValueError:
+                    pass
+    return out
+
+
+def write_trace(path: str = TRACE_PATH) -> str:
+    """The 4-dead-of-16 masked sync timeline, written as the Perfetto
+    CI artifact."""
+    from repro import obs
+
+    compiled, x = _masked_program()
+    _, healthy = _faulted_run(compiled, x, 0, 0.0)
+    trace, _ = _faulted_run(compiled, x, 4, 0.25 * healthy.t_end)
+    return obs.timeline.save(path, trace, compiled.plan)
+
+
+if __name__ == "__main__":
+    print("name,value,derived")
+    for name, val, derived in rows():
+        print(f"{name},{val},{derived}")
+    print(write_trace())

@@ -17,9 +17,12 @@ analytic switch latency from the dataplane simulator),
 ``BENCH_obs.json`` (instrumentation overhead + drift-watchdog
 precision), ``BENCH_serve.json`` (compiled serving data path:
 decode-program vs per-op-ring switch time, fused MoE combine, and the
-measured compiled-vs-plain decode wall-clock) and
-``BENCH_sync64.trace.json`` (the 64-leaf sync Perfetto timeline) so CI
-can record the trajectories as artifacts.
+measured compiled-vs-plain decode wall-clock),
+``BENCH_elastic.json`` (bounded-staleness sync: masked overhead at zero
+faults, recompile reuse on membership change, and the dead-rank
+degradation curve), ``BENCH_sync64.trace.json`` (the 64-leaf sync
+Perfetto timeline) and ``BENCH_faults.trace.json`` (the worst-case
+faulted sync timeline) so CI can record the trajectories as artifacts.
 """
 
 import json
@@ -30,6 +33,7 @@ CGRA_JSON_PATH = "BENCH_cgra.json"
 TUNE_JSON_PATH = "BENCH_tune.json"
 OBS_JSON_PATH = "BENCH_obs.json"
 SERVE_JSON_PATH = "BENCH_serve.json"
+ELASTIC_JSON_PATH = "BENCH_elastic.json"
 
 
 def main() -> None:
@@ -97,6 +101,12 @@ def main() -> None:
     serve_rows = serve.rows()
     rows += serve_rows
 
+    # elastic fault tolerance: masked-sync overhead gate, topology-change
+    # recompile reuse, simulated dead-rank degradation curve
+    from benchmarks import elastic
+    elastic_rows = elastic.rows()
+    rows += elastic_rows
+
     print("name,us_per_call,derived")
     for name, us, derived in rows:
         print(f"{name},{us:.2f},{derived}")
@@ -148,9 +158,17 @@ def main() -> None:
             f.write("\n")
         print(f"wrote {SERVE_JSON_PATH}", file=sys.stderr)
 
-        # the Perfetto-loadable timeline of the 64-leaf sync, uploaded
-        # next to the BENCH_*.json trajectories
+        with open(ELASTIC_JSON_PATH, "w") as f:
+            json.dump(elastic.record(elastic_rows), f, indent=2,
+                      sort_keys=True)
+            f.write("\n")
+        print(f"wrote {ELASTIC_JSON_PATH}", file=sys.stderr)
+
+        # the Perfetto-loadable timelines: the 64-leaf sync and the
+        # worst-case faulted sync, uploaded next to the BENCH_*.json
+        # trajectories
         print(f"wrote {obs.write_trace()}", file=sys.stderr)
+        print(f"wrote {elastic.write_trace()}", file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -25,7 +25,7 @@ __all__ = [
     "CGRADevice", "HostFallback", "PAPER_CGRA", "Placement",
     "placement_rate", "route_through",
     # lazy (PEP 562):
-    "PlaceCGRA", "place_stage", "SwitchSim", "SimReport",
+    "PlaceCGRA", "place_stage", "SwitchSim", "SimReport", "FaultPlan",
 ]
 
 _LAZY = {
@@ -35,6 +35,7 @@ _LAZY = {
     "trace_body": "repro.cgra.mapper",
     "SwitchSim": "repro.cgra.simulate",
     "SimReport": "repro.cgra.simulate",
+    "FaultPlan": "repro.cgra.simulate",
 }
 
 

@@ -55,6 +55,46 @@ Array = np.ndarray
 # ---------------------------------------------------------------------------
 
 @dataclasses.dataclass(frozen=True)
+class FaultPlan:
+    """Injected faults for a :class:`SwitchSim` run.
+
+    ``dead`` ranks are *endpoint-dead*: the switch port still forwards
+    (the fabric is alive, so the data path and every buffer shape are
+    unchanged — a masked program zeroes their stale contribution via the
+    alive input), but the rank is spliced out of ring timing — it never
+    injects, never delays a hop, and each ring contracts to its live
+    members.  Live ranks pay ``detect_timeout_s`` per dead rank once at
+    run start (the deadline the runtime waits before masking), which is
+    what makes the sync-time-vs-dead-fraction curve a *line* — detection
+    cost in, hop savings out — instead of a cliff.
+
+    ``straggler_s`` maps rank → extra seconds that rank adds to every
+    hop it receives (the mean of its delay distribution).
+    ``degraded_links`` maps axis → k: links on that axis run at 1/k
+    bandwidth with k× link latency.
+    """
+
+    dead: frozenset = frozenset()
+    straggler_s: tuple = ()            # ((rank, seconds), ...)
+    degraded_links: tuple = ()         # ((axis, k), ...)
+    detect_timeout_s: float = 0.0
+
+    def __post_init__(self):
+        object.__setattr__(self, "dead", frozenset(self.dead))
+        object.__setattr__(self, "straggler_s",
+                           tuple(sorted(dict(self.straggler_s).items())))
+        object.__setattr__(self, "degraded_links",
+                           tuple(sorted(dict(self.degraded_links).items())))
+        for ax, k in self.degraded_links:
+            if k < 1:
+                raise ValueError(
+                    f"degraded link on {ax!r}: k must be ≥1, got {k}")
+
+    def __bool__(self) -> bool:
+        return bool(self.dead or self.straggler_s or self.degraded_links)
+
+
+@dataclasses.dataclass(frozen=True)
 class SimStage:
     kind: str
     axis: str
@@ -89,6 +129,10 @@ class SimReport:
     # netmodel.program_time of the same plan — the analytic overlap
     # model's prediction for t_end (None without a compile topology)
     t_program_model: Optional[float] = None
+    # per-rank completion timestamps (s) — what deadline verdicts and the
+    # drift watchdog's per-rank span pools read; dead ranks report their
+    # frozen clock
+    rank_t_end: tuple = ()
 
     @property
     def t_sim(self) -> float:
@@ -130,7 +174,8 @@ class SwitchSim:
     honored) or a ``{axis: size}`` mapping (all axes on the fast tier).
     """
 
-    def __init__(self, topology, *, device=PAPER_CGRA):
+    def __init__(self, topology, *, device=PAPER_CGRA,
+                 faults: Optional[FaultPlan] = None):
         if hasattr(topology, "axes"):          # compiler.Topology
             self.axis_names = [a.name for a in topology.axes]
             self.sizes = {a.name: int(a.size) for a in topology.axes}
@@ -145,6 +190,33 @@ class SwitchSim:
         self.grid = tuple(self.sizes[a] for a in self.axis_names)
         self.n_ranks = int(np.prod(self.grid))
         self.device = device
+        # healthy-fabric params, frozen before fault injection: t_model
+        # predictions price against these, so a degraded link shows up as
+        # sim/model drift the watchdog can attribute to the axis instead
+        # of silently re-baselining the prediction onto the fault
+        self.model_nets = dict(self.nets)
+        self.faults = faults if faults else None
+        self._alive = np.ones((self.n_ranks,), bool)
+        self._straggler = np.zeros((self.n_ranks,), np.float64)
+        if self.faults is not None:
+            bad = [r for r in self.faults.dead
+                   if not 0 <= r < self.n_ranks]
+            bad += [r for r, _ in self.faults.straggler_s
+                    if not 0 <= r < self.n_ranks]
+            if bad:
+                raise ValueError(
+                    f"fault ranks {sorted(set(bad))} out of range "
+                    f"0..{self.n_ranks - 1}")
+            for r in self.faults.dead:
+                self._alive[r] = False
+            for r, s in self.faults.straggler_s:
+                self._straggler[r] = float(s)
+            for ax, k in self.faults.degraded_links:
+                if ax not in self.nets:
+                    raise ValueError(f"degraded link on unknown axis {ax!r}")
+                p = self.nets[ax]
+                self.nets[ax] = dataclasses.replace(
+                    p, bw=p.bw / k, fpga_link=p.fpga_link * k)
         # per-rank injection-serialization account of the wave branch
         # currently executing (set by run() around each stage)
         self._cur_ser: Optional[Array] = None
@@ -194,14 +266,27 @@ class SwitchSim:
         wave overlap their propagation and compute, but their injection
         contends at the port, so the wave merge re-exposes the
         non-critical branches' serialization (see :meth:`run`).
+
+        Under a :class:`FaultPlan`, each ring contracts to its live
+        members (dead ports are cut through, so a lap needs fewer hops:
+        the step count caps at live−1), stragglers add their per-hop
+        delay to every hop they receive, and dead ranks neither inject
+        nor advance.
         """
-        for _ in range(max(steps, 0)):
-            snap = clock.copy()
-            for g in self._rings(axis):
-                prev = np.roll(g, 1)
-                clock[g] = np.maximum(snap[g], snap[prev]) + t_hop
-        if ser_hop and steps > 0 and self._cur_ser is not None:
-            self._cur_ser += steps * ser_hop
+        faulty = self.faults is not None
+        for g in self._rings(axis):
+            gl = g[self._alive[g]] if faulty else g
+            n_live = len(gl)
+            if n_live < 2:
+                continue
+            eff = min(max(steps, 0), n_live - 1) if faulty else max(steps, 0)
+            extra = self._straggler[gl] if faulty else 0.0
+            for _ in range(eff):
+                vals = clock[gl]
+                clock[gl] = np.maximum(vals, np.roll(vals, 1)) \
+                    + t_hop + extra
+            if ser_hop and eff > 0 and self._cur_ser is not None:
+                self._cur_ser[gl] += eff * ser_hop
 
     def _advance_local(self, clock: Array, t: float) -> None:
         clock += t
@@ -242,6 +327,13 @@ class SwitchSim:
         waves = plan.waves if plan is not None \
             else tuple((i,) for i in range(len(compiled.stages)))
         clock = np.zeros((self.n_ranks,), np.float64)
+        if self.faults is not None and self.faults.dead:
+            # every live rank waits out the detection deadline once per
+            # dead peer before masking it — the linear term of the
+            # degradation curve
+            n_dead = len(self.faults.dead)
+            clock[self._alive] += n_dead * self.faults.detect_timeout_s
+            _obs.RECORDER.count("sim.dead_ranks", n_dead)
         rows: dict[int, SimStage] = {}
         for wi, wave in enumerate(waves):
             branch: dict[str, Array] = {}
@@ -293,8 +385,11 @@ class SwitchSim:
         topo = getattr(compiled, "topology", None)
         if plan is not None and topo is not None:
             t_prog = netmodel.program_time(plan, topo)
+        t_end = float(clock[self._alive].max()) \
+            if self._alive.any() else float(clock.max())
         report = SimReport([rows[i] for i in sorted(rows)],
-                           dict(self.sizes), float(clock.max()), t_prog)
+                           dict(self.sizes), t_end, t_prog,
+                           rank_t_end=tuple(float(t) for t in clock))
         rec = _obs.RECORDER
         if rec.enabled:
             rec.count("sim.runs")
@@ -316,7 +411,7 @@ class SwitchSim:
             m = int(st.ir.bytes_in)
         axis = st.axis
         n = self.sizes.get(axis, 1)
-        p = self.nets.get(axis, netmodel.PAPER)
+        p = self.model_nets.get(axis, netmodel.PAPER)
         ratio = 1.0
         for nd in st.ir.nodes:
             if nd.op.codec is not IDENTITY:

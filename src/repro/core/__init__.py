@@ -61,7 +61,7 @@ Quick taste of the traced API (usually imported as ``acis``)::
 from repro.core.types import (ADD, MAX, MIN, PROD, AcisType, Monoid,
                               TYPE1_MONOIDS, tree_monoid)
 from repro.core.api import (BACKENDS, CollectiveConfig, CollectiveEngine,
-                            make_engine)
+                            RecompileReport, make_engine)
 from repro.core.program import (AllGather, AllToAll, Bcast, DagNode,
                                 DagProgram, ErrorFeedback, Map, Node, Reduce,
                                 ReduceScatter, Scan, SwitchProgram, Wire)
@@ -69,18 +69,19 @@ from repro.core.compiler import (AxisSpec, CompiledProgram, Stage, Topology,
                                  compile_program, compile_rank_local)
 from repro.core.executor import ExecutionPlan, build_plan
 from repro.core.tracing import (Value, all_gather, all_to_all, bcast,
-                                ef_reduce, reduce, reduce_scatter, scan,
-                                trace, wire)
+                                ef_reduce, masked_reduce, reduce,
+                                reduce_scatter, scan, trace, wire)
 from repro.core.tracing import map  # noqa: A004  (traced op, by design)
 
 __all__ = [
     "ADD", "MAX", "MIN", "PROD", "AcisType", "Monoid", "TYPE1_MONOIDS",
     "tree_monoid", "BACKENDS", "CollectiveConfig", "CollectiveEngine",
+    "RecompileReport",
     "make_engine", "AllGather", "AllToAll", "Bcast", "Map", "Node", "Reduce",
     "ReduceScatter", "Scan", "SwitchProgram", "Wire", "DagNode", "DagProgram",
     "ErrorFeedback", "AxisSpec", "Topology",
     "CompiledProgram", "Stage", "compile_program", "compile_rank_local",
     "ExecutionPlan", "build_plan",
     "Value", "trace", "map", "reduce", "reduce_scatter", "all_gather",
-    "all_to_all", "scan", "bcast", "wire", "ef_reduce",
+    "all_to_all", "scan", "bcast", "wire", "ef_reduce", "masked_reduce",
 ]

@@ -71,6 +71,35 @@ def live_axis_sizes(axes, known: Optional[dict] = None) -> dict:
 
 
 @dataclasses.dataclass(frozen=True)
+class RecompileReport:
+    """What :meth:`CollectiveEngine.recompile` reused vs rebuilt.
+
+    Shape-preserving topology deltas (rank dropout absorbed by the alive
+    mask, ×k link degradation) must report 100% reuse: the mask is a
+    runtime program input, so membership flips never retrace, and the
+    arenas are keyed by compiled-program identity.
+    """
+
+    programs_reused: int = 0
+    programs_rebuilt: int = 0
+    arenas_reused: int = 0
+    arenas_rebuilt: int = 0
+    shape_preserving: bool = True
+
+    @property
+    def full_recompile(self) -> bool:
+        return self.programs_rebuilt > 0
+
+    @property
+    def reuse_frac(self) -> float:
+        total = (self.programs_reused + self.programs_rebuilt
+                 + self.arenas_reused + self.arenas_rebuilt)
+        if total == 0:
+            return 1.0
+        return (self.programs_reused + self.arenas_reused) / total
+
+
+@dataclasses.dataclass(frozen=True)
 class CollectiveConfig:
     backend: str = "xla"
     # wire codec for the compressed paths: int8 | bf16 | fp8
@@ -218,9 +247,31 @@ class CollectiveEngine:
 
     # -- the gradient-sync transport -----------------------------------------
 
+    def _local_alive(self, membership) -> jax.Array:
+        """This rank's liveness flag (float32 scalar) from a membership
+        view — a :class:`repro.elastic.Membership`, a length-``n_ranks``
+        mask array (rank = ``outer_index * |inner| + inner_index``), or
+        an already-rank-local scalar.  Indexed live via ``axis_index``,
+        so the mask is runtime data: membership flips never retrace."""
+        if hasattr(membership, "mask_array"):
+            mask = jnp.asarray(membership.mask_array(jnp.float32))
+        else:
+            mask = jnp.asarray(membership, jnp.float32)
+        if mask.ndim == 0:
+            return mask.astype(jnp.float32)
+        idx = lax.axis_index(self.inner_axis)
+        if self.outer_axis is not None:
+            try:
+                idx = idx + lax.axis_size(self.inner_axis) \
+                    * lax.axis_index(self.outer_axis)
+            except Exception:    # outer axis configured but not on the mesh
+                pass
+        return mask.reshape(-1)[idx].astype(jnp.float32)
+
     def gradient_sync(self, grads: PyTree, state: PyTree,
                       n_total: Optional[int] = None, *,
-                      arenas: Optional[tuple] = None):
+                      arenas: Optional[tuple] = None,
+                      membership=None):
         """Mean-all-reduce a gradient pytree over the DP axes.
 
         Returns (synced_grads, new_state) — or (synced_grads, new_state,
@@ -235,6 +286,16 @@ class CollectiveEngine:
         turns the multi-axis reduce into the hierarchical RS/AR/AG
         schedule when an outer axis exists.
 
+        ``membership`` switches to bounded-staleness sync: dead ranks'
+        contributions are masked to the monoid identity and the mean is
+        renormalized by the live count, which rides in the *same* flat
+        ring buffer as the payload (``tracing.masked_reduce`` — one
+        collective launch, not two).  Accepts a
+        :class:`repro.elastic.Membership`, a per-rank mask array, or a
+        rank-local scalar; the mask is a runtime input, so changing it
+        never recompiles.  ``n_total`` is ignored on the masked path —
+        the live count is the divisor.
+
         ``arenas`` are the persistent bucket buffers from
         :meth:`init_arenas`: the Coalesce bucket packs then write leaves
         into them in place instead of concatenating into fresh buffers.
@@ -246,7 +307,17 @@ class CollectiveEngine:
         if self.config.backend == "xla":
             inner, outer = self.inner_axis, self.outer_axis
             axes = (inner,) if outer is None else (inner, outer)
-            if n_total is None:
+            if membership is not None:
+                # passive-network reference: two launches (payload +
+                # count) — the analytic baseline the compiled one-ring
+                # masked path is oracled against
+                alive = self._local_alive(membership)
+                count = jnp.maximum(lax.psum(alive, axes), 1.0)
+                synced = jax.tree.map(
+                    lambda g: lax.psum(
+                        jnp.where(alive != 0, g, jnp.zeros_like(g)), axes)
+                    / count.astype(g.dtype), grads)
+            elif n_total is None:
                 synced = jax.tree.map(
                     lambda g: lax.pmean(g, axes), grads)
             else:   # same divisor override the acis paths honor
@@ -260,10 +331,13 @@ class CollectiveEngine:
             return (grads, state, arenas) if arenas is not None \
                 else (grads, state)
         avals = tuple(jax.ShapeDtypeStruct(l.shape, l.dtype) for l in leaves)
-        compiled = self._sync_program(treedef, avals, n_total)
+        compiled = self._sync_program(treedef, avals, n_total,
+                                      masked=membership is not None)
         args = tuple(leaves)
         if self.compressed:
             args = args + tuple(treedef.flatten_up_to(state))
+        if membership is not None:
+            args = args + (self._local_alive(membership),)
         if arenas is not None:
             # the donation round-trip: buffers out through the step's
             # state, back in on the next sync
@@ -282,7 +356,8 @@ class CollectiveEngine:
 
     def init_arenas(self, grads_like: PyTree, *,
                     axis_sizes: Optional[dict] = None,
-                    n_total: Optional[int] = None) -> Optional[tuple]:
+                    n_total: Optional[int] = None,
+                    masked: bool = False) -> Optional[tuple]:
         """Persistent bucket arenas for :meth:`gradient_sync` on this
         gradient pytree structure — allocated once per structure and
         cached, so repeated calls return the *same* buffers (donating
@@ -302,7 +377,7 @@ class CollectiveEngine:
         treedef = jax.tree_util.tree_structure(grads_like)
         avals = tuple(jax.ShapeDtypeStruct(l.shape, l.dtype) for l in leaves)
         compiled = self._sync_program(treedef, avals, n_total,
-                                      axis_sizes=axis_sizes)
+                                      axis_sizes=axis_sizes, masked=masked)
         # keyed by the compiled program itself (identity): two configs
         # producing different bucket layouts for the same pytree — e.g.
         # tuned vs default bucket_bytes — must not share arenas
@@ -320,9 +395,70 @@ class CollectiveEngine:
                 _obs.RECORDER.count(fresh_reason)
         return hit
 
+    def recompile(self, delta, grads_like: PyTree, *,
+                  axis_sizes: Optional[dict] = None,
+                  n_total: Optional[int] = None,
+                  masked: bool = True) -> RecompileReport:
+        """Re-resolve the compiled sync program and arenas after a
+        topology change (a :class:`repro.elastic.TopologyDelta` or any
+        object with ``shape_preserving`` / ``axis_sizes`` attributes).
+
+        Shape-preserving deltas — rank dropout absorbed by the alive
+        mask, ×k link-tier degradation — MUST hit the existing caches:
+        the mask is a runtime input (not part of any compile key) and
+        arenas are keyed by compiled-program identity, so both report
+        100% reuse.  Only a delta that moves rank-local shapes
+        (``axis_sizes`` set — e.g. a rank permanently leaving the ring)
+        compiles a fresh program and allocates fresh arenas.
+
+        The returned :class:`RecompileReport` carries the reuse/rebuild
+        counters; they are also emitted to ``obs``
+        (``recompile.programs_reused`` etc.) for the CI gate.
+        """
+        leaves = jax.tree_util.tree_leaves(grads_like)
+        if not leaves or self.config.backend == "xla":
+            return RecompileReport()
+        treedef = jax.tree_util.tree_structure(grads_like)
+        avals = tuple(jax.ShapeDtypeStruct(l.shape, l.dtype)
+                      for l in leaves)
+        sizes = dict(axis_sizes or {})
+        shape_preserving = bool(getattr(delta, "shape_preserving", True))
+        if not shape_preserving:
+            sizes.update(dict(getattr(delta, "axis_sizes", None) or {}))
+        with _obs.recording() as rec:
+            compiled = self._sync_program(
+                treedef, avals, n_total, axis_sizes=sizes or None,
+                masked=masked)
+            arenas = self.init_arenas(
+                grads_like, axis_sizes=sizes or None, n_total=n_total,
+                masked=masked)
+        prog_rebuilt = int(rec.counter("compile.cache_miss") > 0)
+        arena_rebuilt = 0 if arenas is None else int(
+            rec.counter("arena.alloc") + rec.counter("arena.realloc") > 0)
+        report = RecompileReport(
+            programs_reused=1 - prog_rebuilt,
+            programs_rebuilt=prog_rebuilt,
+            arenas_reused=0 if arenas is None else 1 - arena_rebuilt,
+            arenas_rebuilt=arena_rebuilt,
+            shape_preserving=shape_preserving)
+        _obs.RECORDER.count("recompile.programs_reused",
+                            report.programs_reused)
+        _obs.RECORDER.count("recompile.programs_rebuilt",
+                            report.programs_rebuilt)
+        _obs.RECORDER.count("recompile.arenas_reused",
+                            report.arenas_reused)
+        _obs.RECORDER.count("recompile.arenas_rebuilt",
+                            report.arenas_rebuilt)
+        _obs.RECORDER.event("engine.recompile",
+                            shape_preserving=shape_preserving,
+                            full=report.full_recompile)
+        self._last_sync = compiled
+        return report
+
     def _sync_program(self, treedef, avals: tuple,
                       n_total: Optional[int] = None, *,
-                      axis_sizes: Optional[dict] = None):
+                      axis_sizes: Optional[dict] = None,
+                      masked: bool = False):
         """Build (or fetch) the compiled gradient-sync switch program for
         one pytree structure.
 
@@ -343,7 +479,8 @@ class CollectiveEngine:
         # The config's cache_key is too — the autotuner hands back
         # configs differing only in tuned fields, and those must compile
         # to distinct programs, not collide with the default's entry.
-        key0 = (treedef, avals, n_total, tuple(sorted(sizes.items())))
+        key0 = (treedef, avals, n_total, tuple(sorted(sizes.items())),
+                masked)
         cfg_eff = cfg
         if cfg.autotune and sizes.get(inner):
             cfg_eff = self._tune_cache.get(key0)
@@ -358,7 +495,8 @@ class CollectiveEngine:
             self._last_sync = hit
             return hit
         _obs.RECORDER.count("compile.cache_miss")
-        compiled = self._build_sync(cfg_eff, avals, n_total, sizes)
+        compiled = self._build_sync(cfg_eff, avals, n_total, sizes,
+                                    masked=masked)
         self._sync_cache[key] = compiled
         self._last_sync = compiled
         return compiled
@@ -381,9 +519,19 @@ class CollectiveEngine:
             lambda c: self._build_sync(c, avals, n_total, sizes),
             key=tkey, db_path=cfg.tune_db)
 
-    def _build_sync(self, cfg, avals, n_total, sizes):
+    def _build_sync(self, cfg, avals, n_total, sizes, *,
+                    masked: bool = False):
         """Trace + compile the gradient-sync program under ``cfg`` (also
-        the candidate builder the autotune search recompiles with)."""
+        the candidate builder the autotune search recompiles with).
+
+        ``masked=True`` builds the bounded-staleness variant: one extra
+        scalar input (this rank's alive flag), per-leaf
+        ``masked_reduce`` with renormalization — the live count travels
+        in the payload's flat bucket, so the program has the same ring
+        structure (and the same stage count) as the unmasked one.  On
+        the compressed backends the masked target feeds the usual EF
+        triple and one tiny exact scalar reduce carries the live count.
+        """
         inner, outer = self.inner_axis, self.outer_axis
         compressed = self.compressed
         n_leaves = len(avals)
@@ -399,33 +547,62 @@ class CollectiveEngine:
         def _ef_target(g, r):
             return g + r.astype(g.dtype)
 
+        def _masked_ef_target(g, r, a):
+            t = g + r.astype(g.dtype)
+            return jnp.where(a != 0, t, jnp.zeros_like(t))
+
         def _ef_residual(t, delivered, r):
             return (t.astype(jnp.float32) - delivered).astype(r.dtype)
 
+        def _masked_mean(y, c):
+            return y / jnp.maximum(c, 1).astype(y.dtype)
+
         def sync(*args):
+            if masked:
+                alive = args[-1]
+                args = args[:-1]
             gs, rs = args[:n_leaves], args[n_leaves:]
             outs, news = [], []
+            cnt = None
+            if masked and compressed:
+                # the EF wire is lossy; the divisor must not be — one
+                # exact scalar ring carries the live count for all leaves
+                cnt = tracing.reduce(alive, ADD, axis="auto")
             for i in range(n_leaves):
                 if compressed:
-                    t = tracing.map(_ef_target, gs[i], rs[i],
-                                    name="ef_target")
+                    if masked:
+                        t = tracing.map(_masked_ef_target, gs[i], rs[i],
+                                        alive, name="masked_ef_target")
+                    else:
+                        t = tracing.map(_ef_target, gs[i], rs[i],
+                                        name="ef_target")
                     red, dlv = tracing.ef_reduce(
                         t, compressor=cfg.compressor,
                         topk_ratio=cfg.topk_ratio, axis="auto")
-                    outs.append(tracing.map(_mean, red, name="mean",
-                                            elementwise=True))
+                    if masked:
+                        outs.append(tracing.map(_masked_mean, red, cnt,
+                                                name="masked_mean"))
+                    else:
+                        outs.append(tracing.map(_mean, red, name="mean",
+                                                elementwise=True))
                     news.append(tracing.map(_ef_residual, t, dlv, rs[i],
                                             name="ef_residual"))
+                elif masked:
+                    red, _ = tracing.masked_reduce(gs[i], alive, ADD,
+                                                   axis="auto")
+                    outs.append(red)
                 else:
                     red = tracing.reduce(gs[i], ADD, axis="auto")
                     outs.append(tracing.map(_mean, red, name="mean",
                                             elementwise=True))
             return tuple(outs) + tuple(news)
 
+        tag = "masked," if masked else ""
         prog = tracing.trace(
-            sync, name=f"gradient_sync[{cfg.backend}x{n_leaves}]",
-            num_inputs=n_leaves * (2 if compressed else 1))
-        in_avals = avals + (avals if compressed else ())
+            sync, name=f"gradient_sync[{tag}{cfg.backend}x{n_leaves}]",
+            num_inputs=n_leaves * (2 if compressed else 1) + int(masked))
+        in_avals = avals + (avals if compressed else ()) \
+            + ((jax.ShapeDtypeStruct((), jnp.float32),) if masked else ())
         return compiler.compile_rank_local(
             prog, inner, axis_size=sizes.get(inner), config=cfg,
             in_avals=in_avals, topology=self.topology(axis_size=sizes))

@@ -395,7 +395,15 @@ class CompiledProgram:
                         codec = f"ef[{nd.op.ef.compressor}]"
             pl = st.placement.describe() if st.placement is not None \
                 else "-"
-            row = (str(i), str(wave_of.get(i, "-")), st.kind,
+            kind = st.kind
+            if kind == "map" and st.ir is not None:
+                # named epilogues (masked_pack/renorm/count, hier_pad, ...)
+                # would otherwise all print as an anonymous "map"
+                name = next((nd.op.name for nd in st.ir.nodes
+                             if nd.op.name), "")
+                if name:
+                    kind = f"map:{name}"
+            row = (str(i), str(wave_of.get(i, "-")), kind,
                    st.axis or "-", st.schedule or "-", codec, pl)
             if trace is not None:
                 meas = measured.get(i)
@@ -501,17 +509,68 @@ class CompiledProgram:
 
 # consumers that can apply a wire codec in-flight (all lower to an
 # all-reduce schedule, which takes `codec=`)
-_CODEC_SINKS = {OpKind.REDUCE, OpKind.REDUCE_SCATTER}
+_CODEC_SINKS = {OpKind.REDUCE, OpKind.REDUCE_SCATTER, OpKind.MASKED_REDUCE}
+
+
+def _masked_pack_fn(monoid) -> Callable:
+    """Legalize-side expansion of MASKED_REDUCE: mask the payload with the
+    monoid identity (``where``, not multiply — ``0 * NaN`` would poison
+    the ring) and append this rank's alive flag as one trailing lane, so
+    the live count folds in the *same* flat buffer as the payload.  Under
+    ``add`` the trailing lane reduces to the live count; under other
+    monoids it is the monoid-fold of the alive flags (renormalization is
+    add-only and rejected at trace time otherwise)."""
+    def masked_pack(x, alive):
+        a = alive.reshape(()).astype(x.dtype)
+        fill = monoid.identity(jax.ShapeDtypeStruct((x.size,), x.dtype))
+        body = jnp.where(a != 0, x.reshape(-1), fill)
+        return jnp.concatenate([body, a.reshape(1)])
+    masked_pack.masked_monoid = monoid
+    return masked_pack
 
 
 class Legalize:
-    """Canonicalize the DAG: DCE + sink WIRE nodes onto their consumer."""
+    """Canonicalize the DAG: DCE + sink WIRE nodes onto their consumer +
+    expand MASKED_REDUCE into masked_pack → REDUCE (the count lane rides
+    the payload's flat buffer — one ring, not two launches)."""
 
     name = "legalize"
 
     def run(self, dag: DagProgram, ctx: CompileContext) -> DagProgram:
         dag = self._dce(dag)
-        return self._sink_wires(dag)
+        dag = self._sink_wires(dag)
+        return self._expand_masked(dag)
+
+    @staticmethod
+    def _expand_masked(dag: DagProgram) -> DagProgram:
+        """MASKED_REDUCE(x, alive) → masked_pack MAP → REDUCE.
+
+        Runs after ``_sink_wires`` so a codec sunk onto the masked reduce
+        transfers to the emitted REDUCE (it rides the same hop the
+        payload does).  The expansion is total: MASKED_REDUCE must never
+        survive Legalize — no later pass can lower it.
+        """
+        if not any(nd.op.kind == OpKind.MASKED_REDUCE for nd in dag.nodes):
+            return dag
+        next_vid = max(
+            [dag.num_inputs - 1] + [nd.out for nd in dag.nodes]) + 1
+        nodes: list[DagNode] = []
+        for nd in dag.nodes:
+            if nd.op.kind != OpKind.MASKED_REDUCE:
+                nodes.append(nd)
+                continue
+            pack_out = next_vid
+            next_vid += 1
+            nodes.append(DagNode(
+                Node(OpKind.MAP, fn=_masked_pack_fn(nd.op.monoid),
+                     name="masked_pack", fusable=False),
+                nd.inputs, pack_out))
+            nodes.append(DagNode(
+                Node(OpKind.REDUCE, monoid=nd.op.monoid,
+                     codec=nd.op.codec, axis=nd.op.axis),
+                (pack_out,), nd.out))
+        return DagProgram(dag.num_inputs, tuple(nodes), dag.outputs,
+                          dag.name)
 
     @staticmethod
     def _dce(dag: DagProgram) -> DagProgram:
@@ -844,6 +903,58 @@ def _split_fn(offset: int, size: int) -> Callable:
     return split
 
 
+def _masked_bucket_pack_fn(sizes: tuple[int, ...], dtype: str,
+                           monoid) -> Callable:
+    """Bucket pack for masked reductions: mask every leaf with the monoid
+    identity (``where`` on the shared alive flag — the last argument) and
+    append ONE trailing count lane for the whole bucket, so k masked
+    leaves still cost one ring with a single extra element.
+
+    ``bucket_sizes`` includes the count lane (size 1); ``masked_monoid``
+    tells Emit's arena path to pre-mask the leaves before the in-place
+    writes (the arena write is otherwise raw)."""
+    def masked_bucket_pack(*args):
+        xs, alive = args[:-1], args[-1]
+        _check_pack_sizes(xs, sizes)
+        a = alive.reshape(()).astype(jnp.dtype(dtype))
+        live = a != 0
+        parts = []
+        for x in xs:
+            flat = x.reshape(-1).astype(jnp.dtype(dtype))
+            fill = monoid.identity(
+                jax.ShapeDtypeStruct(flat.shape, flat.dtype))
+            parts.append(jnp.where(live, flat, fill))
+        parts.append(a.reshape(1))
+        return jnp.concatenate(parts)
+    masked_bucket_pack.bucket_sizes = tuple(sizes) + (1,)
+    masked_bucket_pack.bucket_dtype = dtype
+    masked_bucket_pack.masked_monoid = monoid
+    return masked_bucket_pack
+
+
+def _masked_bucket_renorm_fn() -> Callable:
+    """Whole-bucket renormalize epilogue: divide the payload lanes by the
+    reduced live count (clamped — a transiently all-dead view must not
+    divide by zero) and drop the count lane.  One kernel per bucket, the
+    masked analogue of the hoisted mean epilogue."""
+    def bucket_masked_renorm(b):
+        # static slices, not int indexing: b[-1] lowers to a gather the
+        # switch CGRA cannot place (the epilogue must stay on-switch)
+        n = b.shape[-1] - 1
+        cnt = jnp.maximum(lax.slice_in_dim(b, n, n + 1, axis=-1), 1)
+        return lax.slice_in_dim(b, 0, n, axis=-1) / cnt.astype(b.dtype)
+    return bucket_masked_renorm
+
+
+def _masked_bucket_count_fn() -> Callable:
+    def bucket_masked_count(b):
+        n = b.shape[-1] - 1
+        cnt = lax.slice_in_dim(b, n, n + 1, axis=-1)
+        return jnp.maximum(cnt, jnp.asarray(1, b.dtype)).reshape(
+            b.shape[:-1])
+    return bucket_masked_count
+
+
 def _rs_pack_fn(sizes: tuple[int, ...], n: int) -> Callable:
     """Layout-aware pack for a REDUCE_SCATTER bucket.
 
@@ -925,10 +1036,11 @@ class _ReduceUnit:
     All three are elementwise across ranks and shape-preserving end to
     end, which is exactly what makes concat-then-split legal."""
 
-    kind: str                       # "reduce" | "ef" | "hier" | "rs" | "ag"
+    kind: str           # "reduce" | "ef" | "hier" | "rs" | "ag" | "masked"
     vin: int                        # the leaf value feeding the unit
     out_red: int                    # the unit's reduced output value
-    out_dlv: Optional[int]          # DELIVERED sibling output (ef only)
+    out_dlv: Optional[int]          # DELIVERED sibling output (ef only) —
+    #                                 the shared count output for "masked"
     nodes: tuple[DagNode, ...]      # claimed by this unit
     key: tuple                      # bucketing group key
     nbytes: int
@@ -936,6 +1048,9 @@ class _ReduceUnit:
     shape: tuple
     ops: dict                       # replay ops for the bucket rebuild
     dtype: str = "float32"          # leaf (= bucket) dtype
+    aux: tuple = ()                 # extra consumed vids (the masked
+    #                                 units' shared alive flag) — part of
+    #                                 the bucket's dependency footprint
 
 
 class Coalesce:
@@ -1025,6 +1140,10 @@ class Coalesce:
                                        sole_user)
                 elif nd.op.kind == OpKind.REDUCE:
                     u = self._match_reduce(nd, aval)
+                elif nd.op.kind == OpKind.MAP \
+                        and nd.op.name == "masked_pack":
+                    u = self._match_masked(nd, aval, users, out_set,
+                                           claimed, sole_user)
                 elif nd.op.kind == OpKind.MAP and nd.op.name == "hier_pad":
                     u = self._match_hier(nd, aval, sole_user)
                 elif nd.op.kind == OpKind.REDUCE_SCATTER:
@@ -1144,6 +1263,86 @@ class Coalesce:
                             "dlv": dlv.op if dlv is not None else None,
                             "outer": tuple(o.op for o in outer)}, dt)
 
+    def _match_masked(self, pack: DagNode, aval, users, out_set,
+                      claimed: set, sole_user) -> Optional[_ReduceUnit]:
+        """A whole Legalize masked-reduce chain, bucketized to stage
+        parity with the unmasked path:
+
+            masked_pack(x, alive) → [REDUCE | hier pad→RS…→AR→…AG→unpad]
+                → masked_renorm(+ masked_count)
+
+        k such units sharing (axes, monoid, codec, dtype, alive flag,
+        renormalize) collapse into ONE bucket: one masked pack with a
+        single trailing count lane, one ring, one whole-bucket renorm
+        epilogue, k splits — the masked sync costs what the unmasked
+        bucket costs plus one element.
+        """
+        x_vid, alive_vid = pack.inputs
+        if pack.out in out_set:
+            return None
+        pus = [u for u in users.get(pack.out, [])]
+        if any(u.out in claimed for u in pus):
+            return None
+        chain: tuple[DagNode, ...]
+        ops: dict
+        if len(pus) == 1 and pus[0].op.kind == OpKind.REDUCE \
+                and pus[0].op.ef is None:
+            red = pus[0]
+            chain = (red,)
+            ops = {"red": red.op}
+            red_out = red.out
+            axes_sig = (red.op.axis,)
+        elif len(pus) == 2:
+            # the LowerTopology hierarchical chain: pack.out feeds both
+            # hier_pad and (as shape donor) hier_unpad
+            pads = [u for u in pus if u.op.name == "hier_pad"]
+            unpads = [u for u in pus if u.op.name == "hier_unpad"]
+            if len(pads) != 1 or len(unpads) != 1:
+                return None
+            hu = self._match_hier(pads[0], aval, sole_user)
+            if hu is None or hu.nodes[-1] is not unpads[0]:
+                return None
+            chain = hu.nodes
+            ops = dict(hu.ops)
+            red_out = hu.out_red
+            axes_sig = (tuple(op.axis for op in ops["rs"]),
+                        ops["red"].axis)
+        else:
+            return None
+        if red_out in out_set:
+            return None
+        rus = users.get(red_out, [])
+        renorm = count = None
+        for u in rus:
+            if u.out in claimed:
+                return None
+            if (u.op.kind == OpKind.MAP and u.op.name == "masked_renorm"
+                    and len(u.inputs) == 2 and u.inputs[1] == x_vid
+                    and renorm is None):
+                renorm = u
+            elif (u.op.kind == OpKind.MAP
+                    and u.op.name == "masked_count"
+                    and len(u.inputs) == 1 and count is None):
+                count = u
+            else:
+                return None
+        if renorm is None:
+            return None
+        nbytes, size, shape, dt = self._leaf_meta(aval)
+        renormalize = bool(getattr(renorm.op.fn, "masked_renormalize",
+                                   True))
+        ops["renormalize"] = renormalize
+        ops["alive"] = alive_vid
+        red_op = ops["red"]
+        key = ("masked", axes_sig, red_op.monoid.name, red_op.codec.name,
+               dt, alive_vid, renormalize)
+        nodes = (pack,) + chain + (renorm,) \
+            + ((count,) if count is not None else ())
+        return _ReduceUnit("masked", x_vid, renorm.out,
+                           count.out if count is not None else None,
+                           nodes, key, nbytes, size, shape, ops, dt,
+                           aux=(alive_vid,))
+
     def _match_hier(self, pad: DagNode, aval,
                     sole_user) -> Optional[_ReduceUnit]:
         rs: list[DagNode] = []
@@ -1186,7 +1385,8 @@ class Coalesce:
         """The first link tier the unit's payload traverses (sizes the
         bucket): the reduce's own axis, or the innermost RS axis of a
         hierarchical chain."""
-        ax = u.ops["rs"][0].axis if u.kind == "hier" else u.ops["red"].axis
+        hier = u.kind == "hier" or (u.kind == "masked" and u.ops.get("rs"))
+        ax = u.ops["rs"][0].axis if hier else u.ops["red"].axis
         return ax if isinstance(ax, str) and ax != AUTO_AXIS else None
 
     @staticmethod
@@ -1243,7 +1443,8 @@ class Coalesce:
                     cur, cur_bytes, cur_outs = [], 0, set()
 
                 for u in pending:       # definition order throughout
-                    if any(o in anc.get(u.vin, ()) for o in cur_outs):
+                    if any(o in anc.get(v, ())
+                           for v in (u.vin,) + u.aux for o in cur_outs):
                         deferred.append(u)      # retry next round
                         continue
                     if cur and cur_bytes + u.nbytes > cap:
@@ -1278,8 +1479,10 @@ class Coalesce:
             succs: list[list[int]] = [[] for _ in buckets]
             for i, b in enumerate(buckets):
                 for j, outs in enumerate(outs_of):
-                    if i != j and any(o in anc.get(u.vin, ())
-                                      for u in b for o in outs):
+                    if i != j and any(o in anc.get(v, ())
+                                      for u in b
+                                      for v in (u.vin,) + u.aux
+                                      for o in outs):
                         succs[j].append(i)
                         indeg[i] += 1
             ready = [i for i, d in enumerate(indeg) if d == 0]
@@ -1409,7 +1612,16 @@ class Coalesce:
             us = buckets[bi]
             ins = tuple(get(u.vin) for u in us)
             ops = us[0].ops
-            if us[0].kind == "rs":
+            if us[0].kind == "masked":
+                # one masked pack over every leaf plus the shared alive
+                # flag: a single trailing count lane serves the bucket
+                ins = ins + (get(ops["alive"]),)
+                pack = emit(Node(OpKind.MAP,
+                                 fn=_masked_bucket_pack_fn(
+                                     tuple(u.size for u in us),
+                                     us[0].dtype, ops["red"].monoid),
+                                 name="bucket_pack", fusable=False), ins)
+            elif us[0].kind == "rs":
                 # scatter-axis-aligned interleave, NOT the arena concat
                 # layout — no bucket_sizes attr, so Emit never hands
                 # this pack an arena
@@ -1425,7 +1637,35 @@ class Coalesce:
                                              us[0].dtype),
                                  name="bucket_pack", fusable=False), ins)
             v_dlv = None
-            if us[0].kind in ("reduce", "rs", "ag"):
+            v_cnt = None
+            if us[0].kind == "masked":
+                if ops.get("rs"):              # hierarchical masked chain
+                    v = emit(ops["pad"], (pack,))
+                    for op in ops["rs"]:
+                        v = emit(op, (v,))
+                    v = emit(ops["red"], (v,))
+                    for op in ops["ag"]:
+                        v = emit(op, (v,))
+                    v_raw = emit(ops["unpad"], (v, pack))
+                else:
+                    v_raw = emit(ops["red"], (pack,))
+                if any(u.out_dlv is not None for u in us):
+                    v_cnt = emit(Node(OpKind.MAP,
+                                      fn=_masked_bucket_count_fn(),
+                                      name="masked_count",
+                                      fusable=False), (v_raw,))
+                if ops["renormalize"]:
+                    # the whole-bucket renorm epilogue — one kernel per
+                    # bucket, the masked analogue of the hoisted mean
+                    v_red = emit(Node(OpKind.MAP,
+                                      fn=_masked_bucket_renorm_fn(),
+                                      name="masked_renorm",
+                                      fusable=False), (v_raw,))
+                else:
+                    # splits read the payload lanes straight off the
+                    # reduced buffer; the count lane sits past them
+                    v_red = v_raw
+            elif us[0].kind in ("reduce", "rs", "ag"):
                 v_red = emit(ops["red"], (pack,))
             elif us[0].kind == "ef":
                 v_red = emit(ops["red"], (pack,))
@@ -1466,9 +1706,15 @@ class Coalesce:
                 else:
                     vmap[u.out_red] = emit(split, (v_red, orig))
                 if u.out_dlv is not None:
-                    dsplit = Node(OpKind.MAP, fn=_split_fn(off, u.size),
-                                  name="bucket_split", fusable=False)
-                    vmap[u.out_dlv] = emit(dsplit, (v_dlv, orig))
+                    if u.kind == "masked":
+                        # the live count is one shared scalar, not a
+                        # per-leaf slice
+                        vmap[u.out_dlv] = v_cnt
+                    else:
+                        dsplit = Node(OpKind.MAP,
+                                      fn=_split_fn(off, u.size),
+                                      name="bucket_split", fusable=False)
+                        vmap[u.out_dlv] = emit(dsplit, (v_dlv, orig))
                 # rs split offsets walk the per-rank chunk, not the leaf
                 off += u.size // ops["n"] if u.kind == "rs" else u.size
 
@@ -2455,12 +2701,26 @@ class Emit:
         # caller keeps across steps instead of a fresh allocation.  With
         # kernels on, the N per-leaf dynamic_update_slice calls collapse
         # into ONE arena-aliased Pallas launch (switchops "pack_combine").
+        # A masked pack (``masked_monoid`` set) masks its leaves with the
+        # monoid identity *before* the in-place writes and stores the
+        # alive flag in the trailing count lane — same layout, same
+        # arena, one extra element.
         uk = _use_kernels(ctx)
+        masked = getattr(op.fn, "masked_monoid", None)
 
-        def run(args, ax, arena=None, _f=op.fn, _sizes=sizes, _uk=uk):
+        def run(args, ax, arena=None, _f=op.fn, _sizes=sizes, _uk=uk,
+                _m=masked):
             if arena is None:
                 return (_f(*args),)
             _check_pack_sizes(args, _sizes)
+            if _m is not None:
+                alive = args[-1].reshape(()).astype(arena.dtype)
+                live = alive != 0
+                args = tuple(
+                    jnp.where(live, x.reshape(-1).astype(arena.dtype),
+                              _m.identity(jax.ShapeDtypeStruct(
+                                  (x.size,), arena.dtype)))
+                    for x in args[:-1]) + (alive.reshape(1),)
             if _uk:
                 parts = [x.reshape(-1).astype(arena.dtype) for x in args]
                 return (switchops.get("pack_combine")(

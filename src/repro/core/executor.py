@@ -167,13 +167,79 @@ def _axis_groups(stages: Sequence,
                  for ax, idxs in groups)
 
 
+def _pipeline_levels(stages: Sequence, deps: Sequence[tuple[int, ...]],
+                     levels: list[int]) -> list[int]:
+    """Software-pipeline same-axis collective chains.
+
+    Two topology-preserving refinements over the plain Kahn (ASAP)
+    levels — symmetric bucket chains (pack -> ring -> epilogue per
+    bucket, all on one axis) otherwise schedule all packs together, all
+    rings together and all epilogues together, so no map ever hides
+    under a ring:
+
+      * a wave whose collectives all share ONE axis serializes on that
+        axis's rings anyway (zero concurrency) — the extras slide to
+        later waves, staggering the chains.  Waves holding collectives
+        on several axes are left alone: their cross-axis overlap is the
+        thing the tier model rewards, and splitting them would forfeit
+        it;
+      * an axis-less stage (local compute) with a consumer slides down
+        to the wave just before its earliest consumer, landing next to
+        the staggered collective it can hide under.  Output maps keep
+        their ASAP slot.
+    """
+    n = len(stages)
+
+    def axis(i: int) -> str:
+        return getattr(stages[i], "axis", "") or ""
+
+    for _ in range(n):
+        # re-settle the dependency floor (stage order is topological)
+        for i in range(n):
+            if deps[i]:
+                levels[i] = max(levels[i],
+                                1 + max(levels[d] for d in deps[i]))
+        by_wave: dict[int, list[int]] = {}
+        for i in range(n):
+            if axis(i):
+                by_wave.setdefault(levels[i], []).append(i)
+        moved = False
+        for lv in sorted(by_wave):
+            idxs = by_wave[lv]
+            if len(idxs) < 2 or len({axis(i) for i in idxs}) != 1:
+                continue
+            for i in idxs[1:]:
+                levels[i] += 1
+            moved = True
+            break
+        if not moved:
+            break
+
+    consumers: list[list[int]] = [[] for _ in range(n)]
+    for i in range(n):
+        for d in deps[i]:
+            consumers[d].append(i)
+    for i in range(n - 1, -1, -1):
+        if axis(i) or not consumers[i]:
+            continue
+        tgt = min(levels[c] for c in consumers[i]) - 1
+        if tgt > levels[i]:
+            levels[i] = tgt
+
+    # compress any emptied levels
+    remap = {lv: w for w, lv in enumerate(sorted(set(levels)))}
+    return [remap[lv] for lv in levels]
+
+
 def build_plan(stages: Sequence, num_inputs: int,
                outputs: tuple[int, ...]) -> ExecutionPlan:
     """Derive the dependency edges and concurrency waves for ``stages``.
 
     A stage depends on the stage producing each of its input values;
     values below ``num_inputs`` are program inputs (no producer).  Wave
-    assignment is the Kahn level: 1 + the max level of any dependency.
+    assignment starts from the Kahn level (1 + the max level of any
+    dependency) and is then refined by :func:`_pipeline_levels` to
+    stagger same-axis collective chains.
     """
     producer: dict[int, int] = {}
     for i, st in enumerate(stages):
@@ -189,6 +255,7 @@ def build_plan(stages: Sequence, num_inputs: int,
         ds = sorted({producer[v] for v in st.in_vids if v in producer})
         deps.append(tuple(ds))
         levels.append(1 + max((levels[d] for d in ds), default=-1))
+    levels = _pipeline_levels(stages, deps, levels)
     n_waves = (max(levels) + 1) if levels else 0
     waves = tuple(tuple(i for i, l in enumerate(levels) if l == w)
                   for w in range(n_waves))

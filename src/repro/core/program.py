@@ -33,6 +33,13 @@ Node vocabulary (the "SPU instruction set" at graph granularity):
   DELIVERED            — what the lossy wire delivered of *this rank's*
                          contribution (the error-feedback sibling of an
                          ``ef`` REDUCE; pairs into one look-aside stage)
+  MASKED_REDUCE(m)     — bounded-staleness all-reduce of ``(x, alive)``:
+                         ranks whose alive flag is 0 contribute the monoid
+                         identity, and the live count rides in the *same*
+                         flat buffer as the payload (one ring, not two).
+                         Legalize expands it to masked_pack → REDUCE, so
+                         downstream passes bucket/overlap/place it like
+                         any other reduce.
 
 Every collective op additionally carries an ``axis``: ``None`` means "the
 engine's default axis", ``"auto"`` means "all data-parallel axes of the
@@ -61,11 +68,13 @@ class OpKind(enum.Enum):
     BCAST = "bcast"
     WIRE = "wire"
     DELIVERED = "delivered"
+    MASKED_REDUCE = "masked_reduce"
 
 
 COLLECTIVE_KINDS = {
     OpKind.REDUCE, OpKind.REDUCE_SCATTER, OpKind.ALLGATHER,
     OpKind.ALLTOALL, OpKind.SCAN, OpKind.BCAST, OpKind.DELIVERED,
+    OpKind.MASKED_REDUCE,
 }
 
 # axis field: None (engine default), "auto" (all DP axes of the topology),
@@ -113,7 +122,8 @@ class Node:
         base = self.kind.value
         if self.kind == OpKind.MAP and self.name:
             base = f"map:{self.name}"
-        elif self.kind in (OpKind.REDUCE, OpKind.REDUCE_SCATTER, OpKind.SCAN):
+        elif self.kind in (OpKind.REDUCE, OpKind.REDUCE_SCATTER, OpKind.SCAN,
+                           OpKind.MASKED_REDUCE):
             base = f"{base}:{self.monoid.name}"
             if self.ef is not None:
                 base += f"+ef[{self.ef.compressor}]"
@@ -222,6 +232,11 @@ class DagProgram:
             if nd.op.kind == OpKind.MAP:
                 if not nd.inputs:
                     raise ValueError("map takes at least one input, got 0")
+            elif nd.op.kind == OpKind.MASKED_REDUCE:
+                if len(nd.inputs) != 2:
+                    raise ValueError(
+                        "masked_reduce takes exactly (x, alive), got "
+                        f"{len(nd.inputs)} inputs")
             elif len(nd.inputs) != 1:
                 raise ValueError(
                     f"{nd.op.kind.value} takes exactly one input, "

@@ -25,26 +25,70 @@ hop) is what the pass pipeline emits for a multi-axis reduce.
 
 from __future__ import annotations
 
+import collections
+import os
+import warnings
 from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
 from jax import lax
 
-from repro.core import collectives
 from repro.core.types import ADD, Monoid
 from repro.core.wire import IDENTITY, WireCodec
+from repro.obs import metrics as _obs
 
 PyTree = Any
 
-# (inner, outer, monoid.name, codec.name, mean) → CompiledProgram.
+# (inner, outer, monoid.name, codec.name, mean, shapes, …) → CompiledProgram.
 # Compiling is trace-time-only Python, but a train step may call this per
 # gradient leaf on every retrace — don't re-run the 5-pass pipeline each
 # time.  Keyed by *names* so per-call codec instances (int8_codec() is
 # deliberately fresh per call) still hit; two distinct codecs sharing a
 # name would collide, which no current codec constructor allows for
 # different behaviour.
-_COMPILE_CACHE: dict = {}
+#
+# Bounded LRU: a long-running serving process sees an open-ended stream of
+# (shape, dtype, mesh-size) keys, and each entry pins a jitted executable —
+# unbounded growth is a slow leak.  Least-recently-used entries are evicted
+# past the size knob; evictions are counted so the leak is observable
+# (``topology.compile_cache_evicted``).
+_COMPILE_CACHE: "collections.OrderedDict" = collections.OrderedDict()
+
+_COMPILE_CACHE_SIZE = int(os.environ.get("ACIS_TOPOLOGY_CACHE_SIZE", "128"))
+
+
+def compile_cache_size() -> int:
+    return _COMPILE_CACHE_SIZE
+
+
+def set_compile_cache_size(n: int) -> int:
+    """Set the LRU capacity (``$ACIS_TOPOLOGY_CACHE_SIZE`` seeds the
+    default); returns the previous value.  Shrinking evicts immediately."""
+    global _COMPILE_CACHE_SIZE
+    prev, _COMPILE_CACHE_SIZE = _COMPILE_CACHE_SIZE, int(n)
+    _cache_trim()
+    return prev
+
+
+def _cache_get(key):
+    hit = _COMPILE_CACHE.get(key)
+    if hit is not None:
+        _COMPILE_CACHE.move_to_end(key)
+    return hit
+
+
+def _cache_put(key, compiled):
+    _COMPILE_CACHE[key] = compiled
+    _COMPILE_CACHE.move_to_end(key)
+    _cache_trim()
+    return compiled
+
+
+def _cache_trim():
+    while len(_COMPILE_CACHE) > max(_COMPILE_CACHE_SIZE, 0):
+        _COMPILE_CACHE.popitem(last=False)
+        _obs.RECORDER.count("topology.compile_cache_evicted")
 
 
 def hierarchical_all_reduce(
@@ -83,7 +127,7 @@ def hierarchical_all_reduce(
     key = (inner_axis, outer_axis, monoid.name, outer_codec.name, mean,
            tuple(x.shape), str(x.dtype), tuple(sorted(sizes.items())),
            engine.config.cache_key())
-    compiled = _COMPILE_CACHE.get(key)
+    compiled = _cache_get(key)
     if compiled is None:
 
         def _mean(y):
@@ -100,9 +144,9 @@ def hierarchical_all_reduce(
             r = tracing.reduce(v, monoid, axis="auto")
             return tracing.map(_mean, r, name="mean") if mean else r
 
-        compiled = _COMPILE_CACHE[key] = engine.compile(
+        compiled = _cache_put(key, engine.compile(
             prog, in_avals=(jax.ShapeDtypeStruct(x.shape, x.dtype),),
-            axis_size=sizes or None)
+            axis_size=sizes or None))
     return compiled(x)[0]
 
 
@@ -117,17 +161,40 @@ def masked_all_reduce(
     treated as missing (their contribution masked to the identity) and the
     mean is renormalized by the live count.
 
-    This is the algorithmic half of bounded-staleness sync: on real
-    hardware the runtime flags ranks that missed the deadline; here `alive`
-    is injected by the fault-injection tests.  Returns (mean, live_count).
+    .. deprecated::
+        Thin wrapper over the compiled :func:`repro.core.tracing.
+        masked_reduce` path — the live count now rides in the payload's
+        flat ring buffer (one collective launch; the old spelling issued a
+        second scalar all-reduce for the count).  New code should call
+        ``tracing.masked_reduce`` inside a traced program, or
+        ``engine.gradient_sync(..., membership=)`` for the sync path.
+
+    Returns (mean, live_count); the count is clamped to ≥1 so a transient
+    all-dead view cannot divide by zero.
     """
-    contrib = jnp.where(alive, x, jnp.zeros_like(x))
-    total = collectives.all_reduce(contrib, axis_name, ADD)
-    count = collectives.all_reduce(
-        alive.astype(jnp.float32).reshape(()), axis_name, ADD)
-    count = jnp.maximum(count, 1.0)
-    if renormalize:
-        total = total / count.astype(total.dtype)
+    warnings.warn(
+        "topology.masked_all_reduce is deprecated: use tracing."
+        "masked_reduce (compiled, one launch) or gradient_sync("
+        "membership=...)", DeprecationWarning, stacklevel=2)
+    from repro.core import api, tracing
+
+    sizes = api.live_axis_sizes((axis_name,))
+    engine = api.make_engine("acis", inner_axis=axis_name)
+    key = ("masked", axis_name, renormalize, tuple(x.shape), str(x.dtype),
+           tuple(sorted(sizes.items())), engine.config.cache_key())
+    compiled = _cache_get(key)
+    if compiled is None:
+
+        def prog(v, a):
+            return tracing.masked_reduce(v, a, ADD, axis=axis_name,
+                                         renormalize=renormalize)
+
+        compiled = _cache_put(key, engine.compile(
+            prog,
+            in_avals=(jax.ShapeDtypeStruct(x.shape, x.dtype),
+                      jax.ShapeDtypeStruct((), jnp.float32)),
+            axis_size=sizes or None))
+    total, count = compiled(x, jnp.asarray(alive, jnp.float32).reshape(()))
     return total, count
 
 

@@ -26,6 +26,9 @@ import builtins
 import inspect
 from typing import Callable, Optional, Union
 
+import jax.numpy as jnp
+from jax import lax
+
 from repro.core.program import (Axis, DagNode, DagProgram, ErrorFeedback,
                                 Node, OpKind)
 from repro.core.types import ADD, Monoid
@@ -204,6 +207,74 @@ def ef_reduce(x: Value, *, compressor: str = "int8",
     red = _unary("ef_reduce", Node(OpKind.REDUCE, ef=ef, axis=axis), x)
     dlv = _unary("ef_reduce", Node(OpKind.DELIVERED, ef=ef, axis=axis), x)
     return red, dlv
+
+
+def _masked_renorm_fn(renormalize: bool) -> Callable:
+    """Unpack the ``[size+1]`` masked-reduce buffer back to the payload
+    shape, dividing by the live count when renormalizing.  ``orig`` is the
+    pre-reduce value — the runtime shape donor, like the compiler's
+    ``_unpad_like``."""
+
+    def masked_renorm(packed, orig):
+        # static slices, not int indexing — packed[-1] lowers to a
+        # gather the switch CGRA cannot place
+        n = packed.shape[-1] - 1
+        body = lax.slice_in_dim(packed, 0, n, axis=-1)
+        if renormalize:
+            cnt = jnp.maximum(
+                lax.slice_in_dim(packed, n, n + 1, axis=-1), 1)
+            body = body / cnt.astype(body.dtype)
+        return body.reshape(orig.shape)
+    masked_renorm.masked_renormalize = renormalize
+    return masked_renorm
+
+
+def _masked_count_fn():
+    def masked_count(packed):
+        # clamped so a (transient) all-dead view cannot divide by zero —
+        # parity with the deprecated topology.masked_all_reduce contract
+        n = packed.shape[-1] - 1
+        cnt = lax.slice_in_dim(packed, n, n + 1, axis=-1)
+        return jnp.maximum(cnt, jnp.asarray(1, packed.dtype)).reshape(
+            packed.shape[:-1])
+    return masked_count
+
+
+def masked_reduce(x: Value, alive: Value, monoid: Monoid = ADD, *,
+                  axis: Axis = None,
+                  renormalize: bool = True) -> tuple[Value, Value]:
+    """Bounded-staleness all-reduce: ranks with ``alive == 0`` contribute
+    the monoid identity, and the live count travels in the *same* flat
+    ring buffer as the payload — one collective launch, not two.
+
+    ``alive`` is this rank's liveness flag (scalar, nonzero = alive), a
+    runtime input — changing the mask never retraces or recompiles.
+    Returns ``(value, count)``: the masked reduction (renormalized by the
+    live count when ``renormalize=True``, which requires the ``add``
+    monoid — masked-mean semantics) and the clamped live count
+    ``max(sum(alive), 1)``.  The count lane folds under the same monoid
+    as the payload (it shares the ring), so for non-``add`` monoids it
+    degrades to a clamped any-alive flag rather than a sum.  Drop
+    ``count`` and DCE removes its node.
+
+    The compiler expands this into a ``masked_pack`` map feeding a
+    standard REDUCE over ``axis``, so it buckets in Coalesce, overlaps in
+    the executor, and places on the CGRA like every other reduce.
+    """
+    if renormalize and monoid.name != "add":
+        raise ValueError(
+            "renormalize=True divides the total by the live count, which "
+            f"is only meaningful for the add monoid, got {monoid.name!r}")
+    t = _current("masked_reduce")
+    packed = t.emit(
+        Node(OpKind.MASKED_REDUCE, monoid=monoid, axis=axis), (x, alive))
+    value = t.emit(
+        Node(OpKind.MAP, fn=_masked_renorm_fn(renormalize),
+             name="masked_renorm", fusable=False), (packed, x))
+    count = t.emit(
+        Node(OpKind.MAP, fn=_masked_count_fn(),
+             name="masked_count", fusable=False), (packed,))
+    return value, count
 
 
 def wire(codec: WireCodec, x: Value) -> Value:

@@ -38,7 +38,7 @@ __all__ = [
     "metrics", "spans", "timeline", "drift", "report",
     "Recorder", "NullRecorder", "null_recorder", "current", "install",
     "recording", "StageSpan", "chrome_trace",
-    "DriftWatchdog", "DriftAlert", "RunReport",
+    "DriftWatchdog", "DriftAlert", "DriftVerdict", "RunReport",
 ]
 
 _LAZY = {
@@ -46,6 +46,7 @@ _LAZY = {
     "report": "repro.obs.report",
     "DriftWatchdog": "repro.obs.drift",
     "DriftAlert": "repro.obs.drift",
+    "DriftVerdict": "repro.obs.drift",
     "RunReport": "repro.obs.report",
 }
 

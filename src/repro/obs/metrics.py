@@ -51,9 +51,23 @@ serve.program_cache_hit/  counter     serve.collectives.SwitchProgramCache
 train.steps               counter     train step wrapper (recorder= passed)
 train.step_s              histogram   per-step seconds (enabled only)
 drift.observations        counter     obs.drift.DriftWatchdog.observe
+drift.rank_observations   counter     watchdog per-rank span pools
 drift.flagged             counter     watchdog keys past threshold
+drift.rank_local/         counter     local verdicts (sick rank / degraded
+  link_local                          link) — reported, refit suppressed
 drift.refit_recommended   event       watchdog re-fit recommendation
 tune.fit                  event       fit residual/stage count per fit
+elastic.deadline_miss     counter     sync_with_deadline ranks past deadline
+elastic.retry             counter     sync_with_deadline masked retries
+elastic.rank_dropped/     counter     Membership.delta transitions
+  rank_restored
+recompile.programs_reused counter     engine.recompile cache outcomes
+  /_rebuilt
+recompile.arenas_reused/  counter     engine.recompile arena outcomes
+  _rebuilt
+topology.compile_cache_   counter     bounded LRU evictions from the
+  evicted                             process-wide topology compile cache
+sim.dead_ranks            counter     SwitchSim FaultPlan dead ranks per run
 ========================  ==========  =====================================
 """
 

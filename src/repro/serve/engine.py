@@ -83,35 +83,60 @@ class SLOPolicy:
     to the analytic ``program_time`` of the compiled decode/prefill
     programs — the prefill-vs-decode decision the compiled path makes
     possible.
+
+    Deadline checks run BEFORE the prefill-cap defer: a request whose
+    deadline already expired (or provably cannot be met) is rejected
+    even when the cap would defer it — the old order left an expired
+    request parked at the queue head, silently re-deferred every tick.
+
+    ``membership`` (a :class:`repro.elastic.Membership`) makes the
+    estimate fault-aware: with ranks masked out, the compiled decode
+    collectives run on a degraded fabric, so the tick estimate inflates
+    by ``n_ranks / n_alive`` — deadlines that only fit a healthy fabric
+    reject at admission instead of timing out mid-decode.
     """
 
     # admit at most this many concurrently-prefilling slots (None = no cap)
     max_concurrent_prefills: Optional[int] = None
     # safety factor on the completion-time estimate (>1 rejects earlier)
     slack: float = 1.0
+    # elastic membership view; masked ranks inflate the tick estimate
+    membership: Optional[Any] = None
+
+    def _degrade_factor(self) -> float:
+        m = self.membership
+        if m is None:
+            return 1.0
+        n = getattr(m, "n_ranks", 0)
+        a = getattr(m, "n_alive", n)
+        if not n:
+            return 1.0
+        return float("inf") if a == 0 else n / a
 
     def decide(self, req: Request, engine: "ServeEngine",
                n_prefilling: int) -> str:
+        if req.deadline_s is not None:
+            waited = time.monotonic() - req.t_submit
+            if waited >= req.deadline_s:
+                return "reject"       # expired while queued/deferred
+            tick = engine.tick_time_estimate()
+            if tick is not None:
+                tick = tick * self._degrade_factor()
+                # in-batch prefill pays one tick per prompt token; a
+                # dedicated batched prefill pass can never beat its
+                # compiled program's analytic switch time, so the
+                # estimate is the max of the two
+                ttft = len(req.prompt) * tick
+                sc = engine.collectives
+                if sc is not None:
+                    ttft = max(ttft, sc.prefill_comm_time(
+                        engine.slots, max(len(req.prompt), 1)))
+                est = waited + ttft + req.max_new_tokens * tick
+                if est * self.slack > req.deadline_s:
+                    return "reject"
         if self.max_concurrent_prefills is not None \
                 and n_prefilling >= self.max_concurrent_prefills:
             return "defer"
-        if req.deadline_s is None:
-            return "admit"
-        tick = engine.tick_time_estimate()
-        if tick is None:
-            return "admit"            # nothing to estimate with yet
-        waited = time.monotonic() - req.t_submit
-        # in-batch prefill pays one tick per prompt token; a dedicated
-        # batched prefill pass can never beat its compiled program's
-        # analytic switch time, so the estimate is the max of the two
-        ttft = len(req.prompt) * tick
-        sc = engine.collectives
-        if sc is not None:
-            ttft = max(ttft, sc.prefill_comm_time(
-                engine.slots, max(len(req.prompt), 1)))
-        est = waited + ttft + req.max_new_tokens * tick
-        if est * self.slack > req.deadline_s:
-            return "reject"
         return "admit"
 
 

@@ -83,17 +83,23 @@ def test_pack_transient_halves_with_arena():
     assert no_arena == 2 * with_arena
 
 
-def test_pack_transient_sums_concurrent_same_wave_packs():
-    """Packs share wave 0 with no ordering edges between them (the
-    runtime issues them concurrently), so the peak transient is their
-    SUM, not the largest single bucket."""
+def test_pack_transient_tracks_pipelined_waves():
+    """The plan pipeliner staggers the same-axis bucket chains (their
+    rings would serialize anyway), so at most ONE pack is in flight per
+    wave and the peak transient is a single bucket, not the sum of all
+    four — the per-wave accounting must follow the waves, not the stage
+    count."""
     eng = make_engine("acis", bucket_bytes=8192)   # 4 buckets of 2 leaves
     c = _sync_program(eng, [1024] * 8, {"data": N}, N)
     n_packs = sum(1 for s in c.stages if s.arena_aval is not None)
     assert n_packs == 4
+    packs_per_wave = [
+        sum(1 for i in w if c.stages[i].arena_aval is not None)
+        for w in c.plan.waves]
+    assert max(packs_per_wave) == 1, packs_per_wave
     one_bucket = 2048 * 4                           # bytes
-    assert c.pack_transient_bytes(arenas=True) == n_packs * one_bucket
-    assert c.pack_transient_bytes(arenas=False) == 2 * n_packs * one_bucket
+    assert c.pack_transient_bytes(arenas=True) == one_bucket
+    assert c.pack_transient_bytes(arenas=False) == 2 * one_bucket
 
 
 def test_init_arenas_cached_no_realloc():

@@ -104,3 +104,52 @@ def test_engine_gradient_sync_backends_agree(mesh24, rng, backend):
 def test_engine_rejects_unknown_backend():
     with pytest.raises(ValueError):
         make_engine("nccl")
+
+
+# ---------------------------------------------------------------------------
+# bounded compile cache + deprecation of the eager masked path
+# ---------------------------------------------------------------------------
+
+def test_compile_cache_is_bounded_lru():
+    """A serving process streams an open-ended set of (shape, mesh) keys;
+    the cache must evict least-recently-used past the knob and count the
+    evictions so the leak stays observable."""
+    from repro.obs import metrics as obs
+
+    prev = topology.set_compile_cache_size(2)
+    saved = dict(topology._COMPILE_CACHE)
+    topology._COMPILE_CACHE.clear()
+    try:
+        with obs.recording() as rec:
+            topology._cache_put(("k", 1), "a")
+            topology._cache_put(("k", 2), "b")
+            assert topology._cache_get(("k", 1)) == "a"    # 1 becomes MRU
+            topology._cache_put(("k", 3), "c")             # evicts 2, not 1
+            assert topology._cache_get(("k", 2)) is None
+            assert topology._cache_get(("k", 1)) == "a"
+            assert len(topology._COMPILE_CACHE) == 2
+        assert rec.counter("topology.compile_cache_evicted") == 1
+
+        with obs.recording() as rec:
+            assert topology.set_compile_cache_size(1) == 2  # returns prev
+        assert len(topology._COMPILE_CACHE) == 1            # shrink evicts
+        assert rec.counter("topology.compile_cache_evicted") == 1
+    finally:
+        topology.set_compile_cache_size(prev)
+        topology._COMPILE_CACHE.clear()
+        topology._COMPILE_CACHE.update(saved)
+
+
+def test_masked_all_reduce_is_deprecated(mesh8):
+    """The eager helper survives as a wrapper, but points callers at the
+    compiled first-class op."""
+    x = jnp.ones((8, 4))
+    alive = jnp.ones((8,), bool)
+
+    def f(xl, al):
+        out, count = topology.masked_all_reduce(xl[0], al[0], "data")
+        return out[None], count.reshape(1)
+
+    with pytest.warns(DeprecationWarning, match="masked_reduce"):
+        smap(f, mesh8, (P("data", None), P("data")),
+             (P("data", None), P("data")))(x, jnp.asarray(alive))

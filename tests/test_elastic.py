@@ -1,0 +1,184 @@
+"""Elastic runtime: Membership, deadline-bounded sync, recompile reuse.
+
+The policy half of bounded staleness — who is alive (deadline verdicts
+over measured per-rank spans), the retry/backoff loop around the masked
+collective, and what a membership change means for the compiled
+artifacts: shape-preserving dropout reuses the cached program + arenas
+outright (the mask is a runtime input), a shape-moving delta compiles
+fresh.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import make_engine
+from repro.core.api import RecompileReport
+from repro.elastic import (ElasticSyncError, Membership, TopologyDelta,
+                           deadline_verdicts, sync_with_deadline)
+from repro.obs import metrics as obs
+
+
+# ---------------------------------------------------------------------------
+# Membership
+# ---------------------------------------------------------------------------
+
+def test_membership_views_and_updates():
+    m = Membership.all_alive(4)
+    assert m.n_ranks == 4 and m.n_alive == 4 and m.dead == ()
+    m2 = m.drop(1, 3)
+    assert m2.alive == (True, False, True, False)
+    assert m2.dead == (1, 3) and m2.n_alive == 2
+    assert m2.restore(3).alive == (True, False, True, True)
+    assert m.drop(0).merge(m.drop(2)).dead == (0, 2)
+    np.testing.assert_array_equal(
+        np.asarray(m2.mask_array()), np.array([1, 0, 1, 0], np.float32))
+
+
+def test_membership_validation():
+    with pytest.raises(ValueError):
+        Membership(())
+    with pytest.raises(ValueError):
+        Membership.all_alive(4).drop(4)
+    with pytest.raises(ValueError):
+        Membership.all_alive(4).merge(Membership.all_alive(3))
+
+
+def test_membership_from_rank_times():
+    m = Membership.from_rank_times([0.1, 0.9, 0.2, 0.3], deadline_s=0.5)
+    assert m.alive == (True, False, True, True)
+    # intersected verdicts: an already-dead rank stays dead even when its
+    # (stale) reported time looks fine
+    merged = deadline_verdicts([0.1, 0.1, 0.1, 0.1], 0.5,
+                               membership=m)
+    assert merged.alive == m.alive
+
+
+def test_delta_classifies_and_counts():
+    with obs.recording() as rec:
+        d = Membership.all_alive(4).delta(Membership.all_alive(4).drop(2))
+    assert d.dropped == (2,) and d.restored == ()
+    assert d.shape_preserving and bool(d)
+    assert rec.counter("elastic.rank_dropped") == 1
+
+    d2 = Membership.all_alive(4).drop(1).delta(Membership.all_alive(4))
+    assert d2.restored == (1,) and d2.shape_preserving
+
+    moving = Membership.all_alive(4).delta(Membership.all_alive(4),
+                                           axis_sizes={"data": 2})
+    assert not moving.shape_preserving
+    assert not bool(TopologyDelta())
+
+
+# ---------------------------------------------------------------------------
+# sync_with_deadline
+# ---------------------------------------------------------------------------
+
+def _runner(times_per_attempt):
+    """Fake sync: returns canned per-rank times, result = attempt no."""
+    calls = []
+
+    def run(membership, deadline):
+        calls.append((membership, deadline))
+        times = times_per_attempt[min(len(calls) - 1,
+                                      len(times_per_attempt) - 1)]
+        return len(calls), times
+    return run, calls
+
+
+def test_sync_clean_first_attempt():
+    run, calls = _runner([[0.1, 0.2, 0.1, 0.2]])
+    out = sync_with_deadline(run, Membership.all_alive(4), deadline_s=0.5)
+    assert out.result == 1 and out.attempts == 1 and out.masked == ()
+    assert out.membership.n_alive == 4
+    assert calls[0][1] == 0.5
+
+
+def test_sync_masks_late_rank_and_backs_off():
+    # rank 1 misses attempt 1; attempt 2 (without it) is clean
+    run, calls = _runner([[0.1, 9.0, 0.1, 0.1], [0.1, 9.0, 0.1, 0.1]])
+    with obs.recording() as rec:
+        out = sync_with_deadline(run, Membership.all_alive(4),
+                                 deadline_s=0.5, backoff=2.0)
+    assert out.attempts == 2 and out.masked == (1,)
+    assert out.membership.dead == (1,)
+    assert out.deadline_s == 1.0                 # backed off once
+    assert calls[1][0].dead == (1,)              # retried w/o the late rank
+    assert rec.counter("elastic.deadline_miss") == 1
+    assert rec.counter("elastic.retry") == 1
+
+
+def test_sync_result_never_mixes_attempts():
+    """The returned result is the clean attempt's, whole — late ranks'
+    partial data from earlier attempts is discarded with the attempt."""
+    run, _ = _runner([[9.0, 0.1], [0.1, 0.1]])
+    out = sync_with_deadline(run, Membership.all_alive(2), deadline_s=1.0)
+    assert out.result == 2                       # attempt 2's result
+
+
+def test_sync_exhausts_retries():
+    run, calls = _runner([[9.0, 0.1, 0.1]])      # rank 0 always late...
+    with pytest.raises(ElasticSyncError):
+        # ...then 1, then 2: every retry loses another "rank 0" of the
+        # shrunk view until retries run out
+        sync_with_deadline(_runner([[9.0, 9.0, 9.0]])[0],
+                           Membership.all_alive(3),
+                           deadline_s=0.5, max_retries=2)
+
+
+def test_sync_all_dead_raises():
+    run, _ = _runner([[9.0, 9.0]])
+    with pytest.raises(ElasticSyncError, match="deadline"):
+        sync_with_deadline(run, Membership.all_alive(2), deadline_s=0.5)
+    with pytest.raises(ElasticSyncError, match="no alive"):
+        sync_with_deadline(run, Membership.all_alive(2).drop(0, 1),
+                           deadline_s=0.5)
+
+
+# ---------------------------------------------------------------------------
+# engine.recompile
+# ---------------------------------------------------------------------------
+
+def _grads():
+    return {"w": jnp.zeros((96,), jnp.float32),
+            "b": jnp.zeros((7,), jnp.float32)}
+
+
+def test_recompile_shape_preserving_reuses_everything():
+    eng = make_engine("acis_hierarchical", inner_axis="data",
+                      outer_axis="pod")
+    sizes = {"data": 4, "pod": 2}
+    gl = _grads()
+    eng.init_arenas(gl, axis_sizes=sizes, masked=True)   # warm caches
+    mem = Membership.all_alive(8)
+    for r in (1, 5):
+        rep = eng.recompile(mem.delta(mem.drop(r)), gl, axis_sizes=sizes)
+        assert isinstance(rep, RecompileReport)
+        assert rep.programs_reused == 1 and rep.programs_rebuilt == 0
+        assert rep.arenas_rebuilt == 0
+        assert rep.shape_preserving and not rep.full_recompile
+        assert rep.reuse_frac == 1.0
+
+
+def test_recompile_shape_moving_compiles_fresh():
+    eng = make_engine("acis", inner_axis="data")
+    gl = _grads()
+    eng.init_arenas(gl, axis_sizes={"data": 4}, masked=True)
+    rep = eng.recompile(TopologyDelta(axis_sizes=(("data", 8),)), gl,
+                        axis_sizes={"data": 4})
+    assert not rep.shape_preserving
+    assert rep.full_recompile and rep.programs_rebuilt == 1
+
+
+def test_recompile_emits_counters():
+    eng = make_engine("acis", inner_axis="data")
+    gl = _grads()
+    eng.init_arenas(gl, axis_sizes={"data": 8}, masked=True)
+    mem = Membership.all_alive(8)
+    with obs.recording() as rec:
+        eng.recompile(mem.delta(mem.drop(3)), gl, axis_sizes={"data": 8})
+    assert rec.counter("recompile.programs_reused") == 1
+    assert rec.counter("recompile.programs_rebuilt") == 0
+    events = [f for n, f in rec.events if n == "engine.recompile"]
+    assert events and events[0]["shape_preserving"]

@@ -1,0 +1,174 @@
+"""Failure injection in the simulator + drift-watchdog attribution.
+
+SwitchSim's :class:`FaultPlan` injects endpoint-dead ranks, stragglers
+and ×k degraded links without changing any buffer shape — a masked
+program keeps producing correct live-rank numerics while the timing
+report degrades linearly, never a cliff.  The drift watchdog then reads
+those reports and attributes the divergence: a sick rank or degraded
+link is flagged *locally* (mask it / degrade the tier) and must NOT
+trigger a model refit.
+"""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.cgra.simulate import FaultPlan, SwitchSim
+from repro.core import make_engine, tracing
+from repro.obs import metrics as obs
+from repro.obs.drift import DriftWatchdog
+
+AV = jax.ShapeDtypeStruct
+
+N = 16
+
+
+@pytest.fixture(scope="module")
+def masked16():
+    eng = make_engine("acis", inner_axis="data")
+
+    def prog(x, alive):
+        return tracing.masked_reduce(x, alive, axis="auto")
+
+    return eng.compile(prog, axis_size=N,
+                       in_avals=(AV((1 << 12,), jnp.float32),
+                                 AV((), jnp.float32)))
+
+
+@pytest.fixture(scope="module")
+def x16():
+    return np.random.default_rng(0).standard_normal(
+        (N, 1 << 12)).astype(np.float32)
+
+
+def _run(compiled, x, dead=(), timeout=0.0, **faults):
+    alive = np.ones((N,), np.float32)
+    alive[list(dead)] = 0.0
+    plan = FaultPlan(dead=frozenset(dead), detect_timeout_s=timeout,
+                     **faults)
+    sim = SwitchSim(compiled.topology,
+                    faults=plan if plan else None)
+    return sim.run(compiled, x, alive)
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan validation
+# ---------------------------------------------------------------------------
+
+def test_fault_plan_validation(masked16):
+    with pytest.raises(ValueError, match="k must be"):
+        FaultPlan(degraded_links=(("data", 0.5),))
+    with pytest.raises(ValueError, match="out of range"):
+        SwitchSim(masked16.topology,
+                  faults=FaultPlan(dead=frozenset({N})))
+    with pytest.raises(ValueError, match="unknown axis"):
+        SwitchSim(masked16.topology,
+                  faults=FaultPlan(degraded_links=(("ether", 2.0),)))
+    assert not FaultPlan()          # empty plan is falsy (no-fault path)
+
+
+# ---------------------------------------------------------------------------
+# dead ranks: numerics stay correct, timing degrades linearly
+# ---------------------------------------------------------------------------
+
+def test_dead_ranks_keep_live_numerics_and_degrade_linearly(masked16, x16):
+    (_, _), rep0 = _run(masked16, x16)
+    t0 = rep0.t_end
+    timeout = 0.25 * t0
+    ts = []
+    for k in (0, 1, 2, 4):
+        dead = tuple(range(k))
+        (v, cnt), rep = _run(masked16, x16, dead=dead, timeout=timeout)
+        live = np.ones(N, bool)
+        live[list(dead)] = False
+        np.testing.assert_allclose(np.asarray(v)[N - 1],
+                                   x16[live].mean(0), atol=1e-5)
+        assert np.asarray(cnt)[N - 1] == N - k
+        assert len(rep.rank_t_end) == N
+        ts.append(rep.t_end)
+    for a, b in zip(ts, ts[1:]):
+        assert b >= a * 0.999, (ts,)          # monotone in failures
+        assert b <= 2.0 * a, ("cliff", ts)    # linear-ish, never a cliff
+
+
+def test_dead_ranks_counter(masked16, x16):
+    with obs.recording() as rec:
+        _run(masked16, x16, dead=(2, 9), timeout=1e-6)
+    assert rec.counter("sim.dead_ranks") == 2
+
+
+def test_straggler_and_degraded_link_slow_the_run(masked16, x16):
+    (_, _), rep0 = _run(masked16, x16)
+    t0 = rep0.t_end
+    _, rs = _run(masked16, x16, straggler_s=((3, t0),))
+    assert rs.t_end > t0
+    assert rs.rank_t_end[3] >= max(                 # the straggler is last
+        t for r, t in enumerate(rs.rank_t_end) if r != 3)
+    _, rd = _run(masked16, x16, degraded_links=(("data", 2.0),))
+    assert rd.t_end > t0
+
+
+# ---------------------------------------------------------------------------
+# drift watchdog attribution over fault reports
+# ---------------------------------------------------------------------------
+
+def _hier_sync():
+    eng = make_engine("acis_hierarchical", inner_axis="data",
+                      outer_axis="pod")
+
+    def prog(x):
+        return tracing.reduce(x, axis="auto")
+
+    compiled = eng.compile(prog, axis_size={"data": 4, "pod": 2},
+                           in_avals=(AV((1 << 12,), jnp.float32),))
+    grid = SwitchSim(compiled.topology).grid        # e.g. (4, 2)
+    x = np.arange(8 * (1 << 12), dtype=np.float32).reshape(
+        grid + (1 << 12,))
+    return compiled, x
+
+
+def test_drift_quiet_on_faithful_replay():
+    compiled, x = _hier_sync()
+    wd = DriftWatchdog()
+    sim = SwitchSim(compiled.topology)
+    for _ in range(2):
+        _, rep = sim.run(compiled, x)
+        wd.observe_report(rep)
+    assert not wd.alerts() and not wd.rank_alerts()
+    assert wd.classify().verdict == "quiet"
+    assert not wd.refit_recommended()
+
+
+def test_drift_attributes_dead_rank_locally(masked16, x16):
+    """A dead rank must read as *that rank is sick* — mask it — not as a
+    stale network model begging for a refit."""
+    wd = DriftWatchdog()
+    for _ in range(2):
+        _, rep = _run(masked16, x16, dead=(5,), timeout=1e-5)
+        wd.observe_report(rep)
+    verdict = wd.classify()
+    assert verdict.verdict == "rank" and 5 in verdict.ranks
+    assert verdict.local
+    with obs.recording() as rec:
+        assert not wd.refit_recommended()
+    assert rec.counter("drift.rank_local") >= 1
+
+
+def test_drift_attributes_degraded_link_locally():
+    """A ×4 link on one tier drifts that axis's stage pools while the
+    other tier stays quiet → link verdict, no refit."""
+    compiled, x = _hier_sync()
+    wd = DriftWatchdog()
+    sim = SwitchSim(compiled.topology,
+                    faults=FaultPlan(degraded_links=(("data", 4.0),)))
+    for _ in range(2):
+        _, rep = sim.run(compiled, x)
+        wd.observe_report(rep)
+    verdict = wd.classify()
+    assert verdict.verdict == "link", verdict
+    assert "data" in verdict.axes and "pod" not in verdict.axes
+    with obs.recording() as rec:
+        assert not wd.refit_recommended()
+    assert rec.counter("drift.link_local") >= 1

@@ -1,0 +1,300 @@
+"""First-class bounded-staleness reduce: ``tracing.masked_reduce``.
+
+The mask is a *runtime* program input: ranks with ``alive == 0``
+contribute the monoid identity and the live count travels in the same
+flat ring buffer as the payload — one collective launch.  Covers the
+trace/legalize expansion (stage shapes on the flat and hierarchical
+pipelines), Coalesce bucketing (many masked leaves still cost one
+ring), CGRA placement of the pack/renorm epilogues, the analytic
+overhead gate, numerics against a shard_map oracle on every engine
+backend (error-feedback residuals included), and the plan pipelining
+that hides the masked epilogues under neighboring bucket rings.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.core import make_engine, tracing
+from repro.core.types import ADD, MAX
+
+AV = jax.ShapeDtypeStruct
+
+BACKENDS = ["acis", "acis_compressed", "acis_hierarchical",
+            "acis_hierarchical_compressed"]
+
+
+@pytest.fixture(scope="module")
+def mesh22():
+    return jax.make_mesh((2, 2), ("pod", "data"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+def smap(fn, mesh, in_specs, out_specs):
+    return jax.jit(jax.shard_map(fn, mesh=mesh, in_specs=in_specs,
+                                 out_specs=out_specs, check_vma=False))
+
+
+def _compile_masked(n=8, size=64, monoid=ADD, renormalize=True,
+                    backend="acis", outer_axis=None, axis_sizes=None):
+    kw = {"inner_axis": "data"}
+    if outer_axis:
+        kw["outer_axis"] = outer_axis
+    eng = make_engine(backend, **kw)
+
+    def prog(x, alive):
+        return tracing.masked_reduce(x, alive, monoid,
+                                     axis="auto", renormalize=renormalize)
+
+    return eng.compile(prog, axis_size=axis_sizes or n,
+                       in_avals=(AV((size,), jnp.float32),
+                                 AV((), jnp.float32)))
+
+
+# ---------------------------------------------------------------------------
+# numerics
+# ---------------------------------------------------------------------------
+
+def test_masked_mean_matches_oracle(mesh8, rng):
+    x = rng.standard_normal((8, 64)).astype(np.float32)
+    alive = np.array([1, 0, 1, 1, 1, 0, 1, 1], np.float32)
+    compiled = _compile_masked()
+
+    def f(xl, al):
+        v, c = compiled(xl[0], al[0].reshape(()))
+        return v[None], c.reshape(1)
+
+    v, c = smap(f, mesh8, (P("data", None), P("data")),
+                (P("data", None), P("data")))(
+        jnp.asarray(x), jnp.asarray(alive))
+    want = x[alive != 0].mean(axis=0)
+    np.testing.assert_allclose(np.asarray(v)[0], want, atol=1e-5)
+    assert np.all(np.asarray(c) == 6.0)
+
+
+def test_masked_max_uses_monoid_identity(mesh8, rng):
+    """Dead ranks contribute the monoid identity (-inf for max), not
+    zero — a dead rank holding the global max must not leak it."""
+    x = rng.standard_normal((8, 16)).astype(np.float32)
+    x[3] += 100.0                                  # rank 3 holds the max
+    alive = np.ones(8, np.float32)
+    alive[3] = 0.0
+    compiled = _compile_masked(monoid=MAX, renormalize=False)
+
+    def f(xl, al):
+        v, c = compiled(xl[0], al[0].reshape(()))
+        return v[None], c.reshape(1)
+
+    v, c = smap(f, mesh8, (P("data", None), P("data")),
+                (P("data", None), P("data")))(
+        jnp.asarray(x), jnp.asarray(alive))
+    want = x[alive != 0].max(axis=0)
+    np.testing.assert_allclose(np.asarray(v)[0], want, atol=1e-6)
+    # the count lane rides the same ring, so it folds under the same
+    # monoid: for max it is any-alive (1.0), not a sum
+    assert np.all(np.asarray(c) == 1.0)
+
+
+def test_all_dead_clamps_count(mesh8):
+    x = jnp.ones((8, 8))
+    compiled = _compile_masked(size=8)
+
+    def f(xl, al):
+        v, c = compiled(xl[0], al[0].reshape(()))
+        return v[None], c.reshape(1)
+
+    v, c = smap(f, mesh8, (P("data", None), P("data")),
+                (P("data", None), P("data")))(
+        x, jnp.zeros((8,), jnp.float32))
+    assert np.all(np.isfinite(np.asarray(v)))      # no div-by-zero NaN
+    assert np.all(np.asarray(c) == 1.0)            # clamped, never 0
+
+
+def test_renormalize_requires_add():
+    with pytest.raises(ValueError, match="renormaliz"):
+        _compile_masked(monoid=MAX, renormalize=True)
+
+
+# ---------------------------------------------------------------------------
+# compiled shape: one ring, count lane folded into the payload buffer
+# ---------------------------------------------------------------------------
+
+def test_flat_masked_is_one_ring():
+    compiled = _compile_masked()
+    kinds = [s.kind for s in compiled.stages]
+    assert kinds.count("allreduce") == 1, kinds
+    assert kinds == ["map", "allreduce", "map", "map"]
+
+
+def test_hierarchical_masked_is_one_pipeline():
+    compiled = _compile_masked(backend="acis_hierarchical",
+                               outer_axis="pod",
+                               axis_sizes={"data": 4, "pod": 2})
+    kinds = [s.kind for s in compiled.stages]
+    colls = [k for k in kinds
+             if k in ("reduce_scatter", "allreduce", "allgather")]
+    assert colls == ["reduce_scatter", "allreduce", "allgather"], kinds
+
+
+def test_bucketed_masked_leaves_share_one_ring():
+    """Coalesce folds many masked leaves + the count into ONE flat
+    buffer — bounded staleness must not cost a ring per leaf."""
+    eng = make_engine("acis", inner_axis="data")
+
+    def prog(a, b, c, alive):
+        va, _ = tracing.masked_reduce(a, alive, axis="auto")
+        vb, _ = tracing.masked_reduce(b, alive, axis="auto")
+        vc, _ = tracing.masked_reduce(c, alive, axis="auto")
+        return va, vb, vc
+
+    compiled = eng.compile(
+        prog, axis_size=8,
+        in_avals=(AV((32,), jnp.float32), AV((48,), jnp.float32),
+                  AV((16,), jnp.float32), AV((), jnp.float32)))
+    kinds = [s.kind for s in compiled.stages]
+    assert kinds.count("allreduce") == 1, kinds
+
+
+def test_masked_epilogues_place_on_cgra():
+    """The pack and renorm epilogues must stay on the switch: an int
+    index like ``b[-1]`` lowers to a gather the CGRA cannot place and
+    silently detours megabytes over PCIe."""
+    from repro.cgra.device import HostFallback
+
+    for backend, kw in (("acis", {}),
+                        ("acis_hierarchical",
+                         {"outer_axis": "pod",
+                          "axis_sizes": {"data": 4, "pod": 2}})):
+        compiled = _compile_masked(backend=backend, size=4096, **kw)
+        fellback = [getattr(s.placement, "reason", "")
+                    for s in compiled.stages
+                    if isinstance(s.placement, HostFallback)]
+        assert not fellback, (backend, fellback)
+
+
+# ---------------------------------------------------------------------------
+# analytic overhead + plan pipelining
+# ---------------------------------------------------------------------------
+
+def _sync_programs(masked: bool):
+    eng = make_engine("acis", inner_axis="data")
+    gl = {"w": jnp.zeros((4096,), jnp.float32),
+          "b": jnp.zeros((128,), jnp.float32)}
+    treedef = jax.tree_util.tree_structure(gl)
+    avals = tuple(AV(l.shape, l.dtype)
+                  for l in jax.tree_util.tree_leaves(gl))
+    return eng._sync_program(treedef, avals, None,
+                             axis_sizes={"data": 8}, masked=masked)
+
+
+def test_masked_sync_overhead_gate():
+    """At zero faults the masked sync prices within 5% of the unmasked
+    one — the count lane plus a hidden epilogue, not a second launch."""
+    t_plain = _sync_programs(masked=False).program_time()
+    t_masked = _sync_programs(masked=True).program_time()
+    assert t_masked <= 1.05 * t_plain, (t_masked, t_plain)
+
+
+def test_plan_staggers_same_axis_rings():
+    """Symmetric masked bucket chains pipeline: no wave holds two
+    collectives on the same (sole) axis, and every non-final renorm/pack
+    map shares a wave with a collective it hides under."""
+    eng = make_engine("acis", inner_axis="data")
+
+    def prog(a, b, alive):
+        va, _ = tracing.masked_reduce(a, alive, axis="auto")
+        vb, _ = tracing.masked_reduce(b, alive, axis="auto")
+        return va, vb
+
+    # two leaves far above bucket_bytes => two bucket chains
+    compiled = eng.compile(
+        prog, axis_size=8,
+        in_avals=(AV((1 << 18,), jnp.float32), AV((1 << 17,), jnp.float32),
+                  AV((), jnp.float32)))
+    plan = compiled.plan
+    for wave in plan.waves:
+        axes = [plan.stages[i].axis for i in wave if plan.stages[i].axis]
+        assert len(axes) == len(set(axes)), plan.waves
+
+
+def test_pipeline_levels_keep_cross_axis_waves():
+    """Collectives on *different* axes in one wave are the overlap the
+    tier model rewards — the stagger must not split them."""
+    from repro import core as acis
+
+    eng = make_engine("acis", inner_axis="data", outer_axis="pod")
+
+    def prog(x, y):
+        return (acis.reduce(x, axis="data"), acis.reduce(y, axis="pod"))
+
+    compiled = eng.compile(prog,
+                           in_avals=(AV((256,), jnp.float32),
+                                     AV((256,), jnp.float32)),
+                           axis_size={"data": 4, "pod": 2})
+    plan = compiled.plan
+    coll_waves = [w for w in plan.waves
+                  if sum(1 for i in w if plan.stages[i].axis) == 2]
+    assert coll_waves, plan.waves   # both rings share one wave
+
+
+# ---------------------------------------------------------------------------
+# gradient_sync(membership=...) across every backend
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ["xla"] + BACKENDS)
+def test_gradient_sync_membership_all_backends(mesh22, rng, backend):
+    from repro.elastic import Membership
+
+    g = {"w": rng.standard_normal((4, 33)).astype(np.float32),
+         "b": rng.standard_normal((4, 5)).astype(np.float32)}
+    mem = Membership((True, False, True, True))    # rank (pod0, data1) dead
+    alive = np.array(mem.alive)
+    eng = make_engine(backend, inner_axis="data", outer_axis="pod")
+
+    def f(wl, bl):
+        grads = {"w": wl[0, 0], "b": bl[0, 0]}
+        state = eng.init_state(grads)
+        synced, _ = eng.gradient_sync(grads, state, membership=mem)
+        return synced["w"][None, None], synced["b"][None, None]
+
+    spec = P("pod", "data", None)
+    w, b = smap(f, mesh22, (spec, spec), (spec, spec))(
+        jnp.asarray(g["w"].reshape(2, 2, 33)),
+        jnp.asarray(g["b"].reshape(2, 2, 5)))
+    atol = 5e-2 if "compressed" in backend else 1e-4
+    np.testing.assert_allclose(np.asarray(w)[0, 0], g["w"][alive].mean(0),
+                               atol=atol)
+    np.testing.assert_allclose(np.asarray(b)[1, 1], g["b"][alive].mean(0),
+                               atol=atol)
+
+
+def test_gradient_sync_membership_is_runtime_input(mesh22, rng):
+    """Flipping the mask must not retrace: the same compiled sync serves
+    every membership (the mask rides in as a program input)."""
+    from repro.elastic import Membership
+    from repro.obs import metrics as obs
+
+    g = {"w": rng.standard_normal((4, 12)).astype(np.float32)}
+    eng = make_engine("acis", inner_axis="data", outer_axis="pod")
+
+    def run(mem):
+        def f(wl):
+            grads = {"w": wl[0, 0]}
+            state = eng.init_state(grads)
+            synced, _ = eng.gradient_sync(grads, state, membership=mem)
+            return synced["w"][None, None]
+        spec = P("pod", "data", None)
+        return smap(f, mesh22, spec, spec)(
+            jnp.asarray(g["w"].reshape(2, 2, 12)))
+
+    run(Membership.all_alive(4))                   # warm the cache
+    with obs.recording() as rec:
+        for dead in (0, 1, 3):
+            out = run(Membership.all_alive(4).drop(dead))
+            alive = np.ones(4, bool)
+            alive[dead] = False
+            np.testing.assert_allclose(np.asarray(out)[0, 0],
+                                       g["w"][alive].mean(0), atol=1e-4)
+    assert rec.counter("compile.cache_miss") == 0

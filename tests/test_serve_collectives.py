@@ -7,6 +7,8 @@ SwitchProgramCache across engine replicas, SLO-aware admission, and the
 deque/batched-reset engine mechanics.
 """
 
+import time
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -307,3 +309,70 @@ def test_rejects_xla_backend(dense):
     cfg, _, _, _ = dense
     with pytest.raises(ValueError, match="acis"):
         ServeCollectives(cfg, 2, config=CollectiveConfig(backend="xla"))
+
+
+def test_slo_expired_deadline_rejects_even_under_prefill_cap():
+    """Pre-PR ordering left an expired request parked at the queue head,
+    re-deferred every tick by the prefill cap; the deadline check now
+    runs first."""
+    class StubEngine:
+        slots = 2
+        collectives = None
+
+        def tick_time_estimate(self):
+            return None
+
+    pol = SLOPolicy(max_concurrent_prefills=1)
+    expired = Request(rid=0, prompt=np.arange(4, dtype=np.int32),
+                      max_new_tokens=4, deadline_s=0.5,
+                      t_submit=time.monotonic() - 1.0)    # waited 1s > 0.5s
+    assert pol.decide(expired, StubEngine(), n_prefilling=1) == "reject"
+    # without a deadline the cap still defers
+    fresh = Request(rid=1, prompt=np.arange(4, dtype=np.int32),
+                    max_new_tokens=4, t_submit=time.monotonic())
+    assert pol.decide(fresh, StubEngine(), n_prefilling=1) == "defer"
+
+
+def test_slo_membership_inflates_estimate():
+    """Masked ranks degrade the fabric: the same deadline that admits on
+    a healthy membership rejects once enough ranks are dead."""
+    from repro.elastic import Membership
+
+    class StubEngine:
+        slots = 2
+        collectives = None
+
+        def tick_time_estimate(self):
+            return 1e-3
+
+    req = Request(rid=0, prompt=np.arange(10, dtype=np.int32),
+                  max_new_tokens=10, deadline_s=0.04,
+                  t_submit=time.monotonic())
+    healthy = SLOPolicy(membership=Membership.all_alive(4))
+    assert healthy.decide(req, StubEngine(), 0) == "admit"   # est ~0.02s
+    degraded = SLOPolicy(membership=Membership.all_alive(4).drop(1, 2, 3))
+    assert degraded.decide(req, StubEngine(), 0) == "reject"  # est ~0.08s
+
+
+def test_slo_dead_fabric_rejects_deadlines_end_to_end(dense):
+    """All ranks masked => infinite tick estimate: deadline-carrying
+    requests reject at admission instead of hanging mid-decode, while
+    best-effort traffic still completes."""
+    from repro.elastic import Membership
+
+    cfg, model, params, _ = dense
+    rec = obs.Recorder()
+    eng = ServeEngine(model, params, slots=2, max_seq=64, recorder=rec,
+                      admission=SLOPolicy(
+                          membership=Membership.all_alive(2).drop(0, 1)))
+    eng.submit(Request(rid=0, prompt=np.arange(3, dtype=np.int32),
+                       max_new_tokens=2))
+    eng.run_to_completion()                     # warm the tick estimate
+    eng.submit(Request(rid=1, prompt=np.arange(4, dtype=np.int32),
+                       max_new_tokens=2, deadline_s=60.0))
+    eng.submit(Request(rid=2, prompt=np.arange(3, dtype=np.int32),
+                       max_new_tokens=2))       # best-effort: unaffected
+    done = eng.run_to_completion()
+    assert [r.rid for r in eng.rejected] == [1]
+    assert sorted(c.rid for c in done) == [0, 2]
+    assert rec.counter("serve.slo_rejected") == 1
